@@ -1,0 +1,50 @@
+"""Shared helpers for the benchmark harness.
+
+Every benchmark prints CSV rows ``name,value,unit,derived`` so
+``python -m benchmarks.run`` can both execute a single paper artefact and
+aggregate the whole table set into ``bench_output.txt``.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from dataclasses import dataclass
+
+
+@dataclass
+class Row:
+    name: str
+    value: float
+    unit: str = ""
+    derived: str = ""
+
+    def csv(self) -> str:
+        v = f"{self.value:.6g}" if isinstance(self.value, float) else str(self.value)
+        return f"{self.name},{v},{self.unit},{self.derived}"
+
+
+def emit(rows: list[Row]) -> None:
+    for r in rows:
+        print(r.csv(), flush=True)
+
+
+@contextlib.contextmanager
+def stopwatch():
+    box = {}
+    t0 = time.perf_counter()
+    yield box
+    box["s"] = time.perf_counter() - t0
+
+
+def make_dist1_env(seed: int = 0):
+    from repro.data.workloads import PoissonWorkload
+    from repro.engine import SimCluster
+
+    return SimCluster(PoissonWorkload(10_000, 0.5), seed=seed)
+
+
+def make_dist2_env(seed: int = 0):
+    from repro.data.workloads import PoissonWorkload
+    from repro.engine import SimCluster
+
+    return SimCluster(PoissonWorkload(100_000, 5.0), seed=seed)

@@ -1,0 +1,85 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp fast path vs oracle.
+
+On this CPU container the Pallas bodies execute in interpret mode, so the
+numbers are CORRECTNESS + relative-cost references, not TPU wall-clock; the
+TPU roofline for these ops comes from the dry-run (§Roofline).
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("REPRO_PALLAS_INTERPRET", "1")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, emit
+
+
+def _timed(fn, *args, iters: int = 3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    import time
+
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6  # us
+
+
+def run() -> list[Row]:
+    from repro.kernels import ops, ref
+    from repro.models.layers import attention_core, wkv6_chunked
+
+    rows = []
+    rng = np.random.default_rng(0)
+    B, S, Hq, Hkv, hd = 1, 256, 4, 2, 64
+    q = jnp.asarray(rng.normal(0, 1, (B, S, Hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, hd)), jnp.float32)
+
+    o_pallas = ops.flash_attention(q, k, v, causal=True)
+    o_ref = ref.attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                              v.transpose(0, 2, 1, 3), causal=True).transpose(0, 2, 1, 3)
+    err = float(jnp.max(jnp.abs(o_pallas - o_ref)))
+    rows.append(Row("kernel.flash_attention.max_err", err, "", "vs oracle"))
+    rows.append(Row("kernel.flash_attention.pallas_interp",
+                    _timed(lambda: ops.flash_attention(q, k, v, causal=True)), "us"))
+    rows.append(Row("kernel.flash_attention.jnp_chunked",
+                    _timed(lambda: attention_core(q, k, v, causal=True, chunk=128)),
+                    "us"))
+
+    H = 4
+    r = jnp.asarray(rng.normal(0, 1, (B, S, H, hd)), jnp.float32)
+    kk = jnp.asarray(rng.normal(0, 1, (B, S, H, hd)), jnp.float32)
+    vv = jnp.asarray(rng.normal(0, 1, (B, S, H, hd)), jnp.float32)
+    logw = jnp.asarray(-np.exp(rng.normal(-2, 0.4, (B, S, H, hd))), jnp.float32)
+    u = jnp.asarray(rng.normal(0, 1, (H, hd)), jnp.float32)
+    o_k, s_k = ops.rwkv6_wkv(r, kk, vv, logw, u)
+    o_r, s_r = ref.rwkv6_wkv_ref(*(a.transpose(0, 2, 1, 3) for a in (r, kk, vv, logw)), u)
+    err = float(jnp.max(jnp.abs(o_k - o_r.transpose(0, 2, 1, 3))))
+    rows.append(Row("kernel.rwkv6_wkv.max_err", err, "", "vs oracle"))
+    rows.append(Row("kernel.rwkv6_wkv.pallas_interp",
+                    _timed(lambda: ops.rwkv6_wkv(r, kk, vv, logw, u)[0]), "us"))
+    rows.append(Row("kernel.rwkv6_wkv.jnp_chunked",
+                    _timed(lambda: wkv6_chunked(r, kk, vv, logw, u)[0]), "us"))
+
+    nh, ns = 4, 16
+    x = jnp.asarray(rng.normal(0, 1, (B, nh, S, hd)), jnp.float32)
+    bm = jnp.asarray(rng.normal(0, 1, (B, S, ns)), jnp.float32)
+    cm = jnp.asarray(rng.normal(0, 1, (B, S, ns)), jnp.float32)
+    loga = jnp.asarray(-np.exp(rng.normal(-2, 0.3, (B, nh, S))), jnp.float32)
+    o_s = ops.mamba2_ssd(x, bm, cm, loga)
+    o_sr = ref.mamba2_ssd_ref(x, bm, cm, loga)
+    rows.append(Row("kernel.mamba2_ssd.max_err",
+                    float(jnp.max(jnp.abs(o_s - o_sr))), "", "vs oracle"))
+    rows.append(Row("kernel.mamba2_ssd.pallas_interp",
+                    _timed(lambda: ops.mamba2_ssd(x, bm, cm, loga)), "us"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,33 @@
+"""§2.3 — Lasso-path lever ranking quality + cost (paper: 30 min / 20 GB)."""
+from __future__ import annotations
+
+from benchmarks.common import Row, emit, make_dist1_env, stopwatch
+
+
+def run(n_windows: int = 1200, seed: int = 1) -> list[Row]:
+    from repro.core import AutoTuner
+    from repro.engine import EFFECTIVE
+
+    env = make_dist1_env(seed)
+    tuner = AutoTuner(env, seed=seed, window_s=240.0, top_levers=10)
+    tuner.collect(n_windows)
+    with stopwatch() as t:
+        tuner.analyse()
+    ranked = tuner.ranked_levers
+    hits = [l for l in ranked if l in EFFECTIVE]
+    rows = [
+        Row("lasso.n_samples", n_windows, "windows"),
+        Row("lasso.n_levers", len(env.lever_specs), "levers"),
+        Row("lasso.top_k", len(ranked), "levers", ";".join(ranked)),
+        Row("lasso.effective_hits", len(hits), "levers",
+            f"of {len(EFFECTIVE)} ground-truth effective; " + ";".join(hits)),
+        Row("lasso.top1_is_effective", int(ranked[0] in EFFECTIVE), "bool",
+            ranked[0]),
+        Row("lasso.invocation_time", t["s"], "s",
+            "paper: ~1800 s and 20 GB per invocation on 100k configs"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

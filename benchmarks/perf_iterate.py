@@ -1,0 +1,92 @@
+"""§Perf hillclimb driver: recompile one (arch × shape) cell under candidate
+changes and report the roofline-term deltas.
+
+    PYTHONPATH=src python -m benchmarks.perf_iterate --arch qwen2_7b \
+        --shape train_4k --variant baseline --variant attn_chunk=4096 \
+        --variant remat=none --variant accum=4
+
+Variants: ``baseline``, ``key=value`` config overrides (attn_chunk, remat,
+dtype, attn_impl, moe_capacity_factor, scan_layers), or the step-level knobs
+``accum=N`` and ``ep`` (expert parallel). Results append to
+``experiments/perf/<arch>__<shape>.jsonl`` so EXPERIMENTS.md §Perf can cite
+the full hypothesis -> change -> before/after log.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+
+def _parse_variant(v: str) -> tuple[str, dict, dict]:
+    """-> (label, cfg_overrides, step_kw). Comma-combined: 'a=1,no_fsdp'."""
+    over: dict = {}
+    kw: dict = {}
+    for part in v.split(","):
+        if part == "baseline":
+            continue
+        if part == "ep":
+            kw["ep"] = True
+            continue
+        if part == "no_fsdp":
+            kw["fsdp"] = False
+            continue
+        key, _, val = part.partition("=")
+        for cast in (int, float):
+            try:
+                val_c = cast(val)
+                break
+            except ValueError:
+                val_c = val
+        if key == "accum":
+            kw["accum"] = int(val)
+        elif key == "scan_layers":
+            over[key] = val in ("1", "true", "True")
+        else:
+            over[key] = val_c
+    return v, over, kw
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", action="append", default=[])
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args(argv)
+
+    from repro.launch.dryrun import run_cell
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    log = out / f"{args.arch}__{args.shape}.jsonl"
+    variants = args.variant or ["baseline"]
+    for v in variants:
+        label, over, kw = _parse_variant(v)
+        t0 = time.time()
+        try:
+            rec = run_cell(args.arch, args.shape, False, out, save=False,
+                           overrides=over or None, **kw)
+            rec["variant"] = label
+            rec["wall_s"] = round(time.time() - t0, 1)
+            print(f"[{label}] t_comp {rec['t_compute_s']*1e3:.1f}ms  "
+                  f"t_mem {rec['t_memory_s']*1e3:.1f}ms  "
+                  f"t_coll {rec['t_collective_s']*1e3:.1f}ms  "
+                  f"dom={rec['dominant']}  useful={rec['useful_ratio']:.2f}  "
+                  f"peak_dev={rec['bytes_per_device']['peak']/2**30:.1f}GiB",
+                  flush=True)
+        except Exception as e:
+            rec = {"variant": label, "status": "fail", "error": f"{type(e).__name__}: {e}"}
+            print(f"[{label}] FAIL {rec['error']}", flush=True)
+        with log.open("a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""§Roofline — aggregate the dry-run artefacts into the per-cell table.
+
+Reads ``experiments/dryrun/*.json`` written by ``repro.launch.dryrun`` and
+prints, per (arch × shape × mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, and the step-time bound. Run the dry-run
+first:  PYTHONPATH=src python -m repro.launch.dryrun
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import Row, emit
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def load_records(d: Path = DRYRUN_DIR) -> list[dict]:
+    recs = []
+    for p in sorted(d.glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def run() -> list[Row]:
+    recs = load_records()
+    rows = []
+    if not recs:
+        rows.append(Row("roofline.missing", 0, "",
+                        "run `python -m repro.launch.dryrun` first"))
+        return rows
+    ok = [r for r in recs if r.get("status") == "ok"]
+    for r in ok:
+        tag = f"{r['arch']}.{r['shape']}.{r['mesh']}"
+        peak = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        rows.append(Row(f"roofline.{tag}.t_compute", r["t_compute_s"] * 1e3, "ms"))
+        rows.append(Row(f"roofline.{tag}.t_memory", r["t_memory_s"] * 1e3, "ms"))
+        rows.append(Row(f"roofline.{tag}.t_collective", r["t_collective_s"] * 1e3,
+                        "ms"))
+        rows.append(Row(f"roofline.{tag}.dominant", 0, "", r["dominant"]))
+        rows.append(Row(f"roofline.{tag}.useful_ratio", r["useful_ratio"], "",
+                        "MODEL_FLOPS / HLO_FLOPS"))
+        rows.append(Row(f"roofline.{tag}.roofline_frac",
+                        r["t_compute_s"] / peak if peak else 0.0, "",
+                        "compute term / dominant term (1.0 = compute-bound)"))
+    rows.append(Row("roofline.cells_ok", len(ok), "cells"))
+    rows.append(Row("roofline.cells_skipped",
+                    sum(1 for r in recs if r.get("status") == "skip"), "cells",
+                    "long_500k on full-attention archs per assignment"))
+    return rows
+
+
+def markdown() -> str:
+    """§Roofline markdown table for EXPERIMENTS.md."""
+    recs = load_records()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    lines = [
+        "| arch | shape | mesh | t_comp ms | t_mem ms | t_coll ms | dominant "
+        "| useful | peak GiB/dev |",
+        "|---|---|---|---:|---:|---:|---|---:|---:|",
+    ]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']*1e3:.2f} | {r['t_memory_s']*1e3:.2f} "
+            f"| {r['t_collective_s']*1e3:.2f} | {r['dominant']} "
+            f"| {r['useful_ratio']:.2f} "
+            f"| {r['bytes_per_device']['peak']/2**30:.2f} |")
+    skips = [r for r in recs if r.get("status") == "skip"]
+    for r in sorted(skips, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — "
+                     f"| skip | — | — |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--markdown" in sys.argv:
+        print(markdown())
+    else:
+        emit(run())

@@ -1,0 +1,51 @@
+"""Run every paper-artefact benchmark and print one aggregated CSV.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run fig5 fig7  # subset
+
+Budget note: the full set is sized for a single-core CPU container
+(~15-25 min). Individual benchmarks accept bigger budgets when run directly.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks.common import Row, emit
+
+BENCHES = [
+    ("fig2", "benchmarks.fig2_metric_clusters"),
+    ("lasso", "benchmarks.lasso_rank"),
+    ("fig5", "benchmarks.fig5_training_curve"),
+    ("fig6", "benchmarks.fig6_breakdown"),
+    ("fig7", "benchmarks.fig7_batch_cdf"),
+    ("fig8", "benchmarks.fig8_adaptation"),
+    ("table1", "benchmarks.table1_exploration"),
+    ("fig9", "benchmarks.fig9_vs_humans"),
+    ("kernels", "benchmarks.kernel_micro"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main(argv=None) -> int:
+    sel = set((argv if argv is not None else sys.argv[1:]) or [n for n, _ in BENCHES])
+    print("name,value,unit,derived")
+    failures = 0
+    for name, mod_name in BENCHES:
+        if name not in sel:
+            continue
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            emit(mod.run())
+            emit([Row(f"{name}.bench_wall", time.perf_counter() - t0, "s")])
+        except Exception as e:  # pragma: no cover - harness robustness
+            failures += 1
+            traceback.print_exc()
+            emit([Row(f"{name}.FAILED", 1, "", f"{type(e).__name__}: {e}")])
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

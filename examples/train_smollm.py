@@ -1,0 +1,21 @@
+"""Train a reduced smollm-135m for a few hundred steps with fault tolerance.
+
+    PYTHONPATH=src python examples/train_smollm.py
+
+Exercises the training substrate end-to-end on CPU: the jitted train step
+(same builder the 512-chip dry-run compiles), AdamW, atomic async
+checkpoints, an injected mid-run failure with automatic restore, and
+straggler detection. Delete ``experiments/example_ckpt`` to start fresh.
+"""
+from repro.launch import train
+
+train.main([
+    "--arch", "smollm_135m",
+    "--steps", "300",
+    "--batch", "8",
+    "--seq", "128",
+    "--ckpt-every", "50",
+    "--ckpt-dir", "experiments/example_ckpt",
+    "--inject-failure", "120",
+    "--log-every", "25",
+])

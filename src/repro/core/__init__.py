@@ -1,0 +1,47 @@
+"""The paper's primary contribution: the RL auto-tuning pipeline.
+
+§2.2 metric selection  -> repro.core.metrics_selection
+§2.3 lever ranking     -> repro.core.lasso
+§2.4.1 discretisation  -> repro.core.discretize
+§2.4.2/§3 configurator -> repro.core.policy + repro.core.configurator
+end-to-end             -> repro.core.tuner.AutoTuner
+"""
+from repro.core.configurator import Configurator, TuningEnv, reward_from_latency
+from repro.core.discretize import DynamicBins, LeverDiscretiser, LeverSpec
+from repro.core.heatmap import HeatmapEncoder, HeatmapSpec
+from repro.core.lasso import lasso_path, lasso_solve, rank_levers
+from repro.core.metrics_selection import (
+    SelectionResult,
+    factor_analysis,
+    kmeans,
+    select_metrics,
+    select_metrics_split,
+    spline_repair,
+    variance_filter,
+)
+from repro.core.policy import ReinforceAgent, Trajectory
+from repro.core.tuner import AutoTuner
+
+__all__ = [
+    "AutoTuner",
+    "Configurator",
+    "DynamicBins",
+    "HeatmapEncoder",
+    "HeatmapSpec",
+    "LeverDiscretiser",
+    "LeverSpec",
+    "ReinforceAgent",
+    "SelectionResult",
+    "Trajectory",
+    "TuningEnv",
+    "factor_analysis",
+    "kmeans",
+    "lasso_path",
+    "lasso_solve",
+    "rank_levers",
+    "reward_from_latency",
+    "select_metrics",
+    "select_metrics_split",
+    "spline_repair",
+    "variance_filter",
+]

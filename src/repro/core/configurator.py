@@ -1,0 +1,194 @@
+"""RL configuration feedback loop (paper Fig 3 bottom, §3, §4.2).
+
+``TuningEnv`` is the protocol both environments implement (the analytic
+``SimCluster`` and the real ``LocalEngine``; DESIGN.md §2). The configurator
+drives the paper's episode loop against it:
+
+  observe heat-maps -> pick (lever, direction) -> discretise -> apply config
+  -> buffer events during loading -> wait for stabilisation -> measure
+  latency -> reward -> (end of episode) REINFORCE update.
+
+The per-phase wall-clock (generation / loading / stabilisation / reward) is
+recorded for the Fig 6 execution-breakdown reproduction.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional, Protocol, Sequence
+
+import numpy as np
+
+from repro.core.discretize import LeverDiscretiser, LeverSpec
+from repro.core.heatmap import HeatmapEncoder, HeatmapSpec
+from repro.core.policy import ReinforceAgent, Trajectory
+
+
+class MetricsWindow(Protocol):
+    per_node: dict[str, np.ndarray]   # metric -> (n_nodes,) window average
+    latencies_ms: np.ndarray          # per-event end-to-end latency sample
+    p99_ms: float
+    clock_s: float                    # environment clock (simulated or real)
+
+
+class TuningEnv(Protocol):
+    """Implemented by repro.engine.simcluster.SimCluster and
+    repro.engine.local.LocalEngine."""
+
+    lever_specs: Sequence[LeverSpec]
+    metric_names: Sequence[str]
+    n_nodes: int
+
+    def reset(self) -> None: ...
+    def current_config(self) -> dict: ...
+    def apply_config(self, config: dict) -> dict:
+        """Install a config. Returns {'load_s': float, 'rebooted': bool}."""
+    def observe(self, window_s: float) -> MetricsWindow:
+        """Advance the environment by window_s and return the window metrics."""
+    def stabilisation_time(self) -> float:
+        """Seconds until latency variance trend flattens (paper: <3 min p99)."""
+
+
+@dataclass
+class StepRecord:
+    lever: str
+    direction: int
+    config: dict
+    reward: float
+    p99_ms: float
+    clock_s: float
+    phases: dict  # generation/loading/stabilisation/update seconds
+
+
+@dataclass
+class EpisodeResult:
+    steps: list[StepRecord]
+    mean_return: float
+
+
+def reward_from_latency(latencies_ms: np.ndarray, mode: str = "neg_mean") -> float:
+    """Paper's delay-dependent reward. The text writes sum(-1/T_e) but states
+    the cumulative reward equals negative summed latency (gamma=1); we default
+    to -mean(T) and keep the literal form as an option (DESIGN.md §1)."""
+    lat = np.asarray(latencies_ms, float)
+    lat = lat[np.isfinite(lat) & (lat > 0)]
+    if lat.size == 0:
+        return -1e4  # failed window: strongly negative
+    if mode == "neg_mean":
+        return float(-lat.mean() / 1000.0)
+    if mode == "neg_sum":
+        return float(-lat.sum() / 1000.0)
+    if mode == "neg_inv":  # the literal Σ -1/T form from the paper text
+        return float(np.sum(-1.0 / np.maximum(lat, 1e-3)))
+    raise ValueError(mode)
+
+
+class Configurator:
+    """Paper §3: runs tuning phases made of episodes of N configuration steps."""
+
+    def __init__(
+        self,
+        env: TuningEnv,
+        selected_metrics: Sequence[str],
+        ranked_levers: Sequence[str],
+        *,
+        f_exploit: float = 0.8,
+        gamma: float = 1.0,
+        lr: float = 1e-3,
+        steps_per_episode: int = 10,
+        episodes_per_update: int = 4,
+        window_s: float = 120.0,
+        reward_mode: str = "neg_mean",
+        seed: int = 0,
+        bin_kw: Optional[dict] = None,
+    ):
+        self.env = env
+        self.levers = [l for l in ranked_levers if l in {s.name for s in env.lever_specs}]
+        assert self.levers, "no ranked lever matches the environment's lever set"
+        self.disc = LeverDiscretiser(list(env.lever_specs), seed=seed,
+                                     **(bin_kw or {}))
+        self.hspec = HeatmapSpec(list(selected_metrics), list(self.levers),
+                                 env.n_nodes)
+        self.encoder = HeatmapEncoder(self.hspec)
+        self.agent = ReinforceAgent(
+            self.hspec.state_dim, self.levers, f_exploit=f_exploit, gamma=gamma,
+            lr=lr, seed=seed)
+        self.steps_per_episode = steps_per_episode
+        self.episodes_per_update = episodes_per_update
+        self.window_s = window_s
+        self.reward_mode = reward_mode
+        self.history: list[StepRecord] = []
+        self._last_window: Optional[MetricsWindow] = None
+
+    # -- state encoding -------------------------------------------------------
+    def _lever_fracs(self, config: dict) -> dict[str, float]:
+        out = {}
+        for name in self.levers:
+            spec = self.disc.specs[name]
+            if spec.kind == "choice":
+                out[name] = spec.choices.index(config[name]) / max(len(spec.choices) - 1, 1)
+            elif spec.kind == "bool":
+                out[name] = float(bool(config[name]))
+            else:
+                dyn = self.disc.bins[name]
+                out[name] = dyn.bin_of(float(config[name])) / max(dyn.n_bins - 1, 1)
+        return out
+
+    def _encode(self, window: MetricsWindow, config: dict) -> np.ndarray:
+        return self.encoder.encode(window.per_node, self._lever_fracs(config))
+
+    # -- the loop ---------------------------------------------------------------
+    def run_episode(self, *, explore: bool = True) -> tuple[Trajectory, list[StepRecord]]:
+        traj = Trajectory()
+        records: list[StepRecord] = []
+        config = self.env.current_config()
+        window = self._last_window or self.env.observe(self.window_s)
+        for _ in range(self.steps_per_episode):
+            state = self._encode(window, config)
+            t0 = time.perf_counter()
+            a = self.agent.act(state, explore=explore)
+            lever, direction = self.agent.action_decode(a)
+            gen_s = time.perf_counter() - t0
+
+            new_config = self.disc.apply(config, lever, direction)
+            report = self.env.apply_config(new_config)
+            stab_s = self.env.stabilisation_time()
+            if stab_s > 0:
+                self.env.observe(stab_s)  # paper §4.2: wait for stabilisation,
+                #                           reward measured on the window AFTER it
+            window = self.env.observe(self.window_s)
+            reward = reward_from_latency(window.latencies_ms, self.reward_mode)
+
+            traj.add(state, a, reward)
+            records.append(StepRecord(
+                lever=lever, direction=direction, config=dict(new_config),
+                reward=reward, p99_ms=window.p99_ms, clock_s=window.clock_s,
+                phases={"generation_s": gen_s, "loading_s": report["load_s"],
+                        "stabilisation_s": stab_s, "update_s": 0.0},
+            ))
+            config = new_config
+        self._last_window = window
+        return traj, records
+
+    def run_update(self) -> dict:
+        """One Algorithm-1 outer iteration: N episodes then a policy update."""
+        trajs, all_records = [], []
+        for _ in range(self.episodes_per_update):
+            t, r = self.run_episode()
+            trajs.append(t)
+            all_records.extend(r)
+        t0 = time.perf_counter()
+        stats = self.agent.update(trajs)
+        upd_s = time.perf_counter() - t0
+        if all_records:
+            all_records[-1].phases["update_s"] = upd_s
+        self.history.extend(all_records)
+        stats["p99_ms"] = all_records[-1].p99_ms if all_records else float("nan")
+        return stats
+
+    def tune(self, n_updates: int, *, callback=None) -> list[StepRecord]:
+        for i in range(n_updates):
+            stats = self.run_update()
+            if callback:
+                callback(i, stats, self.history)
+        return self.history

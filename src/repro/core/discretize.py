@@ -1,0 +1,244 @@
+"""Dynamic lever discretisation (paper §2.4.1, after [55]).
+
+Each continuous lever is binned over [min, max] with an initial bin size
+delta = |max - min| / 10 (10 bins). The binning then adapts to how the RL
+configurator uses it:
+
+* **extend**: if the configurator assigns the TOP bin `extend_after` times,
+  a new bin is appended (new_max = max + delta). Symmetric for the bottom bin.
+* **split**: if the SAME bin is assigned `split_after` times, the bin size is
+  halved globally (10 -> 20 bins the first time, as the paper describes).
+* **merge**: adjacent bins that have both stayed unused for `merge_after`
+  assignments (across the lever) are merged ([55]'s merge rule).
+* **ridge jitter**: the emitted value is the bin centre plus a small ridge
+  term (uniform in +-ridge_frac * bin width) — 'helpful for noisy cloud
+  environments'; the value is clamped to the bin.
+
+Integer and categorical levers pass through with rounding / identity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+@dataclass
+class LeverSpec:
+    """Static description of one configuration lever."""
+
+    name: str
+    kind: str = "float"          # float | int | log | choice | bool
+    lo: float = 0.0
+    hi: float = 1.0
+    choices: tuple = ()          # for kind == "choice"
+    default: Optional[float] = None
+    reboot: bool = False         # applying it requires an engine restart
+    group: str = "misc"          # ingest | sched | memory | parallel | kernel
+                                 # | precision | collective | misc
+    # hard validity range (paper §2.1: 'lists of valid values or ranges were
+    # generated ... based on the configuration of the underlying VMs').
+    # Dynamic bin extension never crosses these. None -> 4x the initial span.
+    hard_lo: Optional[float] = None
+    hard_hi: Optional[float] = None
+
+    def resolved_hard(self) -> tuple[float, float]:
+        if self.kind == "log":
+            lo = self.hard_lo if self.hard_lo is not None else self.lo / 4.0
+            hi = self.hard_hi if self.hard_hi is not None else self.hi * 4.0
+        else:
+            span = self.hi - self.lo
+            lo = self.hard_lo if self.hard_lo is not None else self.lo - 2 * span
+            hi = self.hard_hi if self.hard_hi is not None else self.hi + 2 * span
+            if self.hard_lo is None and self.lo >= 0:
+                lo = max(lo, 0.0)  # physical quantities don't go negative
+        return float(lo), float(hi)
+
+    def default_value(self):
+        if self.kind == "choice":
+            return self.choices[0] if self.default is None else self.default
+        if self.kind == "bool":
+            return bool(self.default) if self.default is not None else False
+        d = self.default if self.default is not None else (self.lo + self.hi) / 2
+        return int(round(d)) if self.kind == "int" else float(d)
+
+
+class DynamicBins:
+    """Adaptive binning state for one continuous lever."""
+
+    def __init__(self, spec: LeverSpec, *, n_bins: int = 10,
+                 split_after: int = 5, extend_after: int = 3,
+                 merge_after: int = 40, ridge_frac: float = 0.1,
+                 seed: int = 0):
+        assert spec.kind in ("float", "int", "log")
+        self.spec = spec
+        self.lo = float(spec.lo)
+        self.hi = float(spec.hi)
+        if spec.kind == "log":
+            assert self.lo > 0, f"log lever {spec.name} needs lo > 0"
+        self.split_after = split_after
+        self.extend_after = extend_after
+        self.merge_after = merge_after
+        self.ridge_frac = ridge_frac
+        self._rng = np.random.default_rng(seed)
+        self._edges = self._linspace(n_bins)
+        self._hits = np.zeros(n_bins, np.int64)
+        self._since_used = np.zeros(n_bins, np.int64)
+        self._top_streak = 0
+        self._bot_streak = 0
+        self._same_streak = 0
+        self._last_bin = -1
+
+    # -- representation helpers -------------------------------------------
+    def _tolin(self, x: float) -> float:
+        return np.log(x) if self.spec.kind == "log" else x
+
+    def _fromlin(self, x: float) -> float:
+        return float(np.exp(x)) if self.spec.kind == "log" else float(x)
+
+    def _linspace(self, n: int) -> np.ndarray:
+        return np.linspace(self._tolin(self.lo), self._tolin(self.hi), n + 1)
+
+    @property
+    def n_bins(self) -> int:
+        return len(self._edges) - 1
+
+    @property
+    def delta(self) -> float:
+        return float(self._edges[1] - self._edges[0])
+
+    # -- queries ------------------------------------------------------------
+    def bin_of(self, value: float) -> int:
+        v = self._tolin(np.clip(value, self._fromlin(self._edges[0]),
+                                self._fromlin(self._edges[-1])))
+        return int(np.clip(np.searchsorted(self._edges, v, "right") - 1,
+                           0, self.n_bins - 1))
+
+    def centre(self, b: int) -> float:
+        mid = 0.5 * (self._edges[b] + self._edges[b + 1])
+        return self._fromlin(mid)
+
+    def value(self, b: int, *, jitter: bool = True) -> float:
+        """Bin centre + ridge jitter, clamped to the bin; int levers round."""
+        b = int(np.clip(b, 0, self.n_bins - 1))
+        lo_e, hi_e = self._edges[b], self._edges[b + 1]
+        mid = 0.5 * (lo_e + hi_e)
+        if jitter and self.ridge_frac:
+            mid = mid + self._rng.uniform(-1, 1) * self.ridge_frac * (hi_e - lo_e)
+            mid = float(np.clip(mid, lo_e, hi_e))
+        v = self._fromlin(mid)
+        if self.spec.kind == "int":
+            v = int(round(v))
+        return v
+
+    # -- adaptation ----------------------------------------------------------
+    def record(self, b: int) -> None:
+        """Account one assignment of bin b and adapt (paper's three rules)."""
+        b = int(np.clip(b, 0, self.n_bins - 1))
+        self._hits[b] += 1
+        self._since_used += 1
+        self._since_used[b] = 0
+
+        self._top_streak = self._top_streak + 1 if b == self.n_bins - 1 else 0
+        self._bot_streak = self._bot_streak + 1 if b == 0 else 0
+        self._same_streak = self._same_streak + 1 if b == self._last_bin else 1
+        self._last_bin = b
+
+        hard_lo, hard_hi = self.spec.resolved_hard()
+        if (self._top_streak >= self.extend_after
+                and self._fromlin(self._edges[-1] + self.delta) <= hard_hi):
+            self._extend(top=True)
+            self._top_streak = 0
+        elif (self._bot_streak >= self.extend_after
+              and self._fromlin(self._edges[0] - self.delta) >= hard_lo):
+            self._extend(top=False)
+            self._bot_streak = 0
+        if self._same_streak >= self.split_after:
+            self._split()
+            self._same_streak = 0
+        self._maybe_merge()
+
+    def _extend(self, top: bool) -> None:
+        d = self.delta
+        if top:
+            self._edges = np.append(self._edges, self._edges[-1] + d)
+            self._hits = np.append(self._hits, 0)
+            self._since_used = np.append(self._since_used, 0)
+        else:
+            self._edges = np.insert(self._edges, 0, self._edges[0] - d)
+            self._hits = np.insert(self._hits, 0, 0)
+            self._since_used = np.insert(self._since_used, 0, 0)
+            self._last_bin += 1
+
+    def _split(self) -> None:
+        """Halve the bin size: each bin becomes two (10 -> 20 the first time)."""
+        mids = 0.5 * (self._edges[:-1] + self._edges[1:])
+        self._edges = np.sort(np.concatenate([self._edges, mids]))
+        self._hits = np.repeat(self._hits // 2, 2)
+        self._since_used = np.repeat(self._since_used, 2)
+        self._last_bin = min(2 * self._last_bin + 1, self.n_bins - 1)
+
+    def _maybe_merge(self) -> None:
+        """Merge the first adjacent pair that has been idle long enough."""
+        if self.n_bins <= 4:
+            return
+        idle = self._since_used >= self.merge_after
+        for i in range(self.n_bins - 1):
+            if idle[i] and idle[i + 1]:
+                self._edges = np.delete(self._edges, i + 1)
+                self._hits[i] += self._hits[i + 1]
+                self._hits = np.delete(self._hits, i + 1)
+                self._since_used[i] = 0
+                self._since_used = np.delete(self._since_used, i + 1)
+                if self._last_bin > i:
+                    self._last_bin -= 1
+                return
+
+
+class LeverDiscretiser:
+    """Discretisation front-end over a full lever set.
+
+    Maps (lever, direction) actions to concrete values: continuous levers move
+    one bin up/down through their DynamicBins; choice/bool levers step through
+    their category list.
+    """
+
+    def __init__(self, specs: Sequence[LeverSpec], *, seed: int = 0, **bin_kw):
+        self.specs = {s.name: s for s in specs}
+        self.bins: dict[str, DynamicBins] = {}
+        for i, s in enumerate(specs):
+            if s.kind in ("float", "int", "log"):
+                self.bins[s.name] = DynamicBins(s, seed=seed + i, **bin_kw)
+
+    def default_config(self) -> dict:
+        return {n: s.default_value() for n, s in self.specs.items()}
+
+    def n_choices(self, name: str) -> int:
+        s = self.specs[name]
+        if s.kind == "choice":
+            return len(s.choices)
+        if s.kind == "bool":
+            return 2
+        return self.bins[name].n_bins
+
+    def apply(self, config: dict, name: str, direction: int,
+              *, jitter: bool = True) -> dict:
+        """Move lever `name` one step (direction ±1). Returns a new config."""
+        s = self.specs[name]
+        new = dict(config)
+        if s.kind == "bool":
+            new[name] = not bool(config[name])
+            return new
+        if s.kind == "choice":
+            i = s.choices.index(config[name])
+            new[name] = s.choices[(i + direction) % len(s.choices)]
+            return new
+        dyn = self.bins[name]
+        b = dyn.bin_of(float(config[name]))
+        b2 = int(np.clip(b + direction, 0, dyn.n_bins - 1))
+        dyn.record(b2)
+        b2 = min(b2, dyn.n_bins - 1)  # bins may have split/merged in record()
+        new[name] = dyn.value(b2, jitter=jitter)
+        return new

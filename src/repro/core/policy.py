@@ -1,0 +1,182 @@
+"""REINFORCE policy-gradient configurator (paper §2.4.2, §3, Algorithm 1).
+
+* Policy network: MLP with ONE fully-connected hidden layer of 20 neurons
+  (paper §3) over the flattened heat-map state; softmax over actions.
+* Actions: (lever, direction) pairs restricted to the Lasso-selected levers —
+  2 actions per lever (increase / decrease its discretised value).
+* Exploitation factor f: with probability f the action is restricted to the
+  TOP-ranKED lever (its two directions re-normalised); with 1-f the policy's
+  full distribution is sampled (paper §2.4.2 last para / §4.5).
+* Training: adapted REINFORCE with a per-step baseline averaged across the
+  N episodes of the batch (Algorithm 1), gamma defaults to 1 so the return
+  equals (negative) summed latency; optimiser rmsprop(lr=1e-3) (paper §3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import rmsprop
+
+PyTree = Any
+
+
+def init_policy(state_dim: int, n_actions: int, key: jax.Array,
+                hidden: int = 20) -> PyTree:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (state_dim, hidden)) / np.sqrt(state_dim),
+        "b1": jnp.zeros((hidden,)),
+        "w2": jax.random.normal(k2, (hidden, n_actions)) / np.sqrt(hidden),
+        "b2": jnp.zeros((n_actions,)),
+    }
+
+
+@jax.jit
+def policy_logits(params: PyTree, state: jnp.ndarray) -> jnp.ndarray:
+    h = jnp.tanh(state @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+@jax.jit
+def policy_probs(params: PyTree, state: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.softmax(policy_logits(params, state))
+
+
+@jax.jit
+def _batch_pg_loss(params: PyTree, states: jnp.ndarray, actions: jnp.ndarray,
+                   advantages: jnp.ndarray, mask: jnp.ndarray,
+                   entropy_beta: jnp.ndarray) -> jnp.ndarray:
+    """-(1/N) sum_t log pi(a_t|s_t) * adv_t over a padded (N, T) batch,
+    minus a small entropy bonus (premature-collapse guard)."""
+    logits = jax.vmap(jax.vmap(lambda s: policy_logits(params, s)))(states)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    chosen = jnp.take_along_axis(logp, actions[..., None], axis=-1)[..., 0]
+    pg = -(chosen * advantages * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    ent = -(jnp.exp(logp) * logp).sum(-1)
+    ent = (ent * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return pg - entropy_beta * ent
+
+
+@dataclass
+class Trajectory:
+    states: list = field(default_factory=list)
+    actions: list = field(default_factory=list)
+    rewards: list = field(default_factory=list)
+
+    def add(self, s, a, r) -> None:
+        self.states.append(np.asarray(s, np.float32))
+        self.actions.append(int(a))
+        self.rewards.append(float(r))
+
+    def __len__(self) -> int:
+        return len(self.actions)
+
+
+def discounted_returns(rewards: Sequence[float], gamma: float) -> np.ndarray:
+    out = np.zeros(len(rewards), np.float32)
+    acc = 0.0
+    for t in range(len(rewards) - 1, -1, -1):
+        acc = rewards[t] + gamma * acc
+        out[t] = acc
+    return out
+
+
+class ReinforceAgent:
+    """The paper's configurator: acts on a state, learns from episode batches."""
+
+    def __init__(
+        self,
+        state_dim: int,
+        lever_names: Sequence[str],
+        *,
+        f_exploit: float = 0.8,
+        gamma: float = 1.0,
+        lr: float = 1e-3,
+        hidden: int = 20,
+        seed: int = 0,
+        entropy_beta: float = 0.01,
+        f_warmup_updates: int = 2,
+    ):
+        self.lever_names = list(lever_names)  # Lasso order: [0] = top lever
+        self.n_actions = 2 * len(self.lever_names)
+        self.state_dim = state_dim
+        self.f = f_exploit
+        self.gamma = gamma
+        self.entropy_beta = entropy_beta
+        self.f_warmup_updates = f_warmup_updates
+        self.n_updates = 0
+        self._rng = np.random.default_rng(seed)
+        self.params = init_policy(state_dim, self.n_actions,
+                                  jax.random.PRNGKey(seed), hidden)
+        self.opt = rmsprop(lr=lr)
+        self.opt_state = self.opt.init(self.params)
+        self._grad = jax.jit(jax.grad(_batch_pg_loss))
+
+    # -- acting --------------------------------------------------------------
+    def action_decode(self, a: int) -> tuple[str, int]:
+        """action id -> (lever name, direction ±1)."""
+        lever = self.lever_names[a // 2]
+        direction = 1 if a % 2 == 0 else -1
+        return lever, direction
+
+    def act(self, state: np.ndarray, *, explore: bool = True) -> int:
+        """Paper §2.4.2: 'the most relevant levers are preferentially used
+        (the top lever is used f% of the time), but the other levers will
+        also be used occasionally (1-f)'. Exploitation confines the action to
+        the TOP-RANKED lever's two directions, renormalising the policy over
+        them — the direction stays stochastic, so every step carries a
+        learning signal; with 1-f the full softmax is sampled."""
+        probs = np.asarray(policy_probs(self.params, jnp.asarray(state, jnp.float32)))
+        probs = probs / probs.sum()
+        exploit_ready = self.n_updates >= self.f_warmup_updates
+        if explore and exploit_ready and self._rng.uniform() < self.f:
+            sub = probs[:2] + 1e-9  # actions 0/1 = top lever's +/- directions
+            return int(self._rng.choice(2, p=sub / sub.sum()))
+        return int(self._rng.choice(self.n_actions, p=probs))
+
+    # -- learning (Algorithm 1) -----------------------------------------------
+    def update(self, episodes: Sequence[Trajectory]) -> dict:
+        """One REINFORCE batch update from N episodes; per-step baseline is the
+        across-episode mean return at that step (Algorithm 1)."""
+        eps = [e for e in episodes if len(e)]
+        if not eps:
+            return {"pg_loss": 0.0, "mean_return": 0.0}
+        N = len(eps)
+        T = max(len(e) for e in eps)
+        states = np.zeros((N, T, self.state_dim), np.float32)
+        actions = np.zeros((N, T), np.int32)
+        returns = np.zeros((N, T), np.float32)
+        mask = np.zeros((N, T), np.float32)
+        for i, e in enumerate(eps):
+            L = len(e)
+            states[i, :L] = np.stack(e.states)
+            actions[i, :L] = e.actions
+            returns[i, :L] = discounted_returns(e.rewards, self.gamma)
+            mask[i, :L] = 1.0
+        # baseline b_t = mean over episodes of v_t at the same step
+        denom = np.maximum(mask.sum(axis=0), 1.0)
+        baseline = (returns * mask).sum(axis=0) / denom
+        adv = (returns - baseline[None, :]) * mask
+        # scale-normalise advantages, but floor the divisor at a fraction of
+        # the reward magnitude: when rewards plateau (std -> 0) a bare /std
+        # would amplify pure noise into full-strength updates.
+        std = adv[mask > 0].std()
+        scale = max(std, 0.05 * abs(float(np.mean(returns[mask > 0]))), 1e-8)
+        adv = adv / scale
+
+        beta = jnp.asarray(self.entropy_beta, jnp.float32)
+        grads = self._grad(self.params, jnp.asarray(states), jnp.asarray(actions),
+                           jnp.asarray(adv), jnp.asarray(mask), beta)
+        self.params, self.opt_state = self.opt.update(grads, self.opt_state, self.params)
+        self.n_updates += 1
+        mean_ret = float((returns[:, 0] * mask[:, 0]).sum() / max(mask[:, 0].sum(), 1))
+        loss = float(_batch_pg_loss(self.params, jnp.asarray(states),
+                                    jnp.asarray(actions), jnp.asarray(adv),
+                                    jnp.asarray(mask), beta))
+        return {"pg_loss": loss, "mean_return": mean_ret, "episodes": N, "steps": int(mask.sum())}

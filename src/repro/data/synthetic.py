@@ -1,0 +1,54 @@
+"""Synthetic LM batches + ShapeDtypeStruct specs (shared by tests & dry-run).
+
+``make_batch`` returns real arrays (CPU tests / LocalEngine);
+``batch_spec`` returns jax.ShapeDtypeStruct stand-ins (dry-run lowering, no
+allocation). Both agree on structure per architecture family:
+
+* all archs:  tokens (B,S) int32, labels (B,S) int32, mask (B,S) f32
+* vlm:        + patch_embeds (B, vision_tokens, d_model)
+* audio:      + frames (B, encoder_seq, d_model)   (stub frontend)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def _act_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    vocab = cfg.vocab_true or cfg.vocab_size
+    out = {
+        "tokens": jnp.asarray(rng.integers(0, vocab, (batch, seq)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, vocab, (batch, seq)), jnp.int32),
+        "mask": jnp.ones((batch, seq), jnp.float32),
+    }
+    if cfg.family == "vlm":
+        out["patch_embeds"] = jnp.asarray(
+            rng.normal(0, 1, (batch, cfg.vision_tokens, cfg.d_model)), _act_dtype(cfg)
+        )
+    if cfg.family == "audio":
+        out["frames"] = jnp.asarray(
+            rng.normal(0, 1, (batch, cfg.encoder_seq, cfg.d_model)), _act_dtype(cfg)
+        )
+    return out
+
+
+def batch_spec(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    sds = jax.ShapeDtypeStruct
+    out = {
+        "tokens": sds((batch, seq), jnp.int32),
+        "labels": sds((batch, seq), jnp.int32),
+        "mask": sds((batch, seq), jnp.float32),
+    }
+    if cfg.family == "vlm":
+        out["patch_embeds"] = sds((batch, cfg.vision_tokens, cfg.d_model), _act_dtype(cfg))
+    if cfg.family == "audio":
+        out["frames"] = sds((batch, cfg.encoder_seq, cfg.d_model), _act_dtype(cfg))
+    return out

@@ -1,0 +1,176 @@
+"""Streaming workload generators (paper §2.1, §4.4).
+
+Event arrival processes:
+
+* ``PoissonWorkload``     — Poisson(λ) arrivals; event sizes ~ Gaussian(mean, sd)
+                            (paper §4.4: λ1=10k ev/s @0.5 MB, λ2=100k ev/s @5 MB).
+* ``TrapezoidWorkload``   — ramp-up / plateau / ramp-down (classic trapezoidal).
+* ``YahooAdsWorkload``    — Yahoo streaming-benchmark-like ad events [11]:
+                            campaign-keyed small JSON events, diurnal modulation,
+                            ~17k ev/s at the paper's 26-node setting.
+* ``IoTWorkload``         — consumer-IoT-like trace: many tiny heartbeats +
+                            bursty firmware/telemetry fan-ins (lognormal bursts).
+* ``SwitchingWorkload``   — alternates between two workloads every
+                            ``period_s`` (paper §4.5 rate-switch experiments).
+
+All generators are deterministic given (seed, window index) so SimCluster
+re-runs are reproducible; they expose ``rate(t)`` (ev/s) and ``mean_size(t)``
+(MB) — the queueing model consumes those — plus ``sample_events`` for the
+real LocalEngine, which needs concrete arrival timestamps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Iterator, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass
+class Event:
+    arrival_s: float
+    size_mb: float
+    key: int = 0           # e.g. ad-campaign id / device id
+    tokens: int = 32       # LM-engine cost proxy for the event payload
+
+
+class Workload:
+    name = "base"
+
+    def rate(self, t: float) -> float:  # events / second
+        raise NotImplementedError
+
+    def mean_size(self, t: float) -> float:  # MB
+        return 0.5
+
+    def sample_events(self, t0: float, t1: float, rng: np.random.Generator,
+                      max_events: int = 200_000) -> list[Event]:
+        """Thinned Poisson sampling over [t0, t1) at the (possibly varying) rate."""
+        lam_max = max(self.rate(t) for t in np.linspace(t0, t1, 16)) + 1e-9
+        n = int(min(rng.poisson(lam_max * (t1 - t0)), max_events))
+        ts = np.sort(rng.uniform(t0, t1, n))
+        keep = rng.uniform(0, 1, n) < np.array([self.rate(t) for t in ts]) / lam_max
+        ts = ts[keep]
+        sizes = np.maximum(rng.normal(
+            [self.mean_size(t) for t in ts],
+            0.3 * np.array([self.mean_size(t) for t in ts])), 0.01)
+        return [Event(float(t), float(s), key=int(k), tokens=max(8, int(s * 64)))
+                for t, s, k in zip(ts, sizes, rng.integers(0, 1000, len(ts)))]
+
+
+@dataclass
+class PoissonWorkload(Workload):
+    lam: float = 10_000.0         # events / s
+    event_size_mb: float = 0.5    # Gaussian mean (sd = 0.3·mean, paper §4.4)
+    name: str = "poisson"
+
+    def rate(self, t: float) -> float:
+        return self.lam
+
+    def mean_size(self, t: float) -> float:
+        return self.event_size_mb
+
+
+@dataclass
+class TrapezoidWorkload(Workload):
+    peak: float = 50_000.0
+    ramp_s: float = 600.0
+    plateau_s: float = 1800.0
+    base: float = 2_000.0
+    event_size_mb: float = 0.5
+    name: str = "trapezoid"
+
+    def rate(self, t: float) -> float:
+        period = 2 * self.ramp_s + self.plateau_s
+        u = t % period
+        if u < self.ramp_s:
+            return self.base + (self.peak - self.base) * u / self.ramp_s
+        if u < self.ramp_s + self.plateau_s:
+            return self.peak
+        return self.peak - (self.peak - self.base) * (u - self.ramp_s - self.plateau_s) / self.ramp_s
+
+    def mean_size(self, t: float) -> float:
+        return self.event_size_mb
+
+
+@dataclass
+class YahooAdsWorkload(Workload):
+    """Ad-analytics pipeline events (view/click/purchase), diurnal modulation."""
+
+    base_rate: float = 17_000.0
+    diurnal_amp: float = 0.3
+    day_s: float = 3600.0          # compressed 'day' for simulation
+    event_size_mb: float = 0.001   # small JSON events
+    n_campaigns: int = 100
+    name: str = "yahoo_ads"
+
+    def rate(self, t: float) -> float:
+        return self.base_rate * (1.0 + self.diurnal_amp * np.sin(2 * np.pi * t / self.day_s))
+
+    def mean_size(self, t: float) -> float:
+        return self.event_size_mb
+
+
+@dataclass
+class IoTWorkload(Workload):
+    """Consumer-device fleet: heartbeats + lognormal telemetry bursts."""
+
+    fleet: int = 200_000
+    heartbeat_s: float = 30.0
+    burst_rate: float = 0.02       # bursts / s
+    burst_scale: float = 40_000.0  # events per burst (lognormal median)
+    event_size_mb: float = 0.05
+    seed: int = 7
+    name: str = "iot"
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        self._burst_times = np.cumsum(rng.exponential(1 / self.burst_rate, 512))
+        self._burst_sizes = rng.lognormal(np.log(self.burst_scale), 0.8, 512)
+
+    def rate(self, t: float) -> float:
+        base = self.fleet / self.heartbeat_s
+        burst = 0.0
+        for bt, bs in zip(self._burst_times, self._burst_sizes):
+            if bt > t + 60:
+                break
+            if 0 <= t - bt < 60:  # each burst drains over ~60 s
+                burst += bs / 60.0
+        return base + burst
+
+    def mean_size(self, t: float) -> float:
+        return self.event_size_mb
+
+
+@dataclass
+class SwitchingWorkload(Workload):
+    """Alternate a/b every period_s (paper §4.4/§4.5: λ1 <-> λ2 switches)."""
+
+    a: Workload = dataclasses.field(default_factory=lambda: PoissonWorkload(10_000, 0.5))
+    b: Workload = dataclasses.field(default_factory=lambda: PoissonWorkload(100_000, 5.0))
+    period_s: float = 3600.0
+    name: str = "switching"
+
+    def active(self, t: float) -> Workload:
+        return self.a if int(t // self.period_s) % 2 == 0 else self.b
+
+    def rate(self, t: float) -> float:
+        return self.active(t).rate(t)
+
+    def mean_size(self, t: float) -> float:
+        return self.active(t).mean_size(t)
+
+
+def get_workload(name: str, **kw) -> Workload:
+    table = {
+        "poisson": PoissonWorkload,
+        "poisson_low": lambda **k: PoissonWorkload(10_000, 0.5, **k),
+        "poisson_high": lambda **k: PoissonWorkload(100_000, 5.0, **k),
+        "trapezoid": TrapezoidWorkload,
+        "yahoo_ads": YahooAdsWorkload,
+        "iot": IoTWorkload,
+        "switching": SwitchingWorkload,
+    }
+    wl = table[name](**kw)
+    return wl

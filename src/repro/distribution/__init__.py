@@ -1,0 +1,27 @@
+from repro.distribution.sharding import (
+    MeshSpec,
+    pad_config_for_mesh,
+    param_pspecs,
+    batch_pspecs,
+    state_pspecs,
+    make_shard_fn,
+    dp_axes_for,
+)
+from repro.distribution.steps import (
+    make_train_step,
+    make_prefill_step,
+    make_decode_step,
+)
+
+__all__ = [
+    "MeshSpec",
+    "pad_config_for_mesh",
+    "param_pspecs",
+    "batch_pspecs",
+    "state_pspecs",
+    "make_shard_fn",
+    "dp_axes_for",
+    "make_train_step",
+    "make_prefill_step",
+    "make_decode_step",
+]

@@ -1,0 +1,305 @@
+"""Sharding rules: DP/FSDP over the data axes, TP over the model axis,
+optional EP for MoE, split-K (sequence-sharded KV) decode for long contexts.
+
+Design (DESIGN.md §4):
+
+* Parameters are fully sharded ("FSDP+TP"): the TP-natural dim goes to
+  ``model``, the other large dim to ``data``; XLA/GSPMD inserts the per-layer
+  all-gathers (inside the layer scan) and reduce-scatters the gradients back
+  to shards — ZeRO-3 semantics without hand-written collectives.
+* Head/vocab dims are PADDED to axis divisibility by ``pad_config_for_mesh``;
+  the padding waste is surfaced in the roofline useful-FLOPs ratio.
+* Activations get ``with_sharding_constraint`` at well-known points via the
+  ``shard(name, x)`` hook the models already call.
+* Long-context decode (batch < data axis) shards the KV cache on the
+  *sequence* dim instead; GSPMD turns the masked softmax over the sharded dim
+  into partial reductions + a tiny all-reduce — flash-decoding/split-K for
+  free, no shard_map needed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from dataclasses import dataclass
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.utils import round_up
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class MeshSpec:
+    """Which mesh axes play which role."""
+
+    data: tuple[str, ...] = ("data",)   # DP/FSDP axes (may include "pod")
+    model: str = "model"                # TP axis
+    expert: Optional[str] = None        # EP axis (optional, defaults to TP-MoE)
+
+    @staticmethod
+    def for_mesh(mesh: Mesh) -> "MeshSpec":
+        names = mesh.axis_names
+        data = tuple(n for n in names if n in ("pod", "data"))
+        return MeshSpec(data=data, model="model" if "model" in names else names[-1])
+
+
+def tp_size(mesh: Mesh, ms: MeshSpec) -> int:
+    return mesh.shape[ms.model]
+
+
+def dp_size(mesh: Mesh, ms: MeshSpec) -> int:
+    return int(np.prod([mesh.shape[a] for a in ms.data]))
+
+
+def dp_axes_for(batch: int, mesh: Mesh, ms: MeshSpec) -> tuple[str, ...]:
+    """Largest suffix-product of data axes that divides `batch`.
+
+    E.g. batch=32 on ("pod","data")=(2,16) -> both axes; batch=8 -> ("data",)
+    only if 8 % 16 == 0 fails -> (); batch=1 -> ().
+    """
+    axes: tuple[str, ...] = ()
+    prod = 1
+    for a in reversed(ms.data):
+        if batch % (prod * mesh.shape[a]) == 0:
+            axes = (a,) + axes
+            prod *= mesh.shape[a]
+        else:
+            break
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# Config padding
+# ---------------------------------------------------------------------------
+
+
+def pad_config_for_mesh(cfg: ModelConfig, tp: int) -> ModelConfig:
+    """Pad head/vocab dims so every TP-sharded dim divides the model axis."""
+    changes: dict = {}
+    nkv = cfg.num_kv_heads
+    nq = cfg.num_heads
+    if cfg.family != "ssm":  # attention heads
+        nkv_p = round_up(nkv, tp) if nkv else nkv
+        step = max(nkv_p, tp)
+        nq_p = round_up(nq, step)
+        if (nq_p, nkv_p) != (nq, nkv):
+            changes.update(num_heads=nq_p, num_kv_heads=nkv_p,
+                           head_dim=cfg.resolved_head_dim)
+    else:
+        assert nq % tp == 0, f"{cfg.name}: wkv heads {nq} not divisible by tp={tp}"
+    if cfg.vocab_size % tp:
+        changes.update(vocab_size=round_up(cfg.vocab_size, tp),
+                       vocab_true=cfg.vocab_true or cfg.vocab_size)
+    return dataclasses.replace(cfg, **changes) if changes else cfg
+
+
+def padding_flops_ratio(cfg: ModelConfig, padded: ModelConfig) -> float:
+    """Rough useful/compiled FLOPs ratio attributable to head+vocab padding."""
+    if cfg is padded:
+        return 1.0
+    base = cfg.param_count()
+    pad = dataclasses.replace(padded, vocab_true=0).param_count()
+    return base / max(pad, 1)
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings (path-pattern rules)
+# ---------------------------------------------------------------------------
+
+# (regex on "a/b/c" path, spec WITHOUT the leading layer-stack dim)
+_RULES: Sequence[tuple[str, tuple]] = (
+    (r"embed$", ("model", "data")),
+    (r"lm_head$", ("data", "model")),
+    (r"enc_pos$", (None, "model")),  # 1500 frames not data-divisible; shard d
+    (r"dec_pos$", ("data", None)),   # seq dim sharded (gathered on use)
+    # attention
+    (r"attn/w[qkv]$|xattn/w[qkv]$", ("data", "model")),
+    (r"attn/wo$|xattn/wo$", ("model", "data")),
+    (r"attn/b[qkv]$|xattn/b[qkv]$", ("model",)),
+    # dense mlp / shared expert
+    (r"(mlp|shared)/w[gu]$", ("data", "model")),
+    (r"(mlp|shared)/wd$", ("model", "data")),
+    (r"shared_gate$", ("data", None)),
+    # moe (TP-MoE layout: expert dim replicated, hidden dim TP)
+    (r"moe/router$", ("data", None)),
+    (r"moe/w[gu]$", (None, "data", "model")),
+    (r"moe/wd$", (None, "model", "data")),
+    # mamba2
+    (r"mamba/(z_proj|x_proj|dt_proj)$", ("data", "model")),
+    (r"mamba/(B_proj|C_proj)$", ("data", None)),
+    (r"mamba/conv_x_[wb]$", (None, "model")),
+    (r"mamba/conv_[BC]_[wb]$", (None, None)),
+    (r"mamba/out_proj$", ("model", "data")),
+    (r"mamba/(A_log|D|dt_bias)$", (None,)),
+    # rwkv6
+    (r"mix_\w+$", (None, None)),  # token-shift mixes (5|2, d): tiny, replicated
+    (r"(?:^|/)(wr|wk|wv|wg|cm_k|cm_r)$", ("data", "model")),
+    (r"(?:^|/)(wo|cm_v)$", ("model", "data")),
+    (r"w_lora_a$", ("data", None)),
+    (r"w_lora_b$", (None, "model")),
+    (r"(w_bias|u_bonus)$", ("model",)),
+    # norms and anything small
+    (r"scale$", (None,)),
+)
+
+_EP_OVERRIDES: Sequence[tuple[str, tuple]] = (
+    (r"moe/w[gu]$", ("model", "data", None)),
+    (r"moe/wd$", ("model", None, "data")),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):          # DictKey
+            parts.append(str(k.key))
+        elif hasattr(k, "name"):       # GetAttrKey (NamedTuple fields)
+            parts.append(str(k.name))
+        elif hasattr(k, "idx"):        # SequenceKey
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _spec_of(path: str, ndim: int, stacked: bool, ms: MeshSpec, ep: bool) -> P:
+    rules = list(_EP_OVERRIDES) + list(_RULES) if ep else _RULES
+    for pat, logical in rules:
+        if re.search(pat, path):
+            spec = tuple(
+                ms.data if a == "data" else (ms.model if a == "model" else None)
+                for a in logical
+            )
+            if stacked and len(spec) == ndim - 1:
+                spec = (None,) + spec
+            if len(spec) != ndim:  # e.g. biases under a rule written for 2D
+                spec = (None,) * (ndim - len(spec)) + spec[-ndim:] if ndim else ()
+            return P(*spec)
+    return P(*([None] * ndim))
+
+
+def param_pspecs(cfg: ModelConfig, params_shape: PyTree, ms: MeshSpec,
+                 ep: bool = False, fsdp: bool = True) -> PyTree:
+    """PartitionSpec pytree matching a params (shape) pytree.
+
+    ``fsdp=False`` drops the data-axis factor (TP-only sharding): inference
+    steps have no optimizer state to shard, and replicating weights across
+    the data axis removes every per-layer weight all-gather — the dominant
+    collective in FSDP-sharded prefill (EXPERIMENTS.md §Perf cell 3).
+
+    Safety: any leaf with >= 2^20 elements must hit a non-replicated rule —
+    silently replicating a big tensor is how dry-runs "pass" while lying.
+    """
+    stacked = cfg.scan_layers
+
+    def one(path, leaf):
+        pstr = _path_str(path)
+        is_stacked = stacked and pstr.startswith(("layers", "enc_layers"))
+        spec = _spec_of(pstr, len(leaf.shape), is_stacked, ms, ep)
+        if not fsdp:
+            spec = P(*(None if s in (ms.data, "data") or
+                       (isinstance(s, tuple) and set(s) <= set(ms.data))
+                       else s for s in spec))
+        n = int(np.prod(leaf.shape))
+        if n >= 1 << 20 and fsdp and all(s is None for s in spec):
+            raise ValueError(f"large param {pstr} {leaf.shape} has no sharding rule")
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints
+# ---------------------------------------------------------------------------
+
+
+def _n(ax):
+    """Normalise axis spec: empty tuple -> None (PartitionSpec-friendly)."""
+    return None if ax == () else ax
+
+
+def make_shard_fn(mesh: Mesh, ms: MeshSpec, dp: tuple[str, ...]):
+    """Returns shard(name, x) used by the model layers."""
+    m = ms.model
+    dp = _n(dp)
+    table = {
+        "act_btd": P(dp, None, None),
+        "act_btd_dec": P(dp, None, None),
+        "act_heads": P(dp, None, m, None),
+        "act_kv_heads": P(dp, None, m, None),
+        "act_ff": P(dp, None, m),
+        "act_ssm": P(dp, None, m),
+        "act_moe_ff": P(dp, None, None, m),
+        "logits": P(dp, None, m),
+    }
+
+    def shard(name: str, x):
+        spec = table.get(name)
+        if spec is None:
+            return x
+        # drop axes that do not divide the corresponding dim
+        fixed = []
+        for dim, s in zip(x.shape, spec):
+            if s is None:
+                fixed.append(None)
+                continue
+            axes = s if isinstance(s, tuple) else (s,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            fixed.append(s if size and dim % size == 0 else None)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*fixed)))
+
+    return shard
+
+
+# ---------------------------------------------------------------------------
+# Batch / decode-state shardings
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(cfg: ModelConfig, batch_tree: PyTree, dp: tuple[str, ...]) -> PyTree:
+    dp = _n(dp)
+
+    def one(path, leaf):
+        name = _path_str(path)
+        if name in ("patch_embeds", "frames"):
+            return P(dp, None, None)
+        return P(dp, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def state_pspecs(cfg: ModelConfig, state_shape: PyTree, ms: MeshSpec,
+                 dp: tuple[str, ...], *, shard_kv_seq: bool = False) -> PyTree:
+    """DecodeState shardings. ``shard_kv_seq`` = split-K long-context mode:
+    KV caches shard the sequence dim over the data axes instead of batch."""
+    m = ms.model
+    seq_ax = _n(dp) if shard_kv_seq else None
+    bat_ax = None if shard_kv_seq else _n(dp)
+
+    def one(path, leaf):
+        name = _path_str(path)
+        nd = len(leaf.shape)
+        if name in ("kv_k", "kv_v"):          # (L, B, S, nkv, hd)
+            return P(None, bat_ax, seq_ax, m, None)
+        if name in ("cross_k", "cross_v"):    # (L, B, F, nkv, hd)
+            return P(None, bat_ax, None, m, None)
+        if name == "pos":
+            return P()
+        if name.endswith("ssm"):              # (L, B, nh, hd, ns)
+            return P(None, bat_ax, m, None, None)
+        if name.endswith("wkv"):              # (L, B, H, hd, hd)
+            return P(None, bat_ax, m, None, None)
+        if name.endswith("conv_x"):           # (L, B, 3, d_in)
+            return P(None, bat_ax, None, m)
+        if "shift" in name:                   # (L, B, 1, d)
+            return P(None, bat_ax, None, m)
+        if name.startswith("conv"):           # conv_B / conv_C (L, B, 3, ns)
+            return P(None, bat_ax, None, None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(one, state_shape)

@@ -1,0 +1,25 @@
+"""The stream-processing engine being tuned: real (LocalEngine/StreamEngine)
+and simulated-at-scale (SimCluster), sharing lever specs and the 90-metric
+monitoring contract."""
+from repro.engine.engine import BatchReport, EngineConfig, StreamEngine
+from repro.engine.levers import EFFECTIVE, LEVER_NAMES, LEVER_SPECS, build_lever_specs
+from repro.engine.local import LOCAL_LEVERS, LocalEngine
+from repro.engine.queue import EventBuffer, IdempotentSink
+from repro.engine.simcluster import MetricsWindowData, SimCluster, SimSpec
+
+__all__ = [
+    "BatchReport",
+    "EFFECTIVE",
+    "EngineConfig",
+    "EventBuffer",
+    "IdempotentSink",
+    "LEVER_NAMES",
+    "LEVER_SPECS",
+    "LOCAL_LEVERS",
+    "LocalEngine",
+    "MetricsWindowData",
+    "SimCluster",
+    "SimSpec",
+    "StreamEngine",
+    "build_lever_specs",
+]

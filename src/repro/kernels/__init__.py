@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the engine's compute hot-spots.
+
+The paper's contribution is the tuner (no kernel of its own), but the stream
+engine it tunes is compute-bound in attention / SSD / wkv — these kernels ARE
+the roofline the tuner's metrics are calibrated against (DESIGN.md §2).
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,139 @@
+"""Pallas TPU flash attention (GQA, causal/full) — the engine's attention hot-spot.
+
+TPU adaptation notes (DESIGN.md §2): blocks are MXU-aligned (multiples of 128
+on the matmul dims where the shape allows), the online-softmax accumulators
+live in VMEM scratch and persist across the *minor* (sequential) KV grid
+dimension, and causal blocks above the diagonal are skipped with ``pl.when``
+so the compiled kernel does no work there. HBM→VMEM tiling is expressed
+entirely through BlockSpecs.
+
+Layout: q (B, Hq, Sq, hd); k/v (B, Hkv, Skv, hd). GQA is handled in the
+BlockSpec index maps (kv head = q head // group) — no K/V replication in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref,  # blocks
+    m_ref, l_ref, acc_ref,       # VMEM scratch, persist across ki
+    *, causal: bool, sm_scale: float, block_q: int, block_k: int,
+    seq_k: int, q_offset: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q + q_offset  # absolute position of first query row
+    k_start = ki * block_k
+
+    def compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q * sm_scale, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (bq, bk)
+        kv_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kv_pos < seq_k
+        if causal:
+            q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            mask = mask & (q_pos >= kv_pos)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_blk = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_blk)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...], l_ref[...] = m_new, l_new
+
+    if causal:
+        # skip blocks entirely above the diagonal
+        pl.when(k_start <= q_start + block_q - 1)(compute)
+    else:
+        compute()
+
+    @pl.when(ki == nk - 1)
+    def _write():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret", "q_offset"),
+)
+def flash_attention_bhsd(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, q_offset: int = 0,
+    block_q: int = DEFAULT_BLOCK_Q, block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """q (B,Hq,Sq,hd), k/v (B,Hkv,Skv,hd) -> (B,Hq,Sq,hd)."""
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    nq = (Sq + bq - 1) // bq
+    nk = (Skv + bk - 1) // bk
+    sm_scale = 1.0 / np.sqrt(hd)
+
+    # pad seq dims to block multiples (masked out inside the kernel)
+    def padto(x, n, axis):
+        pad = n - x.shape[axis]
+        if pad == 0:
+            return x
+        cfgpad = [(0, 0)] * x.ndim
+        cfgpad[axis] = (0, pad)
+        return jnp.pad(x, cfgpad)
+
+    qp = padto(q, nq * bq, 2)
+    kp = padto(k, nk * bk, 2)
+    vp = padto(v, nk * bk, 2)
+
+    kernel = functools.partial(
+        _attn_kernel, causal=causal, sm_scale=sm_scale,
+        block_q=bq, block_k=bk, seq_k=Skv, q_offset=q_offset,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, nq * bq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :Sq]

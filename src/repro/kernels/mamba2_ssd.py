@@ -1,0 +1,108 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan (zamba2 backbone hot-spot).
+
+Recurrence per head (state h: (hd, ns)):
+    h_t = a_t * h_{t-1} + (Δ_t x_t) ⊗ B_t        a_t = exp(Δ_t · A) ∈ (0,1]
+    y_t = C_t · h_t + D * x_t
+
+TPU adaptation: the chunk dimension is the *minor* grid axis, the running
+state lives in VMEM scratch and persists across chunk steps; intra-chunk work
+is two MXU matmuls ((C·B^T ⊙ L) and the state outer-product update) — this is
+the SSD "quadratic-inside-chunk / linear-across-chunks" scheme mapped onto
+the systolic array instead of a CUDA warp scan.
+
+Layouts: x (B, nh, S, hd) Δ-scaled inputs; Bm/Cm (B, S, ns); loga (B, nh, S).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+NEG_INF = -1e30
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, la_ref, o_ref, h_ref, *, chunk: int, seq: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)      # (C, hd)
+    bm = b_ref[0].astype(jnp.float32)        # (C, ns)
+    cm = c_ref[0].astype(jnp.float32)        # (C, ns)
+    la = la_ref[0, 0].astype(jnp.float32)    # (C,)
+
+    pos = ci * chunk + jax.lax.iota(jnp.int32, chunk)
+    valid = pos < seq
+    la = jnp.where(valid, la, 0.0)  # padded steps: decay 1, no input
+    xm = jnp.where(valid[:, None], x, 0.0)
+
+    cum = jnp.cumsum(la)                      # (C,) inclusive
+    # inter-chunk: y_t += (C_t · h_in) * exp(cum_t)  — INCLUSIVE decay, because
+    # mamba2 reads the state after the step's own decay (y_t = C_t h_t).
+    dec_t = jnp.exp(cum)                      # prod_{s<=t} a_s within chunk
+    y_inter = jax.lax.dot(cm, h_ref[...].T, preferred_element_type=jnp.float32)
+    y_inter = y_inter * dec_t[:, None]        # (C, hd)
+
+    # intra-chunk: y += ((C B^T) ⊙ L) x   with L[t,s] = exp(cum_t - cum_s), s<=t
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (C, C)
+    lmat = cum[:, None] - cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    lmat = jnp.exp(jnp.where(tri, lmat, NEG_INF))
+    y_intra = jax.lax.dot(scores * lmat, xm, preferred_element_type=jnp.float32)
+
+    # state update: h_out = exp(cum_C) h_in + Σ_s exp(cum_C - cum_s) x_s ⊗ B_s
+    tot = cum[chunk - 1]
+    dec_s = jnp.exp(tot - cum)                # (C,)
+    upd = jax.lax.dot_general(xm * dec_s[:, None], bm, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (hd, ns)
+    h_ref[...] = h_ref[...] * jnp.exp(tot) + upd
+
+    o_ref[0, 0] = (y_inter + y_intra).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba2_ssd(
+    x: jax.Array,      # (B, nh, S, hd)  Δ-scaled inputs
+    bm: jax.Array,     # (B, S, ns)
+    cm: jax.Array,     # (B, S, ns)
+    loga: jax.Array,   # (B, nh, S)  per-step log decay (<= 0)
+    *, chunk: int = DEFAULT_CHUNK, interpret: bool = False,
+) -> jax.Array:
+    """Returns y (B, nh, S, hd) (D-residual and gating applied by the caller)."""
+    B, nh, S, hd = x.shape
+    ns = bm.shape[-1]
+    ch = min(chunk, S)
+    nch = (S + ch - 1) // ch
+    Sp = nch * ch
+
+    def padto(a, axis):
+        pad = [(0, 0)] * a.ndim
+        pad[axis] = (0, Sp - a.shape[axis])
+        return jnp.pad(a, pad) if Sp != a.shape[axis] else a
+
+    xp, bp, cp, lp = padto(x, 2), padto(bm, 1), padto(cm, 1), padto(loga, 2)
+
+    kernel = functools.partial(_ssd_kernel, chunk=ch, seq=S)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, nh, nch),
+        in_specs=[
+            pl.BlockSpec((1, 1, ch, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, ch, ns), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, ch, ns), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, ch), lambda b, h, c: (b, h, c)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, ch, hd), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nh, Sp, hd), x.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, ns), jnp.float32)],
+        interpret=interpret,
+    )(xp, bp, cp, lp)
+    return out[:, :, :S]

@@ -1,0 +1,56 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+The model layer calls these when ``cfg.attn_impl == "pallas"`` (TPU target).
+On CPU (this container) they run in interpret mode when
+``REPRO_PALLAS_INTERPRET=1`` so tests exercise the real kernel bodies.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import mamba2_ssd as _ssd
+from repro.kernels import rwkv6_wkv as _wkv
+
+
+def _interpret() -> bool:
+    if os.environ.get("REPRO_PALLAS_INTERPRET", ""):
+        return True
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                    block_q: int = _fa.DEFAULT_BLOCK_Q,
+                    block_k: int = _fa.DEFAULT_BLOCK_K):
+    """q (B,S,Hq,hd), k/v (B,Skv,Hkv,hd) — model layout; returns same layout."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = _fa.flash_attention_bhsd(
+        qt, kt, vt, causal=causal, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, interpret=_interpret(),
+    )
+    return o.transpose(0, 2, 1, 3)
+
+
+def mamba2_ssd(x, bm, cm, loga, *, chunk: int = _ssd.DEFAULT_CHUNK):
+    return _ssd.mamba2_ssd(x, bm, cm, loga, chunk=chunk, interpret=_interpret())
+
+
+def rwkv6_wkv(r, k, v, logw, u, *, state=None, chunk: int = _wkv.DEFAULT_CHUNK):
+    """Model layout r/k/v/logw (B,S,H,hd) -> (o (B,S,H,hd), S_fin).
+
+    NOTE: `state` (incremental decode) is handled by the caller's jnp path;
+    the kernel covers the full-sequence (train/prefill) hot path. A non-None
+    state falls back to the chunked jnp implementation.
+    """
+    if state is not None:
+        from repro.models.layers import wkv6_chunked
+
+        return wkv6_chunked(r, k, v, logw, u, state=state, chunk=chunk)
+    rt, kt, vt, lt = (a.transpose(0, 2, 1, 3) for a in (r, k, v, logw))
+    o, sfin = _wkv.rwkv6_wkv(rt, kt, vt, lt, u, chunk=chunk, interpret=_interpret())
+    return o.transpose(0, 2, 1, 3), sfin

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+These are deliberately naive — full score materialisation, step-by-step
+recurrences — so they are independent of the chunked/online formulations
+used by both the kernels and the model fast paths.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal: bool = True, q_offset: int = 0):
+    """q (B,Hq,Sq,hd), k/v (B,Hkv,Skv,hd) -> (B,Hq,Sq,hd). Full softmax."""
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    kq = jnp.repeat(k, g, axis=1).astype(jnp.float32)
+    vq = jnp.repeat(v, g, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) / np.sqrt(hd), kq)
+    if causal:
+        qpos = jnp.arange(Sq)[:, None] + q_offset
+        kpos = jnp.arange(Skv)[None, :]
+        s = jnp.where(qpos >= kpos, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, vq).astype(q.dtype)
+
+
+def mamba2_ssd_ref(x, bm, cm, loga):
+    """Sequential SSD recurrence. x (B,nh,S,hd), bm/cm (B,S,ns), loga (B,nh,S)."""
+    B, nh, S, hd = x.shape
+    ns = bm.shape[-1]
+
+    def step(h, inputs):
+        xt, bt, ct, lat = inputs  # (B,nh,hd), (B,ns), (B,ns), (B,nh)
+        a = jnp.exp(lat)
+        h = h * a[..., None, None] + jnp.einsum("bnh,bs->bnhs", xt, bt)
+        y = jnp.einsum("bnhs,bs->bnh", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((B, nh, hd, ns), jnp.float32)
+    xs = (
+        x.transpose(2, 0, 1, 3).astype(jnp.float32),
+        bm.transpose(1, 0, 2).astype(jnp.float32),
+        cm.transpose(1, 0, 2).astype(jnp.float32),
+        loga.transpose(2, 0, 1).astype(jnp.float32),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 2, 0, 3).astype(x.dtype)  # (B,nh,S,hd)
+
+
+def rwkv6_wkv_ref(r, k, v, logw, u):
+    """Sequential wkv6. r/k/v/logw (B,H,S,hd), u (H,hd) -> (o, S_fin)."""
+    B, H, S, hd = r.shape
+
+    def step(state, inputs):
+        rt, kt, vt, lwt = inputs  # (B,H,hd) each
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, state + u[None, :, :, None] * kv)
+        state = state * jnp.exp(lwt)[..., None] + kv
+        return state, out
+
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    xs = tuple(a.transpose(2, 0, 1, 3).astype(jnp.float32) for a in (r, k, v, logw))
+    s_fin, os = jax.lax.scan(step, s0, xs)
+    return os.transpose(1, 2, 0, 3).astype(r.dtype), s_fin

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel for the RWKV-6 (Finch) wkv recurrence — rwkv6-7b hot-spot.
+
+Recurrence per head (state S: (hd_k, hd_v)):
+    o_t = r_t · (S_{t-1} + diag(u) k_t^T v_t)
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          w_t = exp(logw_t), logw_t <= 0
+
+Finch's decay is *per key channel* (data-dependent), so unlike SSD the
+pairwise intra-chunk decay is 3-D (C, C, hd). The kernel materialises it in
+VMEM per (head, chunk) — (C=64)²×hd_k=64 f32 = 1 MiB, comfortably resident —
+and reduces it with an elementwise-weighted dot. All exponents are cumulative-
+sum differences with s<=t, hence <=0: no overflow by construction.
+
+Layouts: r/k/v (B, H, S, hd); logw (B, H, S, hd); u (H, hd).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+NEG_INF = -1e30
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, sfin_ref, s_ref,
+                *, chunk: int, seq: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0, 0].astype(jnp.float32)   # (C, hk)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)   # (C, hv)
+    lw = lw_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)      # (hk,)
+
+    pos = ci * chunk + jax.lax.iota(jnp.int32, chunk)
+    valid = pos < seq
+    lw = jnp.where(valid[:, None], lw, 0.0)
+    k = jnp.where(valid[:, None], k, 0.0)
+
+    cum = jnp.cumsum(lw, axis=0)          # (C, hk) inclusive
+    cum_excl = cum - lw
+
+    # inter-chunk: o_t = (r_t ⊙ exp(cum_excl_t)) @ S_in
+    r_dec = r * jnp.exp(cum_excl)
+    o = jax.lax.dot(r_dec, s_ref[...], preferred_element_type=jnp.float32)
+
+    # intra-chunk (s < t): att[t,s] = Σ_c r[t,c] k[s,c] exp(cum_excl[t,c]-cum[s,c])
+    dm = cum_excl[:, None, :] - cum[None, :, :]          # (C, C, hk)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    dm = jnp.exp(jnp.where(tri[..., None], dm, NEG_INF))
+    att = jnp.einsum("tc,tsc,sc->ts", r, dm, k)          # (C, C)
+    o = o + jax.lax.dot(att, v, preferred_element_type=jnp.float32)
+
+    # current-token bonus: o_t += (r_t · (u ⊙ k_t)) v_t
+    bonus = jnp.sum(r * u[None, :] * k, axis=1, keepdims=True)  # (C, 1)
+    o = o + bonus * v
+
+    # state update: S_out = diag(exp(cum_C)) S_in + Σ_s (k_s ⊙ exp(cum_C-cum_s))^T v_s
+    tot = cum[chunk - 1]                                  # (hk,)
+    k_dec = k * jnp.exp(tot[None, :] - cum)
+    s_ref[...] = s_ref[...] * jnp.exp(tot)[:, None] + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _write_state():
+        sfin_ref[0, 0] = s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_wkv(
+    r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array, u: jax.Array,
+    *, chunk: int = DEFAULT_CHUNK, interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """r/k/v/logw (B,H,S,hd), u (H,hd) -> (o (B,H,S,hd), S_fin (B,H,hd,hd))."""
+    B, H, S, hd = r.shape
+    ch = min(chunk, S)
+    nch = (S + ch - 1) // ch
+    Sp = nch * ch
+
+    def padto(a):
+        if a.shape[2] == Sp:
+            return a
+        return jnp.pad(a, ((0, 0), (0, 0), (0, Sp - a.shape[2]), (0, 0)))
+
+    kernel = functools.partial(_wkv_kernel, chunk=ch, seq=S)
+    o, sfin = pl.pallas_call(
+        kernel,
+        grid=(B, H, nch),
+        in_specs=[
+            pl.BlockSpec((1, 1, ch, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, ch, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, ch, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, ch, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, hd), lambda b, h, c: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, ch, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Sp, hd), r.dtype),
+            jax.ShapeDtypeStruct((B, H, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(padto(r), padto(k), padto(v), padto(logw), u)
+    return o[:, :, :S], sfin

@@ -1,0 +1,19 @@
+from repro.models.lm import (
+    DecodeState,
+    build_model,
+    init_params,
+    forward_train,
+    forward_prefill,
+    forward_decode,
+    init_decode_state,
+)
+
+__all__ = [
+    "DecodeState",
+    "build_model",
+    "init_params",
+    "forward_train",
+    "forward_prefill",
+    "forward_decode",
+    "init_decode_state",
+]

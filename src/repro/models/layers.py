@@ -1,0 +1,716 @@
+"""Pure-JAX model layers shared by all 10 assigned architectures.
+
+Conventions
+-----------
+* Params are nested dicts of jnp arrays; layer stacks are ``jax.tree.map``-stacked
+  along a leading L axis and consumed by ``lax.scan`` when ``cfg.scan_layers``.
+* ``shard(name, x)`` is an injection point for ``with_sharding_constraint``;
+  the distribution layer supplies it, default is identity (CPU smoke tests).
+* Attention uses a chunked online-softmax (flash-style) in pure jnp so that the
+  lowered HLO never materialises S×S scores — this is also what keeps the
+  dry-run roofline honest. ``attn_impl="pallas"`` switches to the Pallas kernel.
+* All matmuls run in ``cfg.dtype`` with f32 accumulation where it matters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+ShardFn = Callable[[str, jax.Array], jax.Array]
+
+
+def _noshard(name: str, x: jax.Array) -> jax.Array:
+    return x
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _init(rng, shape, scale, dtype):
+    return (scale * jax.random.normal(rng, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    if theta <= 0:  # arch without RoPE (whisper: learned absolute positions)
+        return x
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, chunked online softmax; self / cross; prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(rng, cfg: ModelConfig, *, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    dt = _dtype(cfg)
+    s_in = 1.0 / np.sqrt(d)
+    s_out = 1.0 / np.sqrt(nq * hd) / np.sqrt(2 * cfg.num_layers)
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": _init(ks[0], (d, nq * hd), s_in, dt),
+        "wk": _init(ks[1], (d, nkv * hd), s_in, dt),
+        "wv": _init(ks[2], (d, nkv * hd), s_in, dt),
+        "wo": _init(ks[3], (nq * hd, d), s_out, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq * hd,), dt)
+        p["bk"] = jnp.zeros((nkv * hd,), dt)
+        p["bv"] = jnp.zeros((nkv * hd,), dt)
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, x, kv_src):
+    """Returns q (B,S,nq,hd), k,v (B,Skv,nkv,hd)."""
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = kv_src @ p["wk"]
+    v = kv_src @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    B, S = x.shape[:2]
+    Skv = kv_src.shape[1]
+    q = q.reshape(B, S, cfg.num_heads, hd)
+    k = k.reshape(B, Skv, cfg.num_kv_heads, hd)
+    v = v.reshape(B, Skv, cfg.num_kv_heads, hd)
+    return q, k, v
+
+
+def attention_core(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    chunk: int,
+    q_offset: int | jax.Array = 0,
+    impl: str = "chunked",
+) -> jax.Array:
+    """GQA attention. q (B,S,nq,hd); k/v (B,Skv,nkv,hd). Returns (B,S,nq,hd).
+
+    ``chunked`` scans KV in blocks with a running (max, denom) so the HLO holds
+    at most (B, S, nq, chunk) scores at once. ``naive`` materialises scores
+    (oracle / tiny shapes). ``pallas`` is wired in repro.kernels.ops.
+    """
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+
+        return kops.flash_attention(q, k, v, causal=causal, q_offset=q_offset)
+
+    B, S, nq, hd = q.shape
+    Skv, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    scale = 1.0 / np.sqrt(hd)
+    qf = (q.astype(jnp.float32) * scale).reshape(B, S, nkv, g, hd)
+    q_pos = jnp.arange(S) + q_offset  # absolute position of each query
+
+    if impl == "naive":
+        kf = k.astype(jnp.float32)
+        s = jnp.einsum("bsngh,btnh->bngst", qf, kf)  # (B,nkv,g,S,Skv)
+        if causal:
+            mask = q_pos[:, None] >= jnp.arange(Skv)[None, :]
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bngst,btnh->bsngh", w, v.astype(jnp.float32))
+        return o.reshape(B, S, nq, hd).astype(q.dtype)
+
+    # --- chunked online softmax over KV blocks ---
+    chunk = min(chunk, Skv)
+    n_chunks = (Skv + chunk - 1) // chunk
+    pad = n_chunks * chunk - Skv
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = kp.reshape(B, n_chunks, chunk, nkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(B, n_chunks, chunk, nkv, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, blk):
+        m_prev, l_prev, acc = carry
+        kb, vb, start = blk  # (B,chunk,nkv,hd), scalar start index
+        s = jnp.einsum("bsngh,btnh->bngst", qf, kb.astype(jnp.float32))
+        kv_pos = start + jnp.arange(chunk)
+        valid = kv_pos < Skv
+        if causal:
+            valid = valid[None, :] & (q_pos[:, None] >= kv_pos[None, :])
+            s = jnp.where(valid[None, None, None], s, -jnp.inf)
+        else:
+            s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
+        m_blk = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_blk)
+        # guard fully-masked rows (m == -inf): exp(-inf - -inf) -> use 0
+        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - safe_m[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - safe_m), 0.0)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bngst,btnh->bnsgh", p, vb.astype(jnp.float32)
+        ).transpose(0, 1, 3, 2, 4)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, nkv, g, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, nkv, g, S), jnp.float32)
+    a0 = jnp.zeros((B, nkv, g, S, hd), jnp.float32)
+    starts = jnp.arange(n_chunks) * chunk
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, starts))
+    o = acc / jnp.maximum(l[..., None], 1e-30)
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, S, nq, hd)
+    return o.astype(q.dtype)
+
+
+def attention_apply(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    shard: ShardFn = _noshard,
+    kv_src: Optional[jax.Array] = None,
+    causal: Optional[bool] = None,
+    positions: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Full prefill/train attention (self by default, cross if kv_src given)."""
+    cross = kv_src is not None
+    kv_in = kv_src if cross else x
+    q, k, v = _project_qkv(p, cfg, x, kv_in)
+    if not cross:
+        pos = positions if positions is not None else jnp.arange(x.shape[1])
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    q = shard("act_heads", q)
+    k = shard("act_kv_heads", k)
+    v = shard("act_kv_heads", v)
+    is_causal = cfg.causal if causal is None else causal
+    o = attention_core(
+        q, k, v, causal=is_causal and not cross, chunk=cfg.attn_chunk,
+        impl=cfg.attn_impl if cfg.attn_impl != "pallas" or not cross else "chunked",
+    )
+    o = shard("act_heads", o)
+    B, S = x.shape[:2]
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+def attention_decode(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    pos: jax.Array,
+    *,
+    shard: ShardFn = _noshard,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode. x (B,1,d); cache (B,Smax,nkv,hd); pos scalar int.
+
+    Returns (out (B,1,d), new_cache_k, new_cache_v). Softmax over the cache is
+    masked to positions < pos+1. Linear in Smax (flash-decoding split-K is
+    applied by the distribution layer when the mesh shards the cache).
+    """
+    q, k, v = _project_qkv(p, cfg, x, x)
+    posv = jnp.full((x.shape[0], 1), pos)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    B, Smax, nkv, hd = cache_k.shape
+    g = cfg.num_heads // nkv
+    scale = 1.0 / np.sqrt(hd)
+    qf = (q.astype(jnp.float32) * scale).reshape(B, 1, nkv, g, hd)
+    s = jnp.einsum("bngh,btnh->bngt", qf[:, 0], cache_k.astype(jnp.float32))
+    valid = jnp.arange(Smax) <= pos
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngt,btnh->bngh", w, cache_v.astype(jnp.float32))
+    o = o.reshape(B, 1, cfg.num_heads * hd).astype(x.dtype)
+    return o @ p["wo"], cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP (GLU) and dense block glue
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(rng, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = _dtype(cfg)
+    ks = jax.random.split(rng, 3)
+    s_in = 1.0 / np.sqrt(d)
+    s_out = 1.0 / np.sqrt(f) / np.sqrt(2 * cfg.num_layers)
+    return {
+        "wg": _init(ks[0], (d, f), s_in, dt),
+        "wu": _init(ks[1], (d, f), s_in, dt),
+        "wd": _init(ks[2], (f, d), s_out, dt),
+    }
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def mlp_apply(p: dict, cfg: ModelConfig, x: jax.Array, *, shard: ShardFn = _noshard) -> jax.Array:
+    h = _act(cfg.act)(x @ p["wg"]) * (x @ p["wu"])
+    h = shard("act_ff", h)
+    return h @ p["wd"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (GShard-style capacity dispatch; TP- and EP-shardable)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(rng, cfg: ModelConfig) -> dict:
+    d, m, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    dt = _dtype(cfg)
+    ks = jax.random.split(rng, 5)
+    s_in = 1.0 / np.sqrt(d)
+    s_out = 1.0 / np.sqrt(m) / np.sqrt(2 * cfg.num_layers)
+    p = {
+        "router": _init(ks[0], (d, E), s_in, jnp.float32),
+        "wg": _init(ks[1], (E, d, m), s_in, dt),
+        "wu": _init(ks[2], (E, d, m), s_in, dt),
+        "wd": _init(ks[3], (E, m, d), s_out, dt),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg, cfg.d_ff)
+        p["shared_gate"] = jnp.zeros((cfg.d_model, 1), dt)
+    return p
+
+
+def moe_apply(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    shard: ShardFn = _noshard,
+    capacity_factor: float = 0.0,  # 0 -> cfg.moe_capacity_factor
+) -> tuple[jax.Array, dict]:
+    """x (B,S,d) -> (out, aux). Groups = batch rows (sharded over data axis).
+
+    GShard capacity dispatch: per group g, expert e receives at most C tokens;
+    overflow tokens are dropped (drop fraction is exported as a tuner metric).
+
+    ``cfg.moe_group_size`` splits long sequences into shorter dispatch groups:
+    the one-hot dispatch/combine einsums cost O(S·E·C·d) with C ∝ S, i.e.
+    quadratic in group length — grouping is the difference between a
+    compute-bound and a balanced MoE prefill (EXPERIMENTS.md §Perf).
+    """
+    B0, S0, d0 = x.shape
+    G = cfg.moe_group_size
+    if G and S0 > G and S0 % G == 0:
+        xg = x.reshape(B0 * (S0 // G), G, d0)
+        out, aux = _moe_apply_grouped(p, cfg, xg, shard, capacity_factor)
+        return out.reshape(B0, S0, d0), aux
+    return _moe_apply_grouped(p, cfg, x, shard, capacity_factor)
+
+
+def _moe_apply_grouped(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    shard: ShardFn = _noshard,
+    capacity_factor: float = 0.0,
+) -> tuple[jax.Array, dict]:
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.moe_top_k
+    cf = capacity_factor or cfg.moe_capacity_factor
+    C = int(np.ceil(S * k / E * cf))
+    C = max(4, min(C, S * k))
+
+    logits = (x.astype(jnp.float32)) @ p["router"]  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (B,S,k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert queue, GShard order:
+    # all k=0 choices first, then k=1, ... (priority to primary routes).
+    dispatch = jnp.zeros((B, S, E, C), jnp.bool_)
+    combine = jnp.zeros((B, S, E, C), jnp.float32)
+    counts = jnp.zeros((B, E), jnp.int32)
+    for choice in range(k):
+        onehot = jax.nn.one_hot(gate_idx[:, :, choice], E, dtype=jnp.int32)  # (B,S,E)
+        pos_in_e = jnp.cumsum(onehot, axis=1) - onehot + counts[:, None, :]
+        fits = (pos_in_e < C) & (onehot > 0)
+        posc = jnp.clip(pos_in_e, 0, C - 1)
+        slot = jax.nn.one_hot(posc, C, dtype=jnp.float32) * fits[..., None]
+        dispatch = dispatch | (slot > 0)
+        combine = combine + slot * gate_vals[:, :, choice][..., None, None]
+        counts = counts + onehot.sum(axis=1)
+
+    xin = jnp.einsum("bsec,bsd->becd", dispatch.astype(x.dtype), x)  # (B,E,C,d)
+    h = _act(cfg.act)(jnp.einsum("becd,edm->becm", xin, p["wg"]))
+    h = h * jnp.einsum("becd,edm->becm", xin, p["wu"])
+    h = shard("act_moe_ff", h)
+    out_e = jnp.einsum("becm,emd->becd", h, p["wd"])  # (B,E,C,d)
+    out = jnp.einsum("bsec,becd->bsd", combine.astype(x.dtype), out_e)
+
+    if "shared" in p:
+        g = jax.nn.sigmoid(x @ p["shared_gate"])
+        out = out + g * mlp_apply(p["shared"], cfg, x, shard=shard)
+
+    dropped = 1.0 - jnp.minimum(counts, C).sum() / jnp.maximum(counts.sum(), 1)
+    me = probs.mean(axis=(0, 1))
+    ce = jax.nn.one_hot(gate_idx[..., 0], E).mean(axis=(0, 1))
+    aux = {"moe_drop_frac": dropped, "moe_lb_loss": E * jnp.sum(me * ce)}
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD, chunked) — zamba2 backbone
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(rng, cfg: ModelConfig) -> dict:
+    """Projections are kept SEPARATE (z/x/B/C/dt) rather than fused: each output
+    dim then shards cleanly on the TP axis; a fused in_proj would split at
+    offsets that are not shard-aligned and force GSPMD reshards (DESIGN.md §4).
+    """
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    ns, hd = cfg.ssm_state, cfg.ssm_head_dim
+    nh = d_in // hd
+    dt = _dtype(cfg)
+    ks = jax.random.split(rng, 7)
+    conv_dim = d_in + 2 * ns
+    s = 1.0 / np.sqrt(d)
+    return {
+        "z_proj": _init(ks[0], (d, d_in), s, dt),
+        "x_proj": _init(ks[1], (d, d_in), s, dt),
+        "B_proj": _init(ks[2], (d, ns), s, dt),
+        "C_proj": _init(ks[3], (d, ns), s, dt),
+        "dt_proj": _init(ks[4], (d, nh), s, dt),
+        # depthwise convs kept per-stream (x/B/C) so channel sharding stays
+        # aligned — a fused conv over the concat would straddle shard bounds
+        "conv_x_w": _init(ks[5], (4, d_in), 0.2, dt),
+        "conv_x_b": jnp.zeros((d_in,), dt),
+        "conv_B_w": _init(ks[5], (4, ns), 0.2, dt),
+        "conv_B_b": jnp.zeros((ns,), dt),
+        "conv_C_w": _init(ks[5], (4, ns), 0.2, dt),
+        "conv_C_b": jnp.zeros((ns,), dt),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": init_rmsnorm(d_in, dt),
+        "out_proj": _init(ks[6], (d_in, d), 1.0 / np.sqrt(d_in), dt),
+    }
+
+
+def _depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array, state: Optional[jax.Array]):
+    """Causal depthwise conv, width K. x (B,S,Cd), w (K,Cd). Returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, xp.shape[1] - (K - 1) :]
+    return jax.nn.silu(y + b), new_state
+
+
+def mamba2_mix(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    shard: ShardFn = _noshard,
+    state: Optional[dict] = None,
+    chunk: int = 64,
+    return_state: bool = False,
+) -> tuple[jax.Array, Optional[dict]]:
+    """Chunked SSD. x (B,S,d). state={'conv','ssm'} for decode (S==1).
+
+    ``return_state=True`` makes the full-sequence path also return the final
+    {'conv','ssm'} state (used by prefill, no recomputation needed)."""
+    B, S, d = x.shape
+    d_in = cfg.ssm_expand * d
+    ns, hd = cfg.ssm_state, cfg.ssm_head_dim
+    nh = d_in // hd
+
+    z = x @ p["z_proj"]
+    dt_raw = x @ p["dt_proj"]
+    st = state or {}
+    xs, cs_x = _depthwise_conv(x @ p["x_proj"], p["conv_x_w"], p["conv_x_b"],
+                               st.get("conv_x"))
+    Bmat, cs_B = _depthwise_conv(x @ p["B_proj"], p["conv_B_w"], p["conv_B_b"],
+                                 st.get("conv_B"))
+    Cmat, cs_C = _depthwise_conv(x @ p["C_proj"], p["conv_C_w"], p["conv_C_b"],
+                                 st.get("conv_C"))
+    conv_state = {"conv_x": cs_x, "conv_B": cs_B, "conv_C": cs_C}
+    dt_v = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(p["A_log"])  # (nh,)
+    xh = xs.reshape(B, S, nh, hd).astype(jnp.float32)
+    Bf = Bmat.astype(jnp.float32)  # (B,S,ns)
+    Cf = Cmat.astype(jnp.float32)
+
+    loga = dt_v * A  # (B,S,nh) per-step log decay  (<=0)
+    xdt = xh * dt_v[..., None]  # Δ-scaled input
+
+    if state is not None:  # single-token decode
+        h_prev = state["ssm"]  # (B,nh,hd,ns)
+        a = jnp.exp(loga[:, 0])  # (B,nh)
+        upd = jnp.einsum("bnh,bs->bnhs", xdt[:, 0], Bf[:, 0])
+        h_new = h_prev * a[..., None, None] + upd
+        y = jnp.einsum("bnhs,bs->bnh", h_new, Cf[:, 0])
+        y = y + p["D"][None, :, None] * xh[:, 0]
+        y = y.reshape(B, 1, d_in)
+        y = rmsnorm(p["norm"], (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype), cfg.norm_eps)
+        new_state = {**{k: v.astype(jnp.float32) for k, v in conv_state.items()},
+                     "ssm": h_new}
+        return y @ p["out_proj"], new_state
+
+    # ---- chunked prefill/train ----
+    nch = (S + chunk - 1) // chunk
+    pad = nch * chunk - S
+    def padc(a):
+        return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+    xdt_c = padc(xdt).reshape(B, nch, chunk, nh, hd).transpose(1, 0, 2, 3, 4)
+    B_c = padc(Bf).reshape(B, nch, chunk, ns).transpose(1, 0, 2, 3)
+    C_c = padc(Cf).reshape(B, nch, chunk, ns).transpose(1, 0, 2, 3)
+    la_c = padc(loga).reshape(B, nch, chunk, nh).transpose(1, 0, 2, 3)
+
+    def body(h, blk):
+        xb, bb, cb, lab = blk  # (B,C,nh,hd),(B,C,ns),(B,C,ns),(B,C,nh)
+        cum = jnp.cumsum(lab, axis=1)  # (B,C,nh) inclusive
+        # inter-chunk: y_t += C_t . (exp(cum_t) * h_in) — INCLUSIVE decay
+        # (y_t reads the state after step t's own decay: y_t = C_t h_t).
+        dec_t = jnp.exp(cum)
+        y_inter = jnp.einsum("bcs,bnhs,bcn->bcnh", cb, h, dec_t)
+        # intra-chunk: L[t,s] = exp(cum_t - cum_s) for s<=t (per head).
+        # Mask the EXPONENT (not the exp) — exp of the s>t branch overflows and
+        # would poison gradients through jnp.where.
+        Lmat = cum[:, :, None, :] - cum[:, None, :, :]  # (B,C,C,nh)
+        mask = (jnp.arange(xb.shape[1])[:, None] >= jnp.arange(xb.shape[1])[None, :])
+        Lmat = jnp.exp(jnp.where(mask[None, :, :, None], Lmat, -1e30))
+        cb_dot = jnp.einsum("bcs,bds->bcd", cb, bb)  # (B,C,C)
+        y_intra = jnp.einsum("bcd,bcdn,bdnh->bcnh", cb_dot, Lmat, xb)
+        # state update
+        tot = cum[:, -1:, :]  # (B,1,nh)
+        dec_from_s = jnp.exp(tot - cum)  # prod_{r>s} a_r (inclusive of s+1..C)
+        upd = jnp.einsum("bcnh,bcs,bcn->bnhs", xb, bb, dec_from_s)
+        h_new = h * jnp.exp(tot[:, 0])[:, :, None, None] + upd
+        return h_new, y_inter + y_intra
+
+    h0 = jnp.zeros((B, nh, hd, ns), jnp.float32)
+    h_last, ys = jax.lax.scan(body, h0, (xdt_c, B_c, C_c, la_c))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nch * chunk, nh, hd)[:, :S]
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(B, S, d_in)
+    y = rmsnorm(p["norm"], (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype), cfg.norm_eps)
+    y = shard("act_ssm", y)
+    out_state = None
+    if return_state:
+        out_state = {**{k: v.astype(jnp.float32) for k, v in conv_state.items()},
+                     "ssm": h_last}
+    return y @ p["out_proj"], out_state
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int) -> dict:
+    d_in = cfg.ssm_expand * cfg.d_model
+    ns, hd = cfg.ssm_state, cfg.ssm_head_dim
+    nh = d_in // hd
+    return {
+        "conv_x": jnp.zeros((batch, 3, d_in), jnp.float32),
+        "conv_B": jnp.zeros((batch, 3, ns), jnp.float32),
+        "conv_C": jnp.zeros((batch, 3, ns), jnp.float32),
+        "ssm": jnp.zeros((batch, nh, hd, ns), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) — chunked wkv with data-dependent per-channel decay
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv6(rng, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dt = _dtype(cfg)
+    ks = jax.random.split(rng, 10)
+    s = 1.0 / np.sqrt(d)
+    lora = 64
+    f = cfg.d_ff
+    return {
+        "tm_norm": init_rmsnorm(d, dt),
+        "mix_rkvwg": 0.5 * jnp.ones((5, d), dt),  # token-shift mixes for r,k,v,w,g
+        "wr": _init(ks[0], (d, d), s, dt),
+        "wk": _init(ks[1], (d, d), s, dt),
+        "wv": _init(ks[2], (d, d), s, dt),
+        "wg": _init(ks[3], (d, d), s, dt),
+        "w_lora_a": _init(ks[4], (d, lora), s, dt),
+        "w_lora_b": _init(ks[5], (lora, d), 0.1 / np.sqrt(lora), dt),
+        "w_bias": -6.0 * jnp.ones((d,), jnp.float32),
+        "u_bonus": jnp.zeros((d,), jnp.float32),
+        "wo": _init(ks[6], (d, d), s / np.sqrt(2 * cfg.num_layers), dt),
+        "ln_x": init_rmsnorm(d, dt),
+        "cm_norm": init_rmsnorm(d, dt),
+        "mix_cm": 0.5 * jnp.ones((2, d), dt),
+        "cm_k": _init(ks[7], (d, f), s, dt),
+        "cm_v": _init(ks[8], (f, d), 1.0 / np.sqrt(f) / np.sqrt(2 * cfg.num_layers), dt),
+        "cm_r": _init(ks[9], (d, d), s, dt),
+    }
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]):
+    """Shifted sequence (x_{t-1}); prev (B,1,d) carries across decode steps."""
+    if prev is None:
+        shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        shifted = jnp.concatenate([prev.astype(x.dtype), x], axis=1)[:, :-1]
+    return shifted
+
+
+def wkv6_chunked(
+    r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array, u: jax.Array,
+    state: Optional[jax.Array] = None, chunk: int = 32,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked RWKV6 recurrence.
+
+    r,k,v (B,S,H,hd); logw (B,S,H,hd) per-channel log decay (<=0);
+    u (H,hd) bonus. Returns (o (B,S,H,hd), final state (B,H,hd,hd)).
+      S_t = diag(w_t) S_{t-1} + k_t^T v_t ;  o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+    All exponents are differences of cumulative sums with s<=t, hence <=0:
+    no overflow by construction (DESIGN.md kernels note).
+    """
+    B, S, H, hd = r.shape
+    nch = (S + chunk - 1) // chunk
+    pad = nch * chunk - S
+
+    def padc(a):
+        return jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    rc = padc(r.astype(jnp.float32)).reshape(B, nch, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    kc = padc(k.astype(jnp.float32)).reshape(B, nch, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    vc = padc(v.astype(jnp.float32)).reshape(B, nch, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    lw = padc(logw.astype(jnp.float32)).reshape(B, nch, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+
+    uf = u.astype(jnp.float32)
+
+    def body(Sst, blk):
+        rb, kb, vb, lwb = blk  # (B,C,H,hd)
+        C = rb.shape[1]
+        cum = jnp.cumsum(lwb, axis=1)  # inclusive cumsum of log w
+        cum_excl = cum - lwb  # exclusive: sum_{s<t}
+        # inter: o_t += (r_t * exp(cum_excl_t)) @ S_in   [(B,C,H,hd)x(B,H,hd,hd)]
+        r_dec = rb * jnp.exp(cum_excl)
+        o_inter = jnp.einsum("bchk,bhkv->bchv", r_dec, Sst)
+        # intra (s < t): D[t,s,:] = exp(cum_excl_t - cum_s); mask the exponent
+        # before exp so the s>=t branch cannot overflow into gradients.
+        Dm = cum_excl[:, :, None] - cum[:, None, :]  # (B,C,C,H,hd)
+        mask = jnp.arange(C)[:, None] > jnp.arange(C)[None, :]
+        Dm = jnp.exp(jnp.where(mask[None, :, :, None, None], Dm, -1e30))
+        att = jnp.einsum("bchk,bcshk,bshk->bcsh", rb, Dm, kb)
+        o_intra = jnp.einsum("bcsh,bshv->bchv", att, vb)
+        # current-token bonus
+        o_bonus = jnp.einsum("bchk,bchk,bchv->bchv", rb, kb * uf[None, None], vb)
+        # state update: S_out = diag(exp(cum_C)) S_in + sum_s diag(exp(cum_C-cum_s)) k_s^T v_s
+        tot = cum[:, -1]  # (B,H,hd)
+        k_dec = kb * jnp.exp(tot[:, None] - cum)
+        S_new = Sst * jnp.exp(tot)[..., None] + jnp.einsum("bshk,bshv->bhkv", k_dec, vb)
+        return S_new, o_inter + o_intra + o_bonus
+
+    S0 = (jnp.zeros((B, H, hd, hd), jnp.float32) if state is None else state.astype(jnp.float32))
+    S_fin, os = jax.lax.scan(body, S0, (rc, kc, vc, lw))
+    o = os.transpose(1, 0, 2, 3, 4).reshape(B, nch * chunk, H, hd)[:, :S]
+    return o, S_fin
+
+
+def rwkv6_time_mix(
+    p: dict, cfg: ModelConfig, x: jax.Array, *,
+    shard: ShardFn = _noshard, state: Optional[dict] = None, impl: str = "chunked",
+) -> tuple[jax.Array, Optional[dict]]:
+    B, S, d = x.shape
+    H, hd = cfg.num_heads, cfg.ssm_head_dim
+    prev = None if state is None else state["shift_tm"]
+    xs = _token_shift(x, prev)
+    mixes = p["mix_rkvwg"]
+    def mixed(i):
+        return x + (xs - x) * mixes[i]
+    r = (mixed(0) @ p["wr"]).reshape(B, S, H, hd)
+    k = (mixed(1) @ p["wk"]).reshape(B, S, H, hd)
+    v = (mixed(2) @ p["wv"]).reshape(B, S, H, hd)
+    w_in = mixed(3)
+    g = jax.nn.silu(mixed(4) @ p["wg"])
+    # data-dependent decay via LoRA; logw <= ~0, clamped for fp32 safety
+    w_raw = p["w_bias"] + ((w_in @ p["w_lora_a"]) @ p["w_lora_b"]).astype(jnp.float32)
+    logw = -jnp.exp(jnp.clip(w_raw, -20.0, 1.0))  # (B,S,d) in (-e, 0)
+    logw = jnp.clip(logw, -8.0, -1e-6).reshape(B, S, H, hd)
+    u = p["u_bonus"].reshape(H, hd)
+
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        o, S_fin = kops.rwkv6_wkv(r, k, v, logw, u, chunk=cfg.wkv_chunk,
+                                  state=None if state is None else state["wkv"])
+    else:
+        o, S_fin = wkv6_chunked(
+            r, k, v, logw, u, chunk=cfg.wkv_chunk,
+            state=None if state is None else state["wkv"]
+        )
+    o = rmsnorm(p["ln_x"], o.reshape(B, S, d).astype(x.dtype), cfg.norm_eps)
+    o = shard("act_ssm", o * g.astype(o.dtype))
+    out = o @ p["wo"]
+    new_state = None
+    if state is not None:
+        new_state = {**state, "shift_tm": x[:, -1:], "wkv": S_fin}
+    return out, new_state
+
+
+def rwkv6_channel_mix(
+    p: dict, cfg: ModelConfig, x: jax.Array, *,
+    shard: ShardFn = _noshard, state: Optional[dict] = None,
+) -> tuple[jax.Array, Optional[dict]]:
+    prev = None if state is None else state["shift_cm"]
+    xs = _token_shift(x, prev)
+    xk = x + (xs - x) * p["mix_cm"][0]
+    xr = x + (xs - x) * p["mix_cm"][1]
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    kk = shard("act_ff", kk)
+    out = jax.nn.sigmoid(xr @ p["cm_r"]) * (kk @ p["cm_v"])
+    new_state = None if state is None else {**state, "shift_cm": x[:, -1:]}
+    return out, new_state
+
+
+def init_rwkv6_state(cfg: ModelConfig, batch: int) -> dict:
+    H, hd = cfg.num_heads, cfg.ssm_head_dim
+    return {
+        "shift_tm": jnp.zeros((batch, 1, cfg.d_model), jnp.float32),
+        "shift_cm": jnp.zeros((batch, 1, cfg.d_model), jnp.float32),
+        "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32),
+    }

@@ -1,0 +1,644 @@
+"""Model assembly for all 10 assigned architectures.
+
+Entry points (all pure functions of (params, cfg, batch)):
+
+* ``forward_train``   — full-sequence forward + CE loss (train_4k cells)
+* ``forward_prefill`` — full-sequence forward returning last-token logits and a
+                        ``DecodeState`` (prefill_32k cells)
+* ``forward_decode``  — one-token step with cached state (decode/long cells)
+
+``DecodeState`` is a pytree: KV caches for attention archs, SSM/conv/shift
+states for mamba2/rwkv6, both for the hybrid. Layer stacks are scanned when
+``cfg.scan_layers`` (dense/moe/ssm/audio); the hybrid loops in Python because
+its layer sequence is heterogeneous (shared attention block every
+``hybrid_period`` Mamba2 layers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.utils import softmax_cross_entropy
+
+ShardFn = Callable[[str, jax.Array], jax.Array]
+PyTree = Any
+
+
+def _noshard(name: str, x: jax.Array) -> jax.Array:
+    return x
+
+
+class DecodeState(NamedTuple):
+    """All sequence state needed to emit the next token."""
+
+    pos: jax.Array  # scalar int32: #tokens already in the state
+    kv_k: Optional[jax.Array] = None  # (L_or_inv, B, Smax, nkv, hd)
+    kv_v: Optional[jax.Array] = None
+    ssm: Optional[PyTree] = None      # stacked per-layer ssm/shift/conv states
+    cross_k: Optional[jax.Array] = None  # whisper: (L, B, F, nkv, hd)
+    cross_v: Optional[jax.Array] = None
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _stack(trees: list) -> PyTree:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _hybrid_periods(cfg: ModelConfig) -> tuple[int, int]:
+    """(layers per period, number of periods) for the hybrid period scan."""
+    per = cfg.hybrid_period or cfg.num_layers
+    assert cfg.num_layers % per == 0, (cfg.num_layers, per)
+    return per, cfg.num_layers // per
+
+
+def _init_dense_layer(rng, cfg: ModelConfig, moe: bool) -> dict:
+    k1, k2 = jax.random.split(rng)
+    p = {
+        "norm1": L.init_rmsnorm(cfg.d_model, L._dtype(cfg)),
+        "attn": L.init_attention(k1, cfg),
+        "norm2": L.init_rmsnorm(cfg.d_model, L._dtype(cfg)),
+    }
+    if moe:
+        p["moe"] = L.init_moe(k2, cfg)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg)
+    return p
+
+
+def _init_decoder_xattn_layer(rng, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "norm1": L.init_rmsnorm(cfg.d_model, L._dtype(cfg)),
+        "attn": L.init_attention(k1, cfg),
+        "norm2": L.init_rmsnorm(cfg.d_model, L._dtype(cfg)),
+        "xattn": L.init_attention(k2, cfg, cross=True),
+        "norm3": L.init_rmsnorm(cfg.d_model, L._dtype(cfg)),
+        "mlp": L.init_mlp(k3, cfg),
+    }
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array, max_seq: int = 0) -> PyTree:
+    """Initialise the full parameter pytree for any family."""
+    dt = L._dtype(cfg)
+    keys = jax.random.split(rng, cfg.num_layers + cfg.encoder_layers + 8)
+    ki = iter(range(len(keys)))
+    emb_scale = 1.0 / np.sqrt(cfg.d_model)
+    params: dict = {
+        "embed": L._init(keys[next(ki)], (cfg.vocab_size, cfg.d_model), emb_scale, dt),
+        "final_norm": L.init_rmsnorm(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L._init(
+            keys[next(ki)], (cfg.d_model, cfg.vocab_size), emb_scale, dt
+        )
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        blocks = [_init_dense_layer(keys[next(ki)], cfg, False) for _ in range(cfg.num_layers)]
+        params["layers"] = _stack(blocks) if cfg.scan_layers else blocks
+    elif fam == "moe":
+        blocks = [_init_dense_layer(keys[next(ki)], cfg, True) for _ in range(cfg.num_layers)]
+        params["layers"] = _stack(blocks) if cfg.scan_layers else blocks
+    elif fam == "ssm":
+        blocks = [L.init_rwkv6(keys[next(ki)], cfg) for _ in range(cfg.num_layers)]
+        params["layers"] = _stack(blocks) if cfg.scan_layers else blocks
+    elif fam == "hybrid":
+        blocks = [
+            {"norm": L.init_rmsnorm(cfg.d_model, dt),
+             "mamba": L.init_mamba2(keys[next(ki)], cfg)}
+            for _ in range(cfg.num_layers)
+        ]
+        # stacked + scanned over periods (compile-time: 54 unrolled Mamba2
+        # blocks at 512 partitions is intractable; a period scan is not)
+        params["layers"] = _stack(blocks) if cfg.scan_layers else blocks
+        params["shared_block"] = _init_dense_layer(keys[next(ki)], cfg, False)
+    elif fam == "audio":
+        enc = [_init_dense_layer(keys[next(ki)], cfg, False) for _ in range(cfg.encoder_layers)]
+        dec = [_init_decoder_xattn_layer(keys[next(ki)], cfg) for _ in range(cfg.num_layers)]
+        params["enc_layers"] = _stack(enc) if cfg.scan_layers else enc
+        params["layers"] = _stack(dec) if cfg.scan_layers else dec
+        params["enc_norm"] = L.init_rmsnorm(cfg.d_model, dt)
+        params["enc_pos"] = L._init(keys[next(ki)], (cfg.encoder_seq, cfg.d_model), 0.02, dt)
+        n_pos = max(max_seq, 4096)
+        params["dec_pos"] = L._init(keys[next(ki)], (n_pos, cfg.d_model), 0.02, dt)
+    else:
+        raise ValueError(fam)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks (full-sequence)
+# ---------------------------------------------------------------------------
+
+
+def _dense_block(p, cfg, x, shard, causal=None):
+    x = x + L.attention_apply(p["attn"], cfg, L.rmsnorm(p["norm1"], x, cfg.norm_eps),
+                              shard=shard, causal=causal)
+    x = shard("act_btd", x)
+    x = x + L.mlp_apply(p["mlp"], cfg, L.rmsnorm(p["norm2"], x, cfg.norm_eps), shard=shard)
+    return shard("act_btd", x)
+
+
+def _moe_block(p, cfg, x, shard):
+    x = x + L.attention_apply(p["attn"], cfg, L.rmsnorm(p["norm1"], x, cfg.norm_eps), shard=shard)
+    x = shard("act_btd", x)
+    y, aux = L.moe_apply(p["moe"], cfg, L.rmsnorm(p["norm2"], x, cfg.norm_eps), shard=shard)
+    return shard("act_btd", x + y), aux
+
+
+def _rwkv_block(p, cfg, x, shard):
+    h, _ = L.rwkv6_time_mix(p, cfg, L.rmsnorm(p["tm_norm"], x, cfg.norm_eps), shard=shard)
+    x = shard("act_btd", x + h)
+    h, _ = L.rwkv6_channel_mix(p, cfg, L.rmsnorm(p["cm_norm"], x, cfg.norm_eps), shard=shard)
+    return shard("act_btd", x + h)
+
+
+def _xattn_block(p, cfg, x, enc_out, shard):
+    x = x + L.attention_apply(p["attn"], cfg, L.rmsnorm(p["norm1"], x, cfg.norm_eps),
+                              shard=shard, causal=True)
+    x = x + L.attention_apply(p["xattn"], cfg, L.rmsnorm(p["norm2"], x, cfg.norm_eps),
+                              shard=shard, kv_src=enc_out)
+    x = x + L.mlp_apply(p["mlp"], cfg, L.rmsnorm(p["norm3"], x, cfg.norm_eps), shard=shard)
+    return shard("act_btd", x)
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.nothing_saveable
+              if cfg.remat == "full"
+              else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _run_layer_stack(params, cfg: ModelConfig, x, block_fn, shard):
+    """Apply L homogeneous blocks, scanned or unrolled. block_fn(p, x) -> (x, aux)."""
+    def wrapped(x, p):
+        y, aux = block_fn(p, x)
+        return y, aux
+    wrapped = _maybe_remat(wrapped, cfg)
+    if cfg.scan_layers:
+        x, auxs = jax.lax.scan(lambda c, p: wrapped(c, p), x, params)
+        aux = jax.tree.map(lambda a: a.mean() if a.ndim else a, auxs) if auxs else {}
+        return x, aux
+    auxs = []
+    for p in params:
+        x, aux = wrapped(x, p)
+        if aux:
+            auxs.append(aux)
+    agg = {}
+    if auxs:
+        agg = jax.tree.map(lambda *xs: jnp.stack(xs).mean(), *auxs)
+    return x, agg
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill share the backbone)
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, cfg: ModelConfig, tokens, batch, shard):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.family == "vlm":
+        x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x], axis=1)
+    if cfg.family == "audio":
+        S = x.shape[1]
+        x = x + params["dec_pos"][:S][None]
+    return shard("act_btd", x)
+
+
+def _encoder(params, cfg: ModelConfig, frames, shard):
+    x = frames.astype(L._dtype(cfg)) + params["enc_pos"][None, : frames.shape[1]]
+    x, _ = _run_layer_stack(
+        params["enc_layers"], cfg, x,
+        lambda p, h: (_dense_block(p, cfg, h, shard, causal=False), {}), shard,
+    )
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _backbone(params, cfg: ModelConfig, x, batch, shard):
+    """(B,S,d) -> (B,S,d) plus aux dict."""
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return _run_layer_stack(
+            params["layers"], cfg, x,
+            lambda p, h: (_dense_block(p, cfg, h, shard), {}), shard)
+    if fam == "moe":
+        return _run_layer_stack(
+            params["layers"], cfg, x,
+            lambda p, h: _moe_block(p, cfg, h, shard), shard)
+    if fam == "ssm":
+        return _run_layer_stack(
+            params["layers"], cfg, x,
+            lambda p, h: (_rwkv_block(p, cfg, h, shard), {}), shard)
+    if fam == "hybrid":
+        blk = _maybe_remat(
+            lambda p, h: h + L.mamba2_mix(p["mamba"], cfg,
+                                          L.rmsnorm(p["norm"], h, cfg.norm_eps),
+                                          shard=shard)[0], cfg)
+        shared = _maybe_remat(lambda p, h: _dense_block(p, cfg, h, shard), cfg)
+        if cfg.scan_layers:
+            # scan over periods; each period = scan(period Mamba2 layers) +
+            # one shared-attention block (same weights every period)
+            per, n_per = _hybrid_periods(cfg)
+            layers_r = jax.tree.map(
+                lambda a: a.reshape((n_per, per) + a.shape[1:]), params["layers"])
+
+            def outer(h, pp):
+                h, _ = jax.lax.scan(
+                    lambda c, p: (shard("act_btd", blk(p, c)), None), h, pp)
+                return shared(params["shared_block"], h), None
+
+            x, _ = jax.lax.scan(outer, x, layers_r)
+            return x, {}
+        for i, p in enumerate(params["layers"]):
+            x = shard("act_btd", blk(p, x))
+            if cfg.hybrid_period and (i + 1) % cfg.hybrid_period == 0:
+                x = shared(params["shared_block"], x)
+        return x, {}
+    if fam == "audio":
+        enc_out = _encoder(params, cfg, batch["frames"], shard)
+        return _run_layer_stack(
+            params["layers"], cfg, x,
+            lambda p, h: (_xattn_block(p, cfg, h, enc_out, shard), {}), shard)
+    raise ValueError(fam)
+
+
+def _logits(params, cfg: ModelConfig, x, shard):
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = shard("logits", x @ w)
+    vt = cfg.vocab_true or cfg.vocab_size
+    if vt != cfg.vocab_size:  # mask padded vocab slots
+        mask = jnp.arange(cfg.vocab_size) < vt
+        logits = jnp.where(mask[None, None, :], logits, -1e9)
+    return logits
+
+
+def forward_train(
+    params: PyTree, cfg: ModelConfig, batch: dict, *, shard: ShardFn = _noshard,
+) -> tuple[jax.Array, dict]:
+    """CE loss over the batch. batch: tokens, labels, [mask, patch_embeds, frames]."""
+    x = _embed(params, cfg, batch["tokens"], batch, shard)
+    x, aux = _backbone(params, cfg, x, batch, shard)
+    logits = _logits(params, cfg, x, shard)
+    if cfg.family == "vlm":  # loss only over the text region
+        logits = logits[:, batch["patch_embeds"].shape[1]:]
+    ce = softmax_cross_entropy(logits, batch["labels"])
+    mask = batch.get("mask")
+    if mask is not None:
+        loss = (ce * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    else:
+        loss = ce.mean()
+    if "moe_lb_loss" in aux:
+        loss = loss + 0.01 * aux["moe_lb_loss"]
+    metrics = {"ce_loss": loss, **{k: v for k, v in aux.items()}}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int) -> DecodeState:
+    """Empty state sized for `max_seq` total positions."""
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    hd = cfg.resolved_head_dim
+    kv_k = kv_v = ssm = cross_k = cross_v = None
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe", "audio"):
+        n = cfg.num_layers
+        kv_k = jnp.zeros((n, batch, max_seq, cfg.num_kv_heads, hd), dt)
+        kv_v = jnp.zeros_like(kv_k)
+        if fam == "audio":
+            cross_k = jnp.zeros((n, batch, cfg.encoder_seq, cfg.num_kv_heads, hd), dt)
+            cross_v = jnp.zeros_like(cross_k)
+    elif fam == "ssm":
+        ssm = _stack([L.init_rwkv6_state(cfg, batch) for _ in range(cfg.num_layers)])
+    elif fam == "hybrid":
+        n_inv = cfg.num_layers // cfg.hybrid_period
+        kv_k = jnp.zeros((n_inv, batch, max_seq, cfg.num_kv_heads, hd), dt)
+        kv_v = jnp.zeros_like(kv_k)
+        ssm = _stack([L.init_mamba2_state(cfg, batch) for _ in range(cfg.num_layers)])
+    return DecodeState(pos=jnp.zeros((), jnp.int32), kv_k=kv_k, kv_v=kv_v,
+                       ssm=ssm, cross_k=cross_k, cross_v=cross_v)
+
+
+def forward_prefill(
+    params: PyTree, cfg: ModelConfig, batch: dict, max_seq: int, *,
+    shard: ShardFn = _noshard,
+) -> tuple[jax.Array, DecodeState]:
+    """Run the full prompt, return last-position logits + a primed DecodeState.
+
+    The dry-run lowers this for prefill_32k cells. KV extraction recomputes
+    K/V projections per layer (cheap relative to the backbone, keeps the
+    chunked-attention fast path untouched).
+    """
+    B, S = batch["tokens"].shape
+    x = _embed(params, cfg, batch["tokens"], batch, shard)
+    state = init_decode_state(cfg, B, max_seq)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "moe", "audio"):
+        enc_out = _encoder(params, cfg, batch["frames"], shard) if fam == "audio" else None
+        hd = cfg.resolved_head_dim
+        pos = jnp.arange(x.shape[1])
+
+        def kv_of(p, h):
+            src = L.rmsnorm(p["norm1"], h, cfg.norm_eps)
+            k = (src @ p["attn"]["wk"]).reshape(B, -1, cfg.num_kv_heads, hd)
+            v = (src @ p["attn"]["wv"]).reshape(B, -1, cfg.num_kv_heads, hd)
+            if "bk" in p["attn"]:
+                k = k + p["attn"]["bk"].reshape(1, 1, cfg.num_kv_heads, hd)
+                v = v + p["attn"]["bv"].reshape(1, 1, cfg.num_kv_heads, hd)
+            k = L.apply_rope(k, pos, cfg.rope_theta)
+            return k, v
+
+        def blk(p, h):
+            k, v = kv_of(p, h)
+            if fam == "moe":
+                h, aux = _moe_block(p, cfg, h, shard)
+            elif fam == "audio":
+                h = _xattn_block(p, cfg, h, enc_out, shard)
+            else:
+                h = _dense_block(p, cfg, h, shard)
+            return h, (k, v)
+
+        blk = _maybe_remat(blk, cfg)
+        if cfg.scan_layers:
+            x, (ks, vs) = jax.lax.scan(lambda c, p: blk(p, c), x, params["layers"])
+        else:
+            ks, vs = [], []
+            for p in params["layers"]:
+                x, (k, v) = blk(p, x)
+                ks.append(k); vs.append(v)
+            ks, vs = jnp.stack(ks), jnp.stack(vs)
+        Sp = x.shape[1]
+        kv_k = jax.lax.dynamic_update_slice_in_dim(state.kv_k, ks.astype(state.kv_k.dtype), 0, axis=2)
+        kv_v = jax.lax.dynamic_update_slice_in_dim(state.kv_v, vs.astype(state.kv_v.dtype), 0, axis=2)
+        cross_k = cross_v = None
+        if fam == "audio":
+            # cross K/V from encoder output per layer
+            def cross_kv(p):
+                k = (enc_out @ p["xattn"]["wk"]).reshape(B, -1, cfg.num_kv_heads, hd)
+                v = (enc_out @ p["xattn"]["wv"]).reshape(B, -1, cfg.num_kv_heads, hd)
+                return k, v
+            if cfg.scan_layers:
+                cks, cvs = jax.vmap(cross_kv)(params["layers"])
+            else:
+                pairs = [cross_kv(p) for p in params["layers"]]
+                cks = jnp.stack([a for a, _ in pairs]); cvs = jnp.stack([b for _, b in pairs])
+            cross_k, cross_v = cks.astype(state.kv_k.dtype), cvs.astype(state.kv_v.dtype)
+        state = state._replace(pos=jnp.asarray(Sp, jnp.int32), kv_k=kv_k, kv_v=kv_v,
+                               cross_k=cross_k, cross_v=cross_v)
+        logits = _logits(params, cfg, x[:, -1:], shard)
+        return logits, state
+
+    if fam == "ssm":
+        # run chunked wkv over the prompt, capturing final states per layer
+        def blk(carry_x, p):
+            h = carry_x
+            hn = L.rmsnorm(p["tm_norm"], h, cfg.norm_eps)
+            st0 = L.init_rwkv6_state(cfg, B)
+            o, st = L.rwkv6_time_mix(p, cfg, hn, shard=shard, state=st0)
+            h = h + o
+            hn = L.rmsnorm(p["cm_norm"], h, cfg.norm_eps)
+            o, st = L.rwkv6_channel_mix(p, cfg, hn, shard=shard,
+                                        state={**st, "shift_cm": st0["shift_cm"]})
+            return h + o, st
+        if cfg.scan_layers:
+            x, states = jax.lax.scan(lambda c, p: blk(c, p), x, params["layers"])
+        else:
+            sts = []
+            for p in params["layers"]:
+                x, st = blk(x, p)
+                sts.append(st)
+            states = _stack(sts)
+        state = state._replace(pos=jnp.asarray(S, jnp.int32), ssm=states)
+        return _logits(params, cfg, x[:, -1:], shard), state
+
+    if fam == "hybrid":
+        # mamba2_mix returns its final state directly (no recompute)
+        hd = cfg.resolved_head_dim
+        pos = jnp.arange(x.shape[1])
+        sp = params["shared_block"]
+
+        def shared_kv(h):
+            src = L.rmsnorm(sp["norm1"], h, cfg.norm_eps)
+            k = (src @ sp["attn"]["wk"]).reshape(B, -1, cfg.num_kv_heads, hd)
+            v = (src @ sp["attn"]["wv"]).reshape(B, -1, cfg.num_kv_heads, hd)
+            return L.apply_rope(k, pos, cfg.rope_theta), v
+
+        if cfg.scan_layers:
+            per, n_per = _hybrid_periods(cfg)
+            layers_r = jax.tree.map(
+                lambda a: a.reshape((n_per, per) + a.shape[1:]), params["layers"])
+
+            def inner(h, p):
+                hn = L.rmsnorm(p["norm"], h, cfg.norm_eps)
+                y, mst = L.mamba2_mix(p["mamba"], cfg, hn, shard=shard,
+                                      return_state=True)
+                return shard("act_btd", h + y), mst
+
+            def outer(h, pp):
+                h, msts = jax.lax.scan(inner, h, pp)
+                k, v = shared_kv(h)
+                h = _dense_block(sp, cfg, h, shard)
+                return h, (msts, k, v)
+
+            x, (m_states_r, ks, vs) = jax.lax.scan(outer, x, layers_r)
+            m_states = jax.tree.map(
+                lambda a: a.reshape((n_per * per,) + a.shape[2:]), m_states_r)
+        else:
+            kv_ks, kv_vs, m_list = [], [], []
+            for i, p in enumerate(params["layers"]):
+                hn = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+                y, mst = L.mamba2_mix(p["mamba"], cfg, hn, shard=shard,
+                                      return_state=True)
+                m_list.append(mst)
+                x = shard("act_btd", x + y)
+                if cfg.hybrid_period and (i + 1) % cfg.hybrid_period == 0:
+                    k, v = shared_kv(x)
+                    kv_ks.append(k)
+                    kv_vs.append(v)
+                    x = _dense_block(sp, cfg, x, shard)
+            ks, vs = jnp.stack(kv_ks), jnp.stack(kv_vs)
+            m_states = _stack(m_list)
+        kv_k = jax.lax.dynamic_update_slice_in_dim(state.kv_k, ks.astype(state.kv_k.dtype), 0, axis=2)
+        kv_v = jax.lax.dynamic_update_slice_in_dim(state.kv_v, vs.astype(state.kv_v.dtype), 0, axis=2)
+        state = state._replace(pos=jnp.asarray(S, jnp.int32), kv_k=kv_k, kv_v=kv_v,
+                               ssm=m_states)
+        return _logits(params, cfg, x[:, -1:], shard), state
+    raise ValueError(fam)
+
+
+def forward_decode(
+    params: PyTree, cfg: ModelConfig, tokens: jax.Array, state: DecodeState, *,
+    shard: ShardFn = _noshard,
+) -> tuple[jax.Array, DecodeState]:
+    """One greedy-decode step. tokens (B,1) int32 -> logits (B,1,V), new state."""
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.family == "audio":
+        x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], state.pos, 1)[None]
+    x = shard("act_btd_dec", x)
+    pos = state.pos
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "moe", "audio"):
+        def blk(h, p, ck, cv, xk=None, xv=None):
+            o, ck, cv = L.attention_decode(
+                p["attn"], cfg, L.rmsnorm(p["norm1"], h, cfg.norm_eps), ck, cv, pos,
+                shard=shard)
+            h = h + o
+            if fam == "audio":
+                q = L.rmsnorm(p["norm2"], h, cfg.norm_eps)
+                o = _cross_decode(p["xattn"], cfg, q, xk, xv)
+                h = h + o
+                h = h + L.mlp_apply(p["mlp"], cfg, L.rmsnorm(p["norm3"], h, cfg.norm_eps), shard=shard)
+            elif fam == "moe":
+                # decode: group over the whole batch (1 group of B tokens) so
+                # expert capacity amortises across the batch, not per-row.
+                hn = L.rmsnorm(p["norm2"], h, cfg.norm_eps).transpose(1, 0, 2)
+                y, _ = L.moe_apply(p["moe"], cfg, hn, shard=shard)
+                h = h + y.transpose(1, 0, 2)
+            else:
+                h = h + L.mlp_apply(p["mlp"], cfg, L.rmsnorm(p["norm2"], h, cfg.norm_eps), shard=shard)
+            return h, ck, cv
+
+        if cfg.scan_layers:
+            xs = (params["layers"], state.kv_k, state.kv_v)
+            if fam == "audio":
+                xs = xs + (state.cross_k, state.cross_v)
+
+            def scan_body(h, ps):
+                if fam == "audio":
+                    p, ck, cv, xk, xv = ps
+                    h, ck, cv = blk(h, p, ck, cv, xk, xv)
+                else:
+                    p, ck, cv = ps
+                    h, ck, cv = blk(h, p, ck, cv)
+                return h, (ck, cv)
+
+            x, (nk, nv) = jax.lax.scan(scan_body, x, xs)
+        else:
+            nks, nvs = [], []
+            for i, p in enumerate(params["layers"]):
+                args = (state.cross_k[i], state.cross_v[i]) if fam == "audio" else ()
+                x, ck, cv = blk(x, p, state.kv_k[i], state.kv_v[i], *args)
+                nks.append(ck); nvs.append(cv)
+            nk, nv = jnp.stack(nks), jnp.stack(nvs)
+        new_state = state._replace(pos=pos + 1, kv_k=nk, kv_v=nv)
+        return _logits(params, cfg, x, shard), new_state
+
+    if fam == "ssm":
+        def blk(h, p, st):
+            o, st2 = L.rwkv6_time_mix(p, cfg, L.rmsnorm(p["tm_norm"], h, cfg.norm_eps),
+                                      shard=shard, state=st)
+            h = h + o
+            o, st3 = L.rwkv6_channel_mix(p, cfg, L.rmsnorm(p["cm_norm"], h, cfg.norm_eps),
+                                         shard=shard, state=st2)
+            return h + o, st3
+        if cfg.scan_layers:
+            def scan_body(h, ps):
+                p, st = ps
+                h, st = blk(h, p, st)
+                return h, st
+            x, new_ssm = jax.lax.scan(scan_body, x, (params["layers"], state.ssm))
+        else:
+            sts = []
+            for i, p in enumerate(params["layers"]):
+                st_i = jax.tree.map(lambda a: a[i], state.ssm)
+                x, st = blk(x, p, st_i)
+                sts.append(st)
+            new_ssm = _stack(sts)
+        return _logits(params, cfg, x, shard), state._replace(pos=pos + 1, ssm=new_ssm)
+
+    if fam == "hybrid":
+        sp = params["shared_block"]
+
+        def mamba_step(h, p, st):
+            y, st2 = L.mamba2_mix(p["mamba"], cfg,
+                                  L.rmsnorm(p["norm"], h, cfg.norm_eps),
+                                  shard=shard, state=st)
+            return h + y, st2
+
+        def shared_step(h, ck, cv):
+            o, ck, cv = L.attention_decode(
+                sp["attn"], cfg, L.rmsnorm(sp["norm1"], h, cfg.norm_eps),
+                ck, cv, pos, shard=shard)
+            h = h + o
+            h = h + L.mlp_apply(sp["mlp"], cfg,
+                                L.rmsnorm(sp["norm2"], h, cfg.norm_eps), shard=shard)
+            return h, ck, cv
+
+        if cfg.scan_layers:
+            per, n_per = _hybrid_periods(cfg)
+            reshape_p = lambda a: a.reshape((n_per, per) + a.shape[1:])
+            layers_r = jax.tree.map(reshape_p, params["layers"])
+            ssm_r = jax.tree.map(reshape_p, state.ssm)
+
+            def outer(h, inputs):
+                pp, st, ck, cv = inputs
+
+                def inner(c, ps):
+                    p, s = ps
+                    return mamba_step(c, p, s)
+
+                h, new_st = jax.lax.scan(inner, h, (pp, st))
+                h, ck, cv = shared_step(h, ck, cv)
+                return h, (new_st, ck, cv)
+
+            x, (new_ssm_r, nk, nv) = jax.lax.scan(
+                outer, x, (layers_r, ssm_r, state.kv_k, state.kv_v))
+            new_ssm = jax.tree.map(
+                lambda a: a.reshape((n_per * per,) + a.shape[2:]), new_ssm_r)
+        else:
+            new_m, nks, nvs = [], [], []
+            inv = 0
+            for i, p in enumerate(params["layers"]):
+                st_i = jax.tree.map(lambda a: a[i], state.ssm)
+                x, st = mamba_step(x, p, st_i)
+                new_m.append(st)
+                if cfg.hybrid_period and (i + 1) % cfg.hybrid_period == 0:
+                    x, ck, cv = shared_step(x, state.kv_k[inv], state.kv_v[inv])
+                    nks.append(ck); nvs.append(cv)
+                    inv += 1
+            nk, nv = jnp.stack(nks), jnp.stack(nvs)
+            new_ssm = _stack(new_m)
+        new_state = state._replace(pos=pos + 1, kv_k=nk, kv_v=nv, ssm=new_ssm)
+        return _logits(params, cfg, x, shard), new_state
+    raise ValueError(fam)
+
+
+def _cross_decode(p, cfg: ModelConfig, q_in, xk, xv):
+    """Cross-attention for a single decoder position against cached encoder K/V."""
+    B = q_in.shape[0]
+    hd = cfg.resolved_head_dim
+    q = (q_in @ p["wq"]).reshape(B, 1, cfg.num_heads, hd)
+    o = L.attention_core(q, xk.astype(q.dtype), xv.astype(q.dtype),
+                         causal=False, chunk=512, impl="chunked")
+    return o.reshape(B, 1, -1) @ p["wo"]
+
+
+def build_model(cfg: ModelConfig):
+    """Convenience bundle used by the engine/launchers."""
+    return {
+        "init": partial(init_params, cfg),
+        "train": partial(forward_train, cfg=cfg),
+        "prefill": partial(forward_prefill, cfg=cfg),
+        "decode": partial(forward_decode, cfg=cfg),
+        "init_state": partial(init_decode_state, cfg),
+    }

@@ -1,0 +1,19 @@
+from repro.monitoring.metrics import (
+    DRIVER_METRICS,
+    METRIC_NAMES,
+    REGISTRY,
+    WORKER_METRICS,
+    MetricDef,
+    TimeSeriesStore,
+    build_registry,
+)
+
+__all__ = [
+    "DRIVER_METRICS",
+    "METRIC_NAMES",
+    "REGISTRY",
+    "WORKER_METRICS",
+    "MetricDef",
+    "TimeSeriesStore",
+    "build_registry",
+]

@@ -1,0 +1,182 @@
+"""90-metric registry + per-node time-series store (paper §2.1/§2.2 substrate).
+
+The paper collects 90 metrics/min/node from dstat/JVM/perf on Spark clusters.
+Our engine's equivalents are TPU-pod metrics: latency percentiles, queue
+state, device compute/memory/collective utilisation, host overheads, compile
+cache stats, padding waste, checkpoint/fault counters, power.
+
+Each metric declares:
+  * scope   — 'driver' (engine coordinator) or 'worker' (per device/host)
+  * group   — its latent redundancy group. The SimCluster emits metrics as
+              (loading · latent) + noise, so FA + k-means has real structure
+              to recover (the paper found 7 clusters over ~90 metrics, Fig 2);
+  * loading — weights over the latent factor vector.
+
+Latent factors (ground truth the sim uses; FA should approximately recover
+them): load, compute, memory, network, host, efficiency, reliability, power.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+FACTORS = ("load", "compute", "memory", "network", "host",
+           "efficiency", "reliability", "power")
+
+
+@dataclass(frozen=True)
+class MetricDef:
+    name: str
+    scope: str                      # driver | worker
+    group: str                      # human label (cluster family)
+    loading: dict = field(default_factory=dict)  # factor -> weight
+    scale: float = 1.0              # output units scale
+    noise: float = 0.05             # relative iid noise
+    bias: float = 0.0
+
+    def value(self, latents: dict, rng: np.random.Generator) -> float:
+        v = self.bias + sum(latents.get(f, 0.0) * w for f, w in self.loading.items())
+        return float(self.scale * v * (1.0 + self.noise * rng.standard_normal()))
+
+
+def _m(name, scope, group, loading, scale=1.0, noise=0.05, bias=0.0):
+    return MetricDef(name, scope, group, loading, scale, noise, bias)
+
+
+def build_registry() -> list[MetricDef]:
+    L = []
+    # -- latency family (driver, 7) — dominated by 'load' -------------------
+    for nm, s in [("latency_mean_ms", 1.0), ("latency_p50_ms", 0.8),
+                  ("latency_p95_ms", 1.6), ("latency_p99_ms", 2.0),
+                  ("latency_max_ms", 3.0), ("event_wait_ms", 0.7),
+                  ("batch_service_ms", 0.5)]:
+        L.append(_m(nm, "driver", "latency", {"load": 1.0, "compute": 0.15}, s))
+    # -- throughput family (driver, 6) ---------------------------------------
+    for nm, ld in [("events_per_s", {"load": -0.2, "compute": 1.0}),
+                   ("batches_per_s", {"compute": 1.0}),
+                   ("tokens_per_s", {"compute": 1.0, "efficiency": 0.3}),
+                   ("bytes_in_mb_s", {"load": 1.0}),
+                   ("bytes_out_mb_s", {"load": 0.9, "efficiency": 0.1}),
+                   ("sink_commit_s", {"host": 0.8, "load": 0.3})]:
+        L.append(_m(nm, "driver", "throughput", ld))
+    # -- queue state (driver, 6) ------------------------------------------------
+    for nm in ["queue_depth", "queue_age_ms", "buffer_bytes_mb",
+               "drop_count", "replay_count", "backlog_batches"]:
+        L.append(_m(nm, "driver", "queue", {"load": 1.2, "reliability": 0.2}))
+    # -- device compute (worker, 7) ----------------------------------------------
+    for nm, ld in [("device_util", {"compute": 1.0}),
+                   ("mxu_util", {"compute": 1.0, "efficiency": 0.4}),
+                   ("flops_rate_tflops", {"compute": 1.0, "efficiency": 0.3}),
+                   ("vpu_util", {"compute": 0.8}),
+                   ("kernel_occupancy", {"compute": 0.9, "efficiency": 0.3}),
+                   ("step_time_ms", {"load": 0.5, "compute": 0.6}),
+                   ("compute_stall_frac", {"memory": 0.7, "network": 0.4})]:
+        L.append(_m(nm, "worker", "compute", ld))
+    # -- HBM / memory (worker, 7) ---------------------------------------------------
+    for nm, ld in [("hbm_used_gb", {"memory": 1.0}),
+                   ("hbm_peak_gb", {"memory": 1.1}),
+                   ("hbm_bw_util", {"memory": 0.9, "compute": 0.3}),
+                   ("vmem_spill_bytes", {"memory": 1.3}),
+                   ("alloc_fragmentation", {"memory": 0.8, "host": 0.2}),
+                   ("allocator_arena_mb", {"memory": 0.7}),
+                   ("oom_retries", {"memory": 1.5, "reliability": 0.5})]:
+        L.append(_m(nm, "worker", "memory", ld))
+    # -- host (worker, 7) -----------------------------------------------------------
+    for nm in ["host_cpu_util", "host_mem_gb", "host_io_wait",
+               "callback_overhead_ms", "transfer_stall_ms", "infeed_wait_ms",
+               "outfeed_wait_ms"]:
+        L.append(_m(nm, "worker", "host", {"host": 1.0, "load": 0.2}))
+    # -- collective / network (worker, 7) ----------------------------------------------
+    for nm in ["ici_bw_util", "allreduce_ms", "allgather_ms",
+               "collective_wait_ms", "network_rx_mb_s", "network_tx_mb_s",
+               "permute_ms"]:
+        L.append(_m(nm, "worker", "network", {"network": 1.0, "compute": 0.1}))
+    # -- jit / compile cache (driver, 6) ---------------------------------------------
+    for nm, ld in [("jit_compiles", {"reliability": 0.6, "host": 0.5}),
+                   ("jit_time_s", {"host": 0.9}),
+                   ("cache_hits", {"host": -0.3, "efficiency": 0.5}),
+                   ("cache_misses", {"host": 0.7}),
+                   ("recompile_count", {"reliability": 0.8}),
+                   ("dispatch_overhead_ms", {"host": 0.8, "load": 0.2})]:
+        L.append(_m(nm, "driver", "jit", ld))
+    # -- padding / efficiency (worker, 6) -------------------------------------------------
+    for nm, ld in [("padding_waste_frac", {"efficiency": -1.0}),
+                   ("batch_fill_frac", {"efficiency": 1.0, "load": 0.3}),
+                   ("useful_flops_frac", {"efficiency": 1.0}),
+                   ("remat_recompute_frac", {"efficiency": -0.7, "memory": -0.4}),
+                   ("moe_drop_frac", {"efficiency": -0.8, "load": 0.3}),
+                   ("moe_imbalance", {"efficiency": -0.6})]:
+        L.append(_m(nm, "worker", "efficiency", ld))
+    # -- checkpoint / fault tolerance (driver, 6) -------------------------------------------
+    for nm in ["ckpt_write_s", "ckpt_bytes_gb", "restore_count",
+               "failure_count", "straggler_events", "rescale_events"]:
+        L.append(_m(nm, "driver", "reliability", {"reliability": 1.0}))
+    # -- allocator churn / host sync, the GC analogue (worker, 5) -------------------------------
+    for nm in ["host_sync_stall_ms", "donation_miss_count", "buffer_churn_mb_s",
+               "live_buffers", "compaction_ms"]:
+        L.append(_m(nm, "worker", "gc", {"memory": 0.8, "host": 0.6}))
+    # -- power / thermal (worker, 4) -----------------------------------------------------------
+    for nm in ["chip_power_w", "chip_temp_c", "throttle_events", "duty_cycle"]:
+        L.append(_m(nm, "worker", "power", {"power": 1.0, "compute": 0.6}))
+    # -- scheduler (worker, 6) ---------------------------------------------------------------------
+    for nm in ["sched_queue_depth", "prefetch_depth_eff", "batch_form_ms",
+               "dispatch_queue_ms", "task_retries", "work_steal_count"]:
+        L.append(_m(nm, "worker", "scheduler", {"load": 0.9, "host": 0.3}))
+    # -- pure-noise daemons (mixed, 10): constant or uncorrelated — the 10 %
+    #    the variance filter should drop / FA should isolate -----------------------
+    for nm, scope in [("clock_skew_ms", "worker"), ("ntp_drift_ms", "worker"),
+                      ("daemon_cpu_frac", "worker"), ("log_rate_lines_s", "driver"),
+                      ("fd_count", "driver"), ("uptime_s", "driver"),
+                      ("heartbeat_lag_ms", "worker"), ("container_restarts", "driver"),
+                      ("disk_used_frac", "worker"), ("inode_used_frac", "worker")]:
+        const = nm in ("uptime_s", "fd_count", "disk_used_frac", "inode_used_frac",
+                       "container_restarts")
+        L.append(_m(nm, scope, "noise", {}, noise=0.0 if const else 1.0,
+                    bias=1.0 if const else 0.0))
+    assert len(L) == 90, len(L)
+    return L
+
+
+REGISTRY: list[MetricDef] = build_registry()
+METRIC_NAMES: list[str] = [m.name for m in REGISTRY]
+DRIVER_METRICS = [m.name for m in REGISTRY if m.scope == "driver"]
+WORKER_METRICS = [m.name for m in REGISTRY if m.scope == "worker"]
+
+
+class TimeSeriesStore:
+    """Per-node ring buffer of metric samples: (t, node, metric) -> value."""
+
+    def __init__(self, names: Sequence[str], n_nodes: int, capacity: int = 4096):
+        self.names = list(names)
+        self.index = {n: i for i, n in enumerate(self.names)}
+        self.n_nodes = n_nodes
+        self.capacity = capacity
+        self._t = np.zeros(capacity)
+        self._v = np.full((capacity, n_nodes, len(self.names)), np.nan)
+        self._head = 0
+        self._count = 0
+
+    def append(self, t: float, values: np.ndarray) -> None:
+        """values (n_nodes, n_metrics)."""
+        self._t[self._head] = t
+        self._v[self._head] = values
+        self._head = (self._head + 1) % self.capacity
+        self._count = min(self._count + 1, self.capacity)
+
+    def window(self, seconds: float, now: float) -> np.ndarray:
+        """(samples, n_nodes, n_metrics) for t in [now-seconds, now]."""
+        if self._count == 0:
+            return np.zeros((0, self.n_nodes, len(self.names)))
+        idx = (self._head - np.arange(1, self._count + 1)) % self.capacity
+        sel = idx[self._t[idx] >= now - seconds]
+        return self._v[sel[::-1]]
+
+    def node_average(self, seconds: float, now: float) -> dict[str, np.ndarray]:
+        """metric -> (n_nodes,) mean over the window (heat-map input)."""
+        w = self.window(seconds, now)
+        if w.shape[0] == 0:
+            return {n: np.zeros(self.n_nodes) for n in self.names}
+        avg = np.nanmean(w, axis=0)  # (nodes, metrics)
+        return {n: avg[:, self.index[n]] for n in self.names}

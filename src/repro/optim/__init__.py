@@ -1,0 +1,3 @@
+from repro.optim.optimizers import Optimizer, adamw, rmsprop, sgd, clip_by_global_norm
+
+__all__ = ["Optimizer", "adamw", "rmsprop", "sgd", "clip_by_global_norm"]

@@ -1,0 +1,129 @@
+"""Optimizers in pure JAX (no optax in the container — and the paper's RL
+configurator itself uses rmsprop(lr=1e-3), so we need our own anyway).
+
+``moment_dtype`` makes optimizer-state precision a framework lever: grok-1-314b
+only fits a 256×16 GB pod with bf16 moments (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import global_norm
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+    name: str
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads)
+
+
+def _cast_like(new, old):
+    return jax.tree.map(lambda n, o: n.astype(o.dtype), new, old)
+
+
+def rmsprop(
+    lr: float = 1e-3,
+    decay: float = 0.9,
+    eps: float = 1e-8,
+    moment_dtype: str = "float32",
+    grad_clip: float = 0.0,
+) -> Optimizer:
+    """Classic rmsprop — the paper's policy-network optimizer (§3)."""
+    mdt = jnp.dtype(moment_dtype)
+
+    def init(params):
+        return {"nu": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        if grad_clip:
+            grads = clip_by_global_norm(grads, grad_clip)
+        nu = jax.tree.map(
+            lambda n, g: (decay * n.astype(jnp.float32)
+                          + (1 - decay) * jnp.square(g.astype(jnp.float32))).astype(mdt),
+            state["nu"], grads)
+        new_params = jax.tree.map(
+            lambda p, g, n: (p.astype(jnp.float32)
+                             - lr * g.astype(jnp.float32)
+                             / (jnp.sqrt(n.astype(jnp.float32)) + eps)).astype(p.dtype),
+            params, grads, nu)
+        return new_params, {"nu": nu, "count": state["count"] + 1}
+
+    return Optimizer(init, update, "rmsprop")
+
+
+def adamw(
+    lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    moment_dtype: str = "float32",
+    grad_clip: float = 1.0,
+) -> Optimizer:
+    mdt = jnp.dtype(moment_dtype)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, mdt)
+        return {"mu": jax.tree.map(z, params), "nu": jax.tree.map(z, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        if grad_clip:
+            grads = clip_by_global_norm(grads, grad_clip)
+        cnt = state["count"] + 1
+        mu = jax.tree.map(
+            lambda m, g: (b1 * m.astype(jnp.float32)
+                          + (1 - b1) * g.astype(jnp.float32)).astype(mdt),
+            state["mu"], grads)
+        nu = jax.tree.map(
+            lambda n, g: (b2 * n.astype(jnp.float32)
+                          + (1 - b2) * jnp.square(g.astype(jnp.float32))).astype(mdt),
+            state["nu"], grads)
+        c1 = 1.0 - b1 ** cnt.astype(jnp.float32)
+        c2 = 1.0 - b2 ** cnt.astype(jnp.float32)
+
+        def step(p, m, n):
+            mh = m.astype(jnp.float32) / c1
+            nh = n.astype(jnp.float32) / c2
+            upd = mh / (jnp.sqrt(nh) + eps)
+            if p.ndim >= 2 and weight_decay:  # decay matrices only
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+        new_params = jax.tree.map(step, params, mu, nu)
+        return new_params, {"mu": mu, "nu": nu, "count": cnt}
+
+    return Optimizer(init, update, "adamw")
+
+
+def sgd(lr: float = 1e-2, momentum: float = 0.9, grad_clip: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p), params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        if grad_clip:
+            grads = clip_by_global_norm(grads, grad_clip)
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype),
+                          state["mu"], grads)
+        new_params = jax.tree.map(lambda p, m: (p - lr * m).astype(p.dtype), params, mu)
+        return new_params, {"mu": mu, "count": state["count"] + 1}
+
+    return Optimizer(init, update, "sgd")
+
+
+def get(name: str, **kw) -> Optimizer:
+    return {"rmsprop": rmsprop, "adamw": adamw, "sgd": sgd}[name](**kw)

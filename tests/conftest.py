@@ -1,0 +1,10 @@
+import os
+import sys
+
+# tests run with PYTHONPATH=src, but make it robust for bare `pytest` too
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+# NOTE: never set XLA_FLAGS device-count forcing here — smoke tests and benches
+# must see exactly 1 device; only launch/dryrun.py forces 512 (see system design).

@@ -1,0 +1,93 @@
+"""Checkpointing: atomic sharded save/restore, async, GC, reshard-on-restore."""
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointStore
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.normal(0, 1, (8, 4)), jnp.float32),
+                   "layers": [jnp.ones((3,)), jnp.zeros((2, 2))]},
+        "opt": {"mu": {"w": jnp.full((8, 4), 0.5)}, "count": jnp.asarray(7)},
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    store = CheckpointStore(tmp_path)
+    t = _tree()
+    store.save(10, t, extra={"note": "hello"})
+    restored, step, extra = store.restore(jax.tree.map(lambda x: x, t))
+    assert step == 10 and extra == {"note": "hello"}
+    for a, b in zip(jax.tree_util.tree_leaves(t), jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_then_wait(tmp_path):
+    store = CheckpointStore(tmp_path)
+    store.save_async(1, _tree(1))
+    store.wait()
+    assert store.latest_step() == 1
+
+
+def test_gc_keeps_last_k(tmp_path):
+    store = CheckpointStore(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        store.save(s, _tree(s))
+    assert store.all_steps() == [3, 4]
+
+
+def test_torn_tmp_dirs_are_garbage_collected(tmp_path):
+    store = CheckpointStore(tmp_path)
+    torn = tmp_path / ".tmp-99"
+    torn.mkdir()
+    (torn / "leaf_00000.npy").write_bytes(b"garbage")
+    store.save(5, _tree())
+    assert not torn.exists()
+    assert store.latest_step() == 5
+
+
+def test_restore_latest_and_specific(tmp_path):
+    store = CheckpointStore(tmp_path)
+    store.save(1, {"x": jnp.asarray(1.0)})
+    store.save(2, {"x": jnp.asarray(2.0)})
+    t, step, _ = store.restore({"x": jnp.asarray(0.0)})
+    assert step == 2 and float(t["x"]) == 2.0
+    t, step, _ = store.restore({"x": jnp.asarray(0.0)}, step=1)
+    assert step == 1 and float(t["x"]) == 1.0
+
+
+def test_restore_with_shardings_resharding_path(tmp_path):
+    """Elastic restore: leaves are placed with the CURRENT mesh sharding."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    store = CheckpointStore(tmp_path)
+    t = {"w": jnp.arange(16.0).reshape(4, 4)}
+    store.save(3, t)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = {"w": NamedSharding(mesh, P(None, None))}
+    restored, step, _ = store.restore({"w": t["w"]}, shardings=sh)
+    assert step == 3
+    assert restored["w"].sharding.is_equivalent_to(sh["w"], 2)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(t["w"]))
+
+
+def test_missing_checkpoint_raises(tmp_path):
+    store = CheckpointStore(tmp_path)
+    with pytest.raises(FileNotFoundError):
+        store.restore({"x": jnp.asarray(0.0)})
+
+
+def test_manifest_is_valid_json_with_leaf_metadata(tmp_path):
+    store = CheckpointStore(tmp_path)
+    store.save(4, _tree())
+    man = json.loads((tmp_path / "step_00000004" / "manifest.json").read_text())
+    assert man["step"] == 4
+    leaf = next(iter(man["leaves"].values()))
+    assert set(leaf) == {"file", "shape", "dtype"}

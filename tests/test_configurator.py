@@ -1,0 +1,80 @@
+"""§2.4.2/§3 REINFORCE configurator: rewards, policy learning, episode loop."""
+import numpy as np
+import pytest
+
+from repro.core.configurator import reward_from_latency
+from repro.core.policy import ReinforceAgent, Trajectory, discounted_returns
+
+
+def test_reward_modes():
+    lat = np.array([1000.0, 2000.0, 3000.0])
+    assert reward_from_latency(lat, "neg_mean") == pytest.approx(-2.0)
+    assert reward_from_latency(lat, "neg_sum") == pytest.approx(-6.0)
+    assert reward_from_latency(lat, "neg_inv") == pytest.approx(-(1 / 1000 + 1 / 2000 + 1 / 3000))
+    assert reward_from_latency(np.array([])) == -1e4  # failed window
+    assert reward_from_latency(np.array([np.nan, np.inf])) == -1e4
+
+
+def test_lower_latency_is_higher_reward():
+    good = reward_from_latency(np.array([100.0] * 10))
+    bad = reward_from_latency(np.array([5000.0] * 10))
+    assert good > bad
+
+
+def test_discounted_returns():
+    np.testing.assert_allclose(discounted_returns([1, 1, 1], 1.0), [3, 2, 1])
+    np.testing.assert_allclose(discounted_returns([1, 1, 1], 0.5), [1.75, 1.5, 1])
+
+
+def _bandit_agent(seed=0, **kw):
+    return ReinforceAgent(state_dim=3, lever_names=["a", "b"], seed=seed,
+                          f_exploit=0.0, lr=5e-2, f_warmup_updates=0, **kw)
+
+
+def test_action_decode_maps_levers_and_directions():
+    ag = _bandit_agent()
+    assert ag.action_decode(0) == ("a", +1)
+    assert ag.action_decode(1) == ("a", -1)
+    assert ag.action_decode(2) == ("b", +1)
+    assert ag.action_decode(3) == ("b", -1)
+
+
+def test_reinforce_learns_a_bandit():
+    """Action 2 pays +1, everything else -1: its probability must grow."""
+    ag = _bandit_agent()
+    state = np.ones(3, np.float32)
+    from repro.core.policy import policy_probs
+    import jax.numpy as jnp
+
+    p0 = np.asarray(policy_probs(ag.params, jnp.asarray(state)))[2]
+    for _ in range(30):
+        eps = []
+        for _ in range(6):
+            t = Trajectory()
+            a = ag.act(state)
+            t.add(state, a, 1.0 if a == 2 else -1.0)
+            eps.append(t)
+        ag.update(eps)
+    p1 = np.asarray(policy_probs(ag.params, jnp.asarray(state)))[2]
+    assert p1 > max(p0 * 1.5, 0.5), (p0, p1)
+
+
+def test_exploitation_confined_to_top_lever():
+    ag = ReinforceAgent(state_dim=3, lever_names=["top", "other"], seed=0,
+                        f_exploit=1.0, f_warmup_updates=0)
+    state = np.zeros(3, np.float32)
+    actions = {ag.act(state) for _ in range(50)}
+    assert actions <= {0, 1}  # only the top lever's two directions
+
+
+def test_update_handles_empty_and_unequal_episodes():
+    ag = _bandit_agent()
+    t1 = Trajectory()
+    t1.add(np.zeros(3), 0, -1.0)
+    t2 = Trajectory()
+    t2.add(np.zeros(3), 1, -2.0)
+    t2.add(np.ones(3), 2, -1.5)
+    stats = ag.update([t1, t2, Trajectory()])
+    assert stats["episodes"] == 2
+    assert stats["steps"] == 3
+    assert ag.update([]) == {"pg_loss": 0.0, "mean_return": 0.0}

@@ -1,0 +1,137 @@
+"""Engine substrate: EventBuffer, IdempotentSink, StreamEngine, workloads."""
+import numpy as np
+import pytest
+
+from repro.data.workloads import (
+    Event,
+    PoissonWorkload,
+    SwitchingWorkload,
+    TrapezoidWorkload,
+    YahooAdsWorkload,
+    get_workload,
+)
+from repro.engine import EngineConfig, EventBuffer, IdempotentSink, StreamEngine
+
+
+def _events(n, t0=0.0):
+    return [Event(arrival_s=t0 + i * 0.01, size_mb=0.5, key=i, tokens=16)
+            for i in range(n)]
+
+
+class TestEventBuffer:
+    def test_put_take_commit(self):
+        b = EventBuffer()
+        b.put(_events(5))
+        got = b.take(3, now=1.0)
+        assert len(got) == 3 and len(b) == 2
+        b.commit()
+        assert b.stats.total_out == 3
+
+    def test_replay_requeues_in_order(self):
+        b = EventBuffer()
+        b.put(_events(4))
+        first = b.take(2, now=1.0)
+        b.replay()
+        again = b.take(2, now=1.0)
+        assert [e.key for e in again] == [e.key for e in first]
+        assert b.stats.replayed == 2
+
+    def test_drop_policy_oldest(self):
+        b = EventBuffer(capacity=3, drop_policy="oldest")
+        b.put(_events(5))
+        keys = [e.key for e in b.take(10, now=1.0)]
+        assert len(keys) <= 4 and keys[-1] == 4  # newest survived
+        assert b.stats.dropped >= 1
+
+    def test_drop_policy_newest(self):
+        b = EventBuffer(capacity=3, drop_policy="newest")
+        b.put(_events(5))
+        keys = [e.key for e in b.take(10, now=1.0)]
+        assert keys[0] == 0
+        assert b.stats.dropped >= 1
+
+
+def test_idempotent_sink_dedupes():
+    s = IdempotentSink(partitions=4)
+    assert s.write(7, {"v": 1})
+    assert not s.write(7, {"v": 1})
+    assert s.duplicates == 1
+    assert len(s.rows) == 1
+    assert s.rows[0]["partition"] == 3
+
+
+class TestWorkloads:
+    def test_poisson_rate_constant(self):
+        wl = PoissonWorkload(1000.0, 0.5)
+        assert wl.rate(0) == wl.rate(100) == 1000.0
+
+    def test_trapezoid_phases(self):
+        wl = TrapezoidWorkload(peak=100, ramp_s=10, plateau_s=20, base=10)
+        assert wl.rate(0) == pytest.approx(10)
+        assert wl.rate(10) == pytest.approx(100)
+        assert wl.rate(20) == pytest.approx(100)
+        assert wl.rate(40) == pytest.approx(10)
+
+    def test_switching_alternates(self):
+        wl = SwitchingWorkload(PoissonWorkload(10, 0.5), PoissonWorkload(99, 5.0),
+                               period_s=100)
+        assert wl.rate(50) == 10 and wl.rate(150) == 99
+        assert wl.mean_size(50) == 0.5 and wl.mean_size(150) == 5.0
+
+    def test_sample_events_rate_and_determinism(self):
+        wl = PoissonWorkload(200.0, 0.5)
+        rng = np.random.default_rng(0)
+        evs = wl.sample_events(0.0, 5.0, rng)
+        assert 700 < len(evs) < 1300  # ~1000 expected
+        assert all(0 <= e.arrival_s < 5.0 for e in evs)
+        evs2 = wl.sample_events(0.0, 5.0, np.random.default_rng(0))
+        assert [e.key for e in evs2] == [e.key for e in evs]
+
+    def test_yahoo_and_iot_positive_rates(self):
+        for wl in (YahooAdsWorkload(), get_workload("iot")):
+            for t in (0.0, 100.0, 1000.0):
+                assert wl.rate(t) > 0
+
+
+class TestStreamEngine:
+    @pytest.fixture(scope="class")
+    def engine(self):
+        from repro import configs
+
+        cfg = configs.get("smollm_135m", reduced=True)
+        e = StreamEngine(cfg, econf=EngineConfig(max_batch_events=4, max_seq=64))
+        e.warmup()
+        return e
+
+    def test_process_batch_scores_and_commits(self, engine):
+        engine.buffer.put(_events(3))
+        rep = engine.process_batch(now=1.0)
+        assert rep.n_events == 3
+        assert len(engine.sink.rows) >= 3
+        assert engine.sink.duplicates == 0
+        assert 0 <= rep.padding_frac < 1
+
+    def test_idle_returns_none(self, engine):
+        assert engine.process_batch(now=2.0) is None
+
+    def test_reconfigure_rejit_only_when_needed(self, engine):
+        before = dict(engine._step_cache)
+        engine.reconfigure(EngineConfig(max_batch_events=8, max_seq=64))
+        assert engine._step_cache == before  # no jit-relevant lever moved
+        engine.reconfigure(EngineConfig(max_batch_events=8, max_seq=64,
+                                        attn_chunk=32))
+        assert engine._step_cache == {}  # re-jit on kernel lever
+
+
+def test_stream_engine_failure_replay_is_idempotent():
+    from repro import configs
+
+    cfg = configs.get("smollm_135m", reduced=True)
+    e = StreamEngine(cfg, seed=3,
+                     econf=EngineConfig(max_batch_events=4, max_seq=64,
+                                        failure_inject_frac=1.0))
+    e.buffer.put(_events(4))
+    rep = e.process_batch(now=1.0)  # fails once, replays, then succeeds
+    assert e.replays >= 1
+    assert e.sink.duplicates == 0
+    assert len(e.sink.rows) == rep.n_events

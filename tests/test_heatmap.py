@@ -1,0 +1,39 @@
+"""Heat-map state encoding (paper §3)."""
+import numpy as np
+
+from repro.core.heatmap import HeatmapEncoder, HeatmapSpec, node_grid_shape
+
+
+def test_node_grid_shape_covers_nodes():
+    for n in (1, 2, 9, 10, 16, 17):
+        r, c = node_grid_shape(n)
+        assert r * c >= n
+
+
+def test_state_dim_and_encoding_range():
+    spec = HeatmapSpec(["m1", "m2"], ["l1", "l2", "l3"], n_nodes=10)
+    enc = HeatmapEncoder(spec)
+    r, c = spec.grid
+    assert spec.state_dim == 2 * r * c + 3
+    per_node = {"m1": np.linspace(0, 100, 10), "m2": np.full(10, 5.0)}
+    state = enc.encode(per_node, {"l1": 0.5, "l2": 1.0, "l3": 0.0})
+    assert state.shape == (spec.state_dim,)
+    assert np.all(state >= 0.0) and np.all(state <= 1.0)
+    assert state[-3:].tolist() == [0.5, 1.0, 0.0]
+
+
+def test_running_range_normalisation_adapts():
+    spec = HeatmapSpec(["m"], [], n_nodes=2)
+    enc = HeatmapEncoder(spec)
+    s1 = enc.encode({"m": np.array([0.0, 10.0])}, {})
+    assert s1[0] == 0.0 and s1[1] == 1.0
+    # new, larger values rescale against the running max
+    s2 = enc.encode({"m": np.array([10.0, 20.0])}, {})
+    assert s2[1] == 1.0 and 0.4 < s2[0] < 0.6
+
+
+def test_missing_metric_defaults_to_zero():
+    spec = HeatmapSpec(["absent"], ["l"], n_nodes=3)
+    enc = HeatmapEncoder(spec)
+    state = enc.encode({}, {})
+    assert np.all(state == 0.0)

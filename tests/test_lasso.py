@@ -1,0 +1,85 @@
+"""§2.3 Lasso path lever ranking."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lasso
+
+
+def _planted(n=400, p=30, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, p))
+    y = 3.0 * X[:, 2] - 2.0 * X[:, 5] + 0.7 * X[:, 9] + 0.05 * rng.standard_normal(n)
+    return X, y
+
+
+def test_lasso_solve_zero_at_lambda_max():
+    X, y = _planted()
+    yc = y - y.mean()
+    lam_max = np.max(np.abs(X.T @ yc)) / len(y)
+    w = lasso.lasso_solve(X, yc, lam_max * 1.01)
+    assert np.allclose(w, 0.0, atol=1e-6)
+
+
+def test_lasso_solve_matches_ols_at_zero_penalty():
+    X, y = _planted(n=200, p=12, seed=1)
+    yc = y - y.mean()
+    w = lasso.lasso_solve(X, yc, 0.0, epochs=500)
+    w_ols, *_ = np.linalg.lstsq(X, yc, rcond=None)
+    np.testing.assert_allclose(w, w_ols, atol=5e-3)
+
+
+def test_lasso_path_entry_order_ranks_planted_signal():
+    X, y = _planted()
+    res = lasso.lasso_path(X, y, [f"f{i}" for i in range(X.shape[1])])
+    assert res.ranked_names()[:3] == ["f2", "f5", "f9"]
+    # entry lambdas are decreasing along the order
+    lams = [res.entry_lambda[i] for i in res.order]
+    assert all(a >= b for a, b in zip(lams, lams[1:]))
+
+
+def test_polynomial_features_shapes_and_names():
+    Z = np.ones((10, 3))
+    Xp, names = lasso.polynomial_features(Z, ["a", "b", "c"])
+    assert Xp.shape == (10, 6)
+    assert names == ["a", "b", "c", "a^2", "b^2", "c^2"]
+    Xi, ni = lasso.polynomial_features(Z, ["a", "b", "c"], interactions=True)
+    assert Xi.shape == (10, 9)
+    assert "a*b" in ni
+
+
+def test_rank_levers_collapses_polynomial_terms():
+    rng = np.random.default_rng(2)
+    R = rng.standard_normal((300, 6))
+    y = R[:, 3] ** 2 * 2.0 + 0.1 * rng.standard_normal(300)  # quadratic effect
+    ranked = lasso.rank_levers(R, y, [f"L{i}" for i in range(6)], degree=2)
+    assert ranked[0] == "L3"
+    assert len(ranked) == len(set(ranked))  # no duplicates after collapse
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_soft_threshold_property(seed):
+    """Coordinate-descent fixed point: |X_j'(y - Xw)|/n <= lam for inactive
+    coords, == lam (sign-aligned) for active coords (KKT conditions)."""
+    rng = np.random.default_rng(seed)
+    n, p = 120, 8
+    X = rng.standard_normal((n, p))
+    y = X @ rng.standard_normal(p) + 0.1 * rng.standard_normal(n)
+    y = y - y.mean()
+    lam = 0.3 * np.max(np.abs(X.T @ y)) / n
+    w = lasso.lasso_solve(X, y, lam, epochs=600)
+    grad = X.T @ (y - X @ w) / n
+    for j in range(p):
+        if abs(w[j]) > 1e-7:
+            assert abs(abs(grad[j]) - lam * np.sign(w[j]) * np.sign(grad[j])) < 5e-3 \
+                or abs(grad[j] - lam * np.sign(w[j])) < 5e-3
+        else:
+            assert abs(grad[j]) <= lam + 5e-3
+
+
+def test_normalise_levers_zero_variance_safe():
+    R = np.column_stack([np.ones(50), np.arange(50, dtype=float)])
+    Z, mean, std = lasso.normalise_levers(R)
+    assert np.all(np.isfinite(Z))
+    np.testing.assert_allclose(Z[:, 0], 0.0)

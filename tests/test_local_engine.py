@@ -1,0 +1,44 @@
+"""LocalEngine: the real-wall-clock TuningEnv (kept small: real seconds)."""
+import numpy as np
+import pytest
+
+from repro.data.workloads import PoissonWorkload
+from repro.engine import LocalEngine
+
+
+@pytest.fixture(scope="module")
+def env():
+    return LocalEngine(PoissonWorkload(lam=30.0, event_size_mb=0.5), seed=0)
+
+
+def test_observe_measures_real_latency(env):
+    w = env.observe(3.0)
+    assert w.latencies_ms.size > 0
+    assert 1.0 < w.p99_ms < 60_000
+    assert set(w.per_node) >= {"latency_p99_ms", "queue_depth", "jit_compiles"}
+
+
+def test_batch_interval_lever_has_real_effect(env):
+    c = env.current_config()
+    c["batch_interval_s"] = 1.0
+    env.apply_config(c)
+    slow = env.observe(4.0)
+    c["batch_interval_s"] = 0.1
+    env.apply_config(c)
+    fast = env.observe(4.0)
+    assert np.mean(fast.latencies_ms) < np.mean(slow.latencies_ms)
+
+
+def test_reboot_levers_flag_and_rejit(env):
+    c = env.current_config()
+    before = env.engine.jit_compiles
+    c["attn_chunk"] = 32
+    rep = env.apply_config(c)
+    assert rep["rebooted"] is True
+    env.observe(1.0)
+    assert env.engine.jit_compiles >= before  # cache cleared -> fresh compiles
+
+
+def test_reset_restores_defaults(env):
+    env.reset()
+    assert env.current_config()["batch_interval_s"] == 0.5

@@ -1,0 +1,125 @@
+"""§2.2 metric selection: variance filter, spline repair, FA, k-means."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metrics_selection as ms
+
+
+def test_variance_filter_drops_constant_and_low_variance():
+    rng = np.random.default_rng(0)
+    X = np.stack([
+        np.full(100, 3.0),                       # constant -> drop
+        rng.normal(0, 0.001, 100),               # var ~1e-6 -> drop
+        rng.normal(0, 1.0, 100),                 # keep
+        rng.normal(5, 2.0, 100),                 # keep
+    ], axis=1)
+    keep = ms.variance_filter(X)
+    assert keep.tolist() == [False, False, True, True]
+
+
+def test_spline_repair_reconstructs_smooth_gaps():
+    t = np.arange(60, dtype=float)
+    truth = np.sin(t / 6.0) + 0.1 * t
+    col = truth.copy()
+    col[[10, 11, 12, 30, 45]] = np.nan
+    X = ms.spline_repair(col[:, None])
+    err = np.abs(X[[10, 11, 12, 30, 45], 0] - truth[[10, 11, 12, 30, 45]])
+    assert err.max() < 0.05, err
+
+
+def test_spline_repair_handles_edges_and_all_nan():
+    col = np.array([np.nan, 1.0, 2.0, np.nan, 4.0, np.nan])
+    X = ms.spline_repair(col[:, None])
+    assert np.all(np.isfinite(X))
+    X2 = ms.spline_repair(np.full((5, 1), np.nan))
+    assert np.all(X2 == 0.0)
+
+
+def test_factor_analysis_recovers_planted_two_factor_structure():
+    rng = np.random.default_rng(1)
+    n = 400
+    f1, f2 = rng.normal(0, 1, n), rng.normal(0, 1, n)
+    cols, labels = [], []
+    for i in range(6):           # block A loads on f1
+        cols.append(f1 * (0.8 + 0.05 * i) + rng.normal(0, 0.3, n))
+        labels.append("A")
+    for i in range(6):           # block B loads on f2
+        cols.append(f2 * (0.8 + 0.05 * i) + rng.normal(0, 0.3, n))
+        labels.append("B")
+    Z, _, _ = ms.standardise(np.stack(cols, axis=1))
+    U = ms.factor_analysis(Z, 2)
+    # block A coordinates must cluster away from block B in factor space
+    _, assign, _ = ms.kmeans(U, 2, seed=0)
+    a_ids = set(assign[:6].tolist())
+    b_ids = set(assign[6:].tolist())
+    assert len(a_ids) == 1 and len(b_ids) == 1 and a_ids != b_ids
+
+
+def test_parallel_analysis_retains_few_factors_for_noise():
+    rng = np.random.default_rng(2)
+    Z = rng.normal(0, 1, (300, 20))
+    n = ms.retained_factors(Z, rng)
+    assert 1 <= n <= 3  # pure noise: nothing should beat the bar decisively
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6), st.integers(10, 40))
+def test_kmeans_invariants(k, n):
+    rng = np.random.default_rng(k * 100 + n)
+    pts = rng.normal(0, 1, (n, 3))
+    centers, assign, cost = ms.kmeans(pts, k, seed=0, restarts=2)
+    assert centers.shape == (k, 3)
+    assert assign.shape == (n,)
+    assert 0 <= assign.min() and assign.max() < k
+    assert cost >= 0
+    # cost equals sum of squared distances to the assigned centre
+    d = ((pts - centers[assign]) ** 2).sum()
+    np.testing.assert_allclose(cost, d, rtol=1e-4)
+
+
+def test_kmeans_separated_clusters_exact():
+    rng = np.random.default_rng(3)
+    a = rng.normal(0, 0.05, (10, 2))
+    b = rng.normal(10, 0.05, (10, 2)) + 10
+    _, assign, _ = ms.kmeans(np.concatenate([a, b]), 2, seed=1)
+    assert len(set(assign[:10])) == 1 and len(set(assign[10:])) == 1
+    assert assign[0] != assign[10]
+
+
+def test_sweep_k_elbow_prefers_true_k():
+    rng = np.random.default_rng(4)
+    blocks = [rng.normal(c * 8, 0.3, (12, 2)) for c in range(3)]
+    pts = np.concatenate(blocks)
+    k = ms.sweep_k(pts, [2, 3, 4, 5, 6], seed=0)
+    assert k == 3, k
+
+
+def test_select_metrics_pipeline_reduces_and_keeps_structure():
+    rng = np.random.default_rng(5)
+    n = 300
+    f = rng.normal(0, 1, (n, 3))
+    names, cols = [], []
+    for j in range(3):
+        for i in range(8):
+            names.append(f"g{j}_m{i}")
+            cols.append(f[:, j] * 0.9 + rng.normal(0, 0.25, n))
+    names += ["const1", "const2"]
+    cols += [np.full(n, 7.0), np.full(n, 0.001)]
+    X = np.stack(cols, axis=1)
+    res = ms.select_metrics(X, names, seed=0, k_candidates=(2, 3, 4, 5, 6))
+    assert "const1" not in res.survivor_names  # variance filter
+    assert res.reduction > 0.7
+    assert 1 <= len(res.kept_names) <= 8
+    kept_groups = {n.split("_")[0] for n in res.kept_names if n.startswith("g")}
+    assert len(kept_groups) >= 2  # medoids span distinct latent groups
+
+
+def test_select_metrics_split_runs_batches_separately():
+    rng = np.random.default_rng(6)
+    X = rng.normal(0, 1, (100, 10))
+    names = [f"m{i}" for i in range(10)]
+    is_driver = [i < 4 for i in range(10)]
+    rd, rw = ms.select_metrics_split(X, names, is_driver, k=2)
+    assert all(n in names[:4] for n in rd.kept_names)
+    assert all(n in names[4:] for n in rw.kept_names)

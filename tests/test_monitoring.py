@@ -1,0 +1,50 @@
+"""Monitoring registry + time-series store."""
+import numpy as np
+
+from repro.monitoring import (
+    DRIVER_METRICS,
+    METRIC_NAMES,
+    REGISTRY,
+    WORKER_METRICS,
+    TimeSeriesStore,
+)
+
+
+def test_registry_is_exactly_90_with_unique_names():
+    assert len(REGISTRY) == 90
+    assert len(set(METRIC_NAMES)) == 90
+    assert set(DRIVER_METRICS) | set(WORKER_METRICS) == set(METRIC_NAMES)
+    assert not (set(DRIVER_METRICS) & set(WORKER_METRICS))
+
+
+def test_registry_has_redundancy_groups_for_fa():
+    groups = {}
+    for m in REGISTRY:
+        groups.setdefault(m.group, []).append(m.name)
+    # at least 7 multi-member groups so FA + k-means has structure to find
+    assert sum(1 for g in groups.values() if len(g) >= 4) >= 7
+
+
+def test_store_append_window_and_average():
+    store = TimeSeriesStore(["a", "b"], n_nodes=2, capacity=8)
+    for t in range(5):
+        store.append(float(t), np.full((2, 2), float(t)))
+    w = store.window(2.0, now=4.0)
+    assert w.shape == (3, 2, 2)  # t in {2,3,4}
+    avg = store.node_average(2.0, now=4.0)
+    np.testing.assert_allclose(avg["a"], [3.0, 3.0])
+
+
+def test_store_ring_buffer_wraps():
+    store = TimeSeriesStore(["a"], n_nodes=1, capacity=4)
+    for t in range(10):
+        store.append(float(t), np.array([[float(t)]]))
+    w = store.window(100.0, now=9.0)
+    assert w.shape[0] == 4
+    np.testing.assert_allclose(w[:, 0, 0], [6, 7, 8, 9])
+
+
+def test_empty_store_returns_zeros():
+    store = TimeSeriesStore(["a"], n_nodes=3)
+    avg = store.node_average(10.0, now=0.0)
+    np.testing.assert_allclose(avg["a"], np.zeros(3))

@@ -1,0 +1,71 @@
+"""Optimizers: convergence, moment dtypes, clipping (property)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import adamw, clip_by_global_norm, rmsprop, sgd
+from repro.utils import global_norm
+
+
+def _quadratic_descent(opt, steps=200):
+    params = {"w": jnp.asarray([5.0, -3.0]), "b": jnp.asarray(2.0)}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+    l0 = float(loss(params))
+    g = jax.grad(loss)
+    for _ in range(steps):
+        params, state = opt.update(g(params), state, params)
+    return l0, float(loss(params))
+
+
+@pytest.mark.parametrize("opt", [rmsprop(lr=5e-2), adamw(lr=5e-2, weight_decay=0.0),
+                                 sgd(lr=5e-2)])
+def test_optimizers_descend_quadratic(opt):
+    l0, l1 = _quadratic_descent(opt)
+    assert l1 < 0.05 * l0, (opt.name, l0, l1)
+
+
+def test_moment_dtype_lever():
+    opt = adamw(moment_dtype="bfloat16")
+    params = {"w": jnp.ones((4, 4), jnp.float32)}
+    state = opt.init(params)
+    assert state["mu"]["w"].dtype == jnp.bfloat16
+    assert state["nu"]["w"].dtype == jnp.bfloat16
+    grads = {"w": jnp.ones((4, 4))}
+    p2, s2 = opt.update(grads, state, params)
+    assert p2["w"].dtype == jnp.float32
+    assert s2["mu"]["w"].dtype == jnp.bfloat16
+
+
+def test_adamw_decays_matrices_not_vectors():
+    opt = adamw(lr=1e-2, weight_decay=0.5)
+    params = {"w": jnp.full((3, 3), 10.0), "b": jnp.full((3,), 10.0)}
+    state = opt.init(params)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    p2, _ = opt.update(zeros, state, params)
+    assert float(p2["w"][0, 0]) < 10.0   # matrix decayed
+    assert float(p2["b"][0]) == 10.0     # vector untouched
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.1, 10.0), st.integers(0, 100))
+def test_clip_by_global_norm_property(max_norm, seed):
+    rng = np.random.default_rng(seed)
+    g = {"a": jnp.asarray(rng.normal(0, 5, (7,)), jnp.float32),
+         "b": jnp.asarray(rng.normal(0, 5, (3, 2)), jnp.float32)}
+    clipped = clip_by_global_norm(g, max_norm)
+    n = float(global_norm(clipped))
+    assert n <= max_norm * 1.001
+    # direction preserved
+    ga = np.asarray(g["a"])
+    ca = np.asarray(clipped["a"])
+    if n < max_norm * 0.999:  # not clipped: identical
+        np.testing.assert_allclose(ca, ga, rtol=1e-5)
+    else:
+        cos = np.dot(ga, ca) / (np.linalg.norm(ga) * np.linalg.norm(ca) + 1e-9)
+        assert cos > 0.999

@@ -1,0 +1,111 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Every assigned architecture is instantiated with its REDUCED config and runs:
+  1. one forward/train step on CPU — asserts output shapes + no NaNs,
+  2. prefill + one decode step — asserts logits shape + finite,
+  3. decode-vs-prefill consistency: logits from ``decode(token_S | state(0..S-1))``
+     must match last-position logits of ``prefill(tokens[0..S])`` (catches
+     KV-cache / SSM-state bugs).
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data import make_batch
+from repro.models import (
+    forward_decode,
+    forward_prefill,
+    forward_train,
+    init_params,
+)
+
+B, S = 2, 24
+
+
+def _setup(arch):
+    cfg = configs.get(arch, reduced=True)
+    params = init_params(cfg, jax.random.PRNGKey(0), max_seq=64)
+    batch = make_batch(cfg, B, S, seed=1)
+    return cfg, params, batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_train_step_shapes_and_finite(arch):
+    cfg, params, batch = _setup(arch)
+    loss, metrics = forward_train(params, cfg, batch)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss {loss}"
+    g = jax.grad(lambda p: forward_train(p, cfg, batch)[0])(params)
+    flat = jax.tree_util.tree_leaves(g)
+    assert all(jnp.all(jnp.isfinite(x)) for x in flat), f"{arch}: non-finite grads"
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_prefill_and_decode(arch):
+    cfg, params, batch = _setup(arch)
+    logits, state = forward_prefill(params, cfg, batch, max_seq=64)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert jnp.all(jnp.isfinite(logits)), f"{arch}: non-finite prefill logits"
+    nxt = batch["tokens"][:, :1]
+    logits2, state2 = forward_decode(params, cfg, nxt, state)
+    assert logits2.shape == (B, 1, cfg.vocab_size)
+    assert jnp.all(jnp.isfinite(logits2))
+    assert int(state2.pos) == int(state.pos) + 1
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_decode_matches_prefill(arch):
+    """decode(token_S | prefill(0..S-1)) == prefill(0..S) last-position logits."""
+    cfg, params, batch = _setup(arch)
+    toks = batch["tokens"]
+    sub = dict(batch)
+    sub["tokens"] = toks[:, : S - 1]
+    sub["labels"] = batch["labels"][:, : S - 1]
+    sub["mask"] = batch["mask"][:, : S - 1]
+    _, state = forward_prefill(params, cfg, sub, max_seq=64)
+    dec_logits, _ = forward_decode(params, cfg, toks[:, S - 1 : S], state)
+
+    full_logits, _ = forward_prefill(params, cfg, batch, max_seq=64)
+    np.testing.assert_allclose(
+        np.asarray(dec_logits, np.float32),
+        np.asarray(full_logits, np.float32),
+        rtol=2e-2, atol=2e-2,
+        err_msg=f"{arch}: decode path diverges from prefill path",
+    )
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_full_config_is_published_shape(arch):
+    """Full configs carry the exact published dimensions (spot checks)."""
+    cfg = configs.get(arch)
+    published = {
+        "zamba2_2p7b": (54, 2560, 32, 10240, 32000),
+        "qwen2_7b": (28, 3584, 28, 18944, 152064),
+        "deepseek_coder_33b": (62, 7168, 56, 19200, 32256),
+        "stablelm_12b": (40, 5120, 32, 13824, 100352),
+        "smollm_135m": (30, 576, 9, 1536, 49152),
+        "internvl2_26b": (48, 6144, 48, 16384, 92553),
+        "qwen2_moe_a2p7b": (24, 2048, 16, 5632, 151936),
+        "grok1_314b": (64, 6144, 48, 32768, 131072),
+        "whisper_large_v3": (32, 1280, 20, 5120, 51866),
+        "rwkv6_7b": (32, 4096, 64, 14336, 65536),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.d_ff, cfg.vocab_size)
+    assert got == published, f"{arch}: {got} != published {published}"
+
+
+def test_param_count_sanity():
+    """Analytic 6ND param counts are the right order of magnitude."""
+    approx = {
+        "qwen2_7b": 7.6e9,
+        "deepseek_coder_33b": 33e9,
+        "grok1_314b": 314e9,
+        "smollm_135m": 135e6,
+        "rwkv6_7b": 7.6e9,
+    }
+    for arch, expect in approx.items():
+        n = configs.get(arch).param_count()
+        assert 0.5 * expect < n < 1.7 * expect, f"{arch}: {n:.3g} vs {expect:.3g}"
