@@ -25,6 +25,7 @@ BENCHES = [
     ("fig9", "benchmarks.fig9_vs_humans"),
     ("kernels", "benchmarks.kernel_micro"),
     ("roofline", "benchmarks.roofline"),
+    ("fleet", "benchmarks.fleet_scaling"),
 ]
 
 

@@ -1,0 +1,311 @@
+"""Pre-FleetEnv reference implementation of the simulated cluster.
+
+This is the SEED repository's per-scalar ``SimCluster`` (one Python-level
+queueing step per cluster per tick, per-call RNG draws, per-tick metric
+emission), preserved verbatim as the benchmark baseline the fleet refactor is
+measured against — the "serial loop" the FleetEnv motivation describes. It is
+NOT used by the library itself; ``repro.engine.simcluster`` is the
+array-over-clusters rewrite of this exact model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.discretize import LeverSpec
+from repro.data.workloads import Workload, PoissonWorkload
+from repro.engine.levers import LEVER_SPECS
+from repro.monitoring.metrics import REGISTRY, TimeSeriesStore
+
+PEAK_FLOPS = 197e12
+TOKENS_PER_MB = 16.0
+
+
+@dataclass
+class MetricsWindowData:
+    per_node: dict
+    latencies_ms: np.ndarray
+    p99_ms: float
+    clock_s: float
+
+    @property
+    def mean_ms(self) -> float:
+        return float(np.mean(self.latencies_ms)) if self.latencies_ms.size else float("nan")
+
+
+@dataclass
+class SimSpec:
+    """Cluster geometry + calibration constants."""
+
+    n_nodes: int = 10              # 1 driver + 9 workers (paper's clusters)
+    chips_per_worker: int = 8      # v5e hosts
+    base_mfu: float = 0.42         # achievable model-flops utilisation at defaults
+    dispatch_overhead_s: float = 0.35
+    driver_gc_coeff: float = 2.4   # driver stall ~ coeff / driver_memory_gb
+    collective_frac: float = 0.18  # collective seconds as fraction of compute @ tp=16
+    straggler_prob: float = 0.05
+    straggler_slow: tuple = (1.5, 3.0)
+    hbm_gb_per_chip: float = 16.0
+    noise: float = 0.04
+    retention_s: float = 300.0     # Kafka retention: oldest events age out, so
+                                   # backlog (and latency) cannot grow unboundedly
+
+
+class SerialBaselineCluster:
+    """Implements repro.core.configurator.TuningEnv on a simulated clock."""
+
+    def __init__(
+        self,
+        workload: Optional[Workload] = None,
+        model: Optional[ModelConfig] = None,
+        *,
+        spec: Optional[SimSpec] = None,
+        lever_specs: Optional[Sequence[LeverSpec]] = None,
+        seed: int = 0,
+    ):
+        from repro import configs
+
+        self.workload = workload or PoissonWorkload(10_000, 0.5)
+        self.model = model or configs.get("smollm_135m")
+        self.spec = spec or SimSpec()
+        self.lever_specs = list(lever_specs or LEVER_SPECS)
+        self.metric_names = [m.name for m in REGISTRY]
+        self.n_nodes = self.spec.n_nodes
+        self._rng = np.random.default_rng(seed)
+        self.store = TimeSeriesStore(self.metric_names, self.n_nodes)
+        self.clock = 0.0
+        self.backlog_events = 0.0
+        self.config = {s.name: s.default_value() for s in self.lever_specs}
+        self._reconfig_count = 0
+        self._last_service = None
+        self._server_free = 0.0
+        self._node_speed = 1.0 + 0.03 * self._rng.standard_normal(self.n_nodes)
+
+    # ------------------------------------------------------------------ env API
+    def reset(self) -> None:
+        self.clock = 0.0
+        self.backlog_events = 0.0
+        self.config = {s.name: s.default_value() for s in self.lever_specs}
+        self.store = TimeSeriesStore(self.metric_names, self.n_nodes)
+        self._reconfig_count = 0
+        self._last_service = None
+        self._server_free = 0.0
+
+    def current_config(self) -> dict:
+        return dict(self.config)
+
+    def apply_config(self, config: dict) -> dict:
+        changed = [k for k, v in config.items() if self.config.get(k) != v]
+        reboot = any(self._spec_of(k).reboot for k in changed)
+        rejit = any(self._spec_of(k).group in ("kernel", "memory", "parallel")
+                    for k in changed)
+        load_s = 10.0 + (60.0 if reboot else 0.0) + (8.0 if rejit else 0.0)
+        load_s *= 1.0 + self.spec.noise * abs(self._rng.standard_normal())
+        # Kafka buffers arrivals during the reconfiguration (paper §4.2)
+        self.backlog_events += self.workload.rate(self.clock) * load_s
+        self.clock += load_s
+        self.config = dict(config)
+        self._reconfig_count += 1
+        self._last_load_s = load_s
+        return {"load_s": load_s, "rebooted": reboot}
+
+    def stabilisation_time(self) -> float:
+        """Paper §4.2: stabilisation detected from latency-variance trends,
+        '<3 min 99 % of the time'. Modelled as base + term ∝ service change."""
+        s_new = self._service_terms(self.workload.rate(self.clock),
+                                    self.workload.mean_size(self.clock))["service"]
+        prev = self._last_service or s_new
+        rel = abs(s_new - prev) / max(prev, 1e-6)
+        self._last_service = s_new
+        return float(np.clip(30.0 + 240.0 * rel, 30.0, 180.0))
+
+    def observe(self, window_s: float) -> MetricsWindowData:
+        """Advance the sim by window_s; emit metrics + latency sample."""
+        cfg = self.config
+        T_b = float(cfg["batch_interval_s"])
+        n_ticks = max(1, int(round(window_s / T_b)))
+        lat_samples = []
+        self._server_free = max(self._server_free, self.clock)
+        for _ in range(n_ticks):
+            rate = self.workload.rate(self.clock)
+            ev_size = self.workload.mean_size(self.clock)
+            arrivals = rate * T_b * (1 + self.spec.noise * self._rng.standard_normal())
+            # age of the oldest backlog BEFORE this tick's arrivals join
+            backlog_age = self.backlog_events / max(rate, 1.0)
+            self.backlog_events += max(arrivals, 0.0)
+            # Kafka retention: events older than retention_s age out (dropped)
+            self.backlog_events = min(self.backlog_events,
+                                      rate * self.spec.retention_s)
+            batch = min(self.backlog_events, float(cfg["max_batch_events"]))
+            terms = self._service_terms(rate, ev_size, batch_events=batch)
+            service = terms["service"]
+            # straggler / failure tails
+            slow = 1.0
+            if self._rng.uniform() < self.spec.straggler_prob:
+                raw = self._rng.uniform(*self.spec.straggler_slow)
+                if bool(cfg["backup_tasks"]):
+                    slow = 1.1  # speculative re-execution hides the tail
+                else:
+                    timeout = float(cfg["straggler_timeout_s"])
+                    slow = min(raw, max(1.2, 1.0 + timeout / max(T_b, 1e-3)))
+                terms["straggler"] = 1.0
+            if self._rng.uniform() < float(cfg["failure_inject_frac"]):
+                slow *= 2.0
+                terms["failure"] = 1.0
+            service *= slow
+            # single logical server: a batch starts when both the window has
+            # closed AND the previous batch finished (service > T_b piles up).
+            # max_inflight_batches bounds the scheduling queue (backpressure):
+            # beyond it, events WAIT IN KAFKA (backlog ages) instead of piling
+            # into in-flight batches — so sustained throughput is batch/service.
+            batch_close = self.clock + T_b
+            start = max(batch_close, self._server_free)
+            done = start + service
+            inflight_cap = max(float(cfg["max_inflight_batches"]), 1.0) * T_b
+            self._server_free = min(done, batch_close + inflight_cap)
+            processed = batch if service <= T_b else batch * (T_b / service)
+            self.backlog_events = max(self.backlog_events - processed, 0.0)
+            rho = service / T_b
+            queue_delay = (start - batch_close) + backlog_age
+            n_s = max(min(int(batch), 64), 1)
+            waits = self._rng.uniform(0, T_b, n_s)
+            lat = (waits + queue_delay + service
+                   * (1 + 0.1 * np.abs(self._rng.standard_normal(n_s))))
+            lat_samples.append(lat * 1000.0)
+            terms.update(rho=rho, batch=batch, queue_delay=queue_delay,
+                         rate=rate, service=service)
+            self.clock += T_b
+            self._emit_metrics(terms, lat)
+        lats = np.concatenate(lat_samples) if lat_samples else np.zeros(1)
+        return MetricsWindowData(
+            per_node=self.store.node_average(window_s, self.clock),
+            latencies_ms=lats,
+            p99_ms=float(np.percentile(lats, 99)),
+            clock_s=self.clock,
+        )
+
+    # ------------------------------------------------------------- perf model
+    def _spec_of(self, name: str) -> LeverSpec:
+        for s in self.lever_specs:
+            if s.name == name:
+                return s
+        raise KeyError(name)
+
+    def _chips(self) -> int:
+        return (self.n_nodes - 1) * self.spec.chips_per_worker
+
+    def _service_terms(self, rate: float, ev_size: float = 0.5,
+                       batch_events: Optional[float] = None) -> dict:
+        cfg = self.config
+        T_b = float(cfg["batch_interval_s"])
+        if batch_events is None:
+            batch_events = min(rate * T_b, float(cfg["max_batch_events"]))
+        tokens = batch_events * ev_size * TOKENS_PER_MB
+
+        # --- efficiency factors (kernel / precision / padding levers) -------
+        eff = self.spec.base_mfu
+        eff *= 1.0 if cfg["attn_block_q"] == 128 else 0.88
+        eff *= 1.0 if cfg["attn_block_k"] == 128 else 0.9
+        eff *= 1.0 if cfg["compute_dtype"] == "bf16" else 0.5   # f32 halves MXU
+        remat = {"none": 1.0, "block": 1.12, "full": 1.35}[cfg["remat_policy"]]
+
+        flops_per_tok = 2.0 * self.model.active_param_count()
+        chips = self._chips()
+        t_compute = tokens * flops_per_tok * remat / (chips * PEAK_FLOPS * eff)
+
+        # --- memory pressure (kv block / batch size / hbm budget) -----------
+        kv_gb = (tokens * self.model.num_layers * self.model.num_kv_heads
+                 * self.model.resolved_head_dim * 2 * 2) / 1e9
+        mem_frac = min(kv_gb / (chips * self.spec.hbm_gb_per_chip)
+                       + {64: 0.28, 128: 0.18, 256: 0.22, 512: 0.3}[int(cfg["kv_block"])],
+                       1.5)
+        t_mem_penalty = 1.0 + max(mem_frac - 1.0, 0.0) * 2.0  # spill cliff
+
+        # --- collective term (tp size / compression / microbatch overlap) ----
+        tp = int(cfg["model_axis_size"])
+        coll = self.spec.collective_frac * t_compute * (tp / 16.0) ** 0.5
+        if cfg["grad_compression"] == "int8":
+            coll *= 0.55
+        elif cfg["grad_compression"] == "topk":
+            coll *= 0.4
+        mb = int(cfg["microbatch_count"])
+        coll /= (1.0 + 0.45 * (mb - 1))            # overlap with compute
+        if self.model.family == "moe" and bool(cfg["expert_parallel"]):
+            t_compute *= 0.92                       # no replicated expert FFN
+            coll *= 1.15                            # but adds all-to-all
+        # tp also trades compute efficiency (smaller per-chip matmuls)
+        t_compute *= {4: 1.18, 8: 1.06, 16: 1.0, 32: 1.07}[tp]
+
+        # --- overhead (dispatch / driver stalls / sink / prefetch) -----------
+        ovh = self.spec.dispatch_overhead_s * (1.0 + 0.12 * (mb - 1))
+        ovh += self.spec.driver_gc_coeff / max(float(cfg["driver_memory_gb"]), 1.0) * 0.1
+        arena = float(cfg["allocator_arena_mb"])
+        ovh += 0.12 * max(np.log2(512.0 / max(arena, 32.0)), 0.0)
+        sink = int(cfg["sink_partitions"])
+        ovh += 0.25 / max(sink, 1) + 0.004 * sink
+        pf = max(int(cfg["prefetch_depth"]), 0)
+        ovh *= 0.45 + 0.55 / (1.0 + pf)
+
+        service = ovh + max(t_compute, t_compute * 0.2) * t_mem_penalty + coll
+        return {
+            "service": float(service), "t_compute": float(t_compute * t_mem_penalty),
+            "t_overhead": float(ovh), "t_collective": float(coll),
+            "mem_frac": float(min(mem_frac, 1.0)), "eff": float(eff),
+            "tokens": float(tokens), "straggler": 0.0, "failure": 0.0,
+        }
+
+    # ------------------------------------------------------------ metric emission
+    def _loading_matrices(self):
+        """Cache (factors × metrics) loading, scale, noise, bias arrays."""
+        if not hasattr(self, "_W"):
+            from repro.monitoring.metrics import FACTORS
+
+            M = len(REGISTRY)
+            self._W = np.zeros((len(FACTORS), M))
+            self._scale = np.array([m.scale for m in REGISTRY])
+            self._noise_v = np.array([m.noise for m in REGISTRY])
+            self._bias = np.array([m.bias for m in REGISTRY])
+            self._is_driver = np.array([m.scope == "driver" for m in REGISTRY])
+            self._factor_index = {f: i for i, f in enumerate(FACTORS)}
+            for j, m in enumerate(REGISTRY):
+                for f, w in m.loading.items():
+                    self._W[self._factor_index[f], j] = w
+        return self._W
+
+    def _emit_metrics(self, terms: dict, lat_s: np.ndarray) -> None:
+        s = max(terms["service"], 1e-6)
+        latents = {
+            "load": min(terms["rho"], 3.0) + 0.2 * np.log1p(terms["queue_delay"]),
+            "compute": min(terms["t_compute"] / s, 1.0) * min(terms["rho"], 1.0),
+            "memory": terms["mem_frac"],
+            "network": terms["t_collective"] / s,
+            "host": terms["t_overhead"] / s,
+            "efficiency": terms["eff"] / self.spec.base_mfu,
+            "reliability": terms["straggler"] + terms["failure"]
+            + 0.1 * self._reconfig_count,
+            "power": 0.6 * min(terms["rho"], 1.0) + 0.4 * terms["eff"],
+        }
+        W = self._loading_matrices()
+        lvec = np.array([latents[f] for f in
+                         ("load", "compute", "memory", "network", "host",
+                          "efficiency", "reliability", "power")])
+        base = lvec @ W + self._bias                       # (metrics,)
+        vals = self._node_speed[:, None] * base[None, :]   # (nodes, metrics)
+        vals[:, self._is_driver] = base[self._is_driver]   # driver metrics: no node scale
+        noise = 1.0 + self._noise_v[None, :] * self._rng.standard_normal(vals.shape)
+        vals = self._scale[None, :] * vals * noise
+        # ground the latency metrics in the actual simulated latencies
+        li = self.store.index
+        lat_ms = lat_s * 1000.0
+        vals[:, li["latency_mean_ms"]] = float(np.mean(lat_ms))
+        vals[:, li["latency_p50_ms"]] = float(np.percentile(lat_ms, 50))
+        vals[:, li["latency_p95_ms"]] = float(np.percentile(lat_ms, 95))
+        vals[:, li["latency_p99_ms"]] = float(np.percentile(lat_ms, 99))
+        vals[:, li["latency_max_ms"]] = float(np.max(lat_ms))
+        vals[:, li["queue_depth"]] = self.backlog_events
+        self.store.append(self.clock, vals)

@@ -49,6 +49,39 @@ class TuningEnv(Protocol):
         """Seconds until latency variance trend flattens (paper: <3 min p99)."""
 
 
+class FleetTuningEnv(Protocol):
+    """The plural twin of ``TuningEnv``: N clusters stepped as one batch
+    (repro.engine.fleet.FleetEnv; DESIGN.md §2a). The configurator runs the
+    Algorithm-1 episode batch as N *parallel* episodes — one per cluster —
+    and the tuner's §2.1 exploration sweeps the whole fleet per window."""
+
+    lever_specs: Sequence[LeverSpec]
+    metric_names: Sequence[str]
+    n_nodes: int
+    n_clusters: int
+
+    def reset(self) -> None: ...
+    def current_configs(self) -> list[dict]: ...
+    def apply_configs(self, configs: Sequence[dict],
+                      changed_levers: Optional[Sequence] = None) -> list[dict]:
+        """Install one config per cluster; list of {'load_s', 'rebooted'}.
+        ``changed_levers`` optionally names each cluster's moved levers so the
+        env can skip the full config diff."""
+    def observe(self, window_s) -> list[MetricsWindow]:
+        """Advance all clusters by window_s (scalar or per-cluster array)."""
+    def advance(self, window_s) -> None:
+        """observe() without building window summaries (stabilisation waits)."""
+    def stabilisation_times(self) -> np.ndarray:
+        """(N,) seconds until each cluster's latency trend flattens."""
+    def runnable_mask(self, configs: Sequence[dict]) -> np.ndarray:
+        """(N,) bool — the paper's allow-list, vectorised."""
+
+
+def is_fleet_env(env) -> bool:
+    """True when env speaks the batched FleetTuningEnv protocol (any N ≥ 1)."""
+    return getattr(env, "n_clusters", 0) >= 1 and hasattr(env, "apply_configs")
+
+
 @dataclass
 class StepRecord:
     lever: str
@@ -103,6 +136,7 @@ class Configurator:
         bin_kw: Optional[dict] = None,
     ):
         self.env = env
+        self.fleet = is_fleet_env(env)
         self.levers = [l for l in ranked_levers if l in {s.name for s in env.lever_specs}]
         assert self.levers, "no ranked lever matches the environment's lever set"
         self.disc = LeverDiscretiser(list(env.lever_specs), seed=seed,
@@ -119,6 +153,7 @@ class Configurator:
         self.reward_mode = reward_mode
         self.history: list[StepRecord] = []
         self._last_window: Optional[MetricsWindow] = None
+        self._last_fleet_windows: Optional[list] = None
 
     # -- state encoding -------------------------------------------------------
     def _lever_fracs(self, config: dict) -> dict[str, float]:
@@ -154,8 +189,9 @@ class Configurator:
             report = self.env.apply_config(new_config)
             stab_s = self.env.stabilisation_time()
             if stab_s > 0:
-                self.env.observe(stab_s)  # paper §4.2: wait for stabilisation,
-                #                           reward measured on the window AFTER it
+                # paper §4.2: wait for stabilisation; the reward is measured
+                # on the window AFTER it, so skip summaries when the env can
+                getattr(self.env, "advance", self.env.observe)(stab_s)
             window = self.env.observe(self.window_s)
             reward = reward_from_latency(window.latencies_ms, self.reward_mode)
 
@@ -170,13 +206,72 @@ class Configurator:
         self._last_window = window
         return traj, records
 
+    def run_fleet_episodes(self, *, explore: bool = True
+                           ) -> tuple[list[Trajectory], list[StepRecord]]:
+        """Algorithm 1's episode batch as N *parallel* episodes — one per
+        fleet cluster. Each step: one vmapped policy dispatch over all cluster
+        states, one batched apply/stabilise/observe across the fleet. The
+        trajectories then feed the same per-step-baseline REINFORCE update as
+        the serial path (the batch axis is the episode axis)."""
+        env = self.env
+        N = env.n_clusters
+        trajs = [Trajectory() for _ in range(N)]
+        records: list[list[StepRecord]] = [[] for _ in range(N)]
+        configs = env.current_configs()
+        windows = self._last_fleet_windows or env.observe(self.window_s)
+        for _ in range(self.steps_per_episode):
+            states = np.stack([self._encode(w, c)
+                               for w, c in zip(windows, configs)])
+            t0 = time.perf_counter()
+            actions = self.agent.act_batch(states, explore=explore)
+            gen_s = (time.perf_counter() - t0) / N
+            decoded = [self.agent.action_decode(int(a)) for a in actions]
+            new_configs = [self.disc.apply(c, lever, direction)
+                           for c, (lever, direction) in zip(configs, decoded)]
+            reports = env.apply_configs(new_configs,
+                                        changed_levers=[(l,) for l, _ in decoded])
+            stabs = env.stabilisation_times()
+            env.advance(stabs)  # paper §4.2: reward measured after stabilisation
+            windows = env.observe(self.window_s)
+            for i in range(N):
+                reward = reward_from_latency(windows[i].latencies_ms,
+                                             self.reward_mode)
+                trajs[i].add(states[i], int(actions[i]), reward)
+                lever, direction = decoded[i]
+                records[i].append(StepRecord(
+                    lever=lever, direction=direction,
+                    config=dict(new_configs[i]), reward=reward,
+                    p99_ms=windows[i].p99_ms, clock_s=windows[i].clock_s,
+                    phases={"generation_s": gen_s,
+                            "loading_s": reports[i]["load_s"],
+                            "stabilisation_s": float(stabs[i]),
+                            "update_s": 0.0},
+                ))
+            configs = new_configs
+        self._last_fleet_windows = windows
+        return trajs, [r for cluster in records for r in cluster]
+
     def run_update(self) -> dict:
-        """One Algorithm-1 outer iteration: N episodes then a policy update."""
-        trajs, all_records = [], []
-        for _ in range(self.episodes_per_update):
-            t, r = self.run_episode()
-            trajs.append(t)
-            all_records.extend(r)
+        """One Algorithm-1 outer iteration: N episodes then a policy update.
+        Against a FleetTuningEnv the N episodes run in parallel, one per
+        cluster; serially otherwise."""
+        if self.fleet:
+            # small fleets still need a real episode batch: Algorithm 1's
+            # per-step baseline is the across-episode mean, which degenerates
+            # (zero advantages) with a single episode — run enough fleet
+            # passes to reach episodes_per_update episodes
+            passes = max(1, -(-self.episodes_per_update // self.env.n_clusters))
+            trajs, all_records = [], []
+            for _ in range(passes):
+                t, r = self.run_fleet_episodes()
+                trajs.extend(t)
+                all_records.extend(r)
+        else:
+            trajs, all_records = [], []
+            for _ in range(self.episodes_per_update):
+                t, r = self.run_episode()
+                trajs.append(t)
+                all_records.extend(r)
         t0 = time.perf_counter()
         stats = self.agent.update(trajs)
         upd_s = time.perf_counter() - t0

@@ -48,6 +48,11 @@ def policy_probs(params: PyTree, state: jnp.ndarray) -> jnp.ndarray:
     return jax.nn.softmax(policy_logits(params, state))
 
 
+#: vmapped action distribution over a fleet of per-cluster states (N, state_dim)
+#: -> (N, n_actions); one device dispatch for the whole episode batch.
+policy_probs_batch = jax.jit(jax.vmap(policy_probs, in_axes=(None, 0)))
+
+
 @jax.jit
 def _batch_pg_loss(params: PyTree, states: jnp.ndarray, actions: jnp.ndarray,
                    advantages: jnp.ndarray, mask: jnp.ndarray,
@@ -139,6 +144,34 @@ class ReinforceAgent:
             sub = probs[:2] + 1e-9  # actions 0/1 = top lever's +/- directions
             return int(self._rng.choice(2, p=sub / sub.sum()))
         return int(self._rng.choice(self.n_actions, p=probs))
+
+    def act_batch(self, states: np.ndarray, *, explore: bool = True) -> np.ndarray:
+        """Sample one action per fleet cluster from (N, state_dim) states.
+
+        The policy forward pass is a single vmapped dispatch
+        (``policy_probs_batch``); the f-exploitation gate and the categorical
+        draw are vectorised inverse-CDF sampling, so a fleet step costs one
+        network evaluation instead of N (Algorithm 1's episode batch runs as
+        N parallel episodes — see Configurator.run_fleet_episodes)."""
+        states = np.asarray(states, np.float32)
+        probs = np.asarray(policy_probs_batch(self.params, jnp.asarray(states)))
+        probs = probs / probs.sum(axis=1, keepdims=True)
+        N = probs.shape[0]
+        # inverse-CDF categorical sampling over the full action space
+        u = self._rng.uniform(size=N)
+        full_a = (np.cumsum(probs, axis=1) < u[:, None]).sum(axis=1)
+        full_a = np.minimum(full_a, self.n_actions - 1)
+        exploit_ready = self.n_updates >= self.f_warmup_updates
+        if not (explore and exploit_ready):
+            return full_a.astype(np.int64)
+        # exploitation: restrict to the top lever's two directions per row
+        sub = probs[:, :2] + 1e-9
+        sub = sub / sub.sum(axis=1, keepdims=True)
+        u2 = self._rng.uniform(size=N)
+        sub_a = (np.cumsum(sub, axis=1) < u2[:, None]).sum(axis=1)
+        sub_a = np.minimum(sub_a, 1)
+        gate = self._rng.uniform(size=N) < self.f
+        return np.where(gate, sub_a, full_a).astype(np.int64)
 
     # -- learning (Algorithm 1) -----------------------------------------------
     def update(self, episodes: Sequence[Trajectory]) -> dict:

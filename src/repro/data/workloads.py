@@ -65,6 +65,10 @@ class PoissonWorkload(Workload):
     event_size_mb: float = 0.5    # Gaussian mean (sd = 0.3·mean, paper §4.4)
     name: str = "poisson"
 
+    # time-invariant rate/size: lets the fleet sim hoist rate() out of the
+    # per-tick loop (repro.engine.simcluster.FleetCore.observe_fleet)
+    constant = True
+
     def rate(self, t: float) -> float:
         return self.lam
 
@@ -160,6 +164,36 @@ class SwitchingWorkload(Workload):
 
     def mean_size(self, t: float) -> float:
         return self.active(t).mean_size(t)
+
+
+#: Default roster used to build heterogeneous fleets: a spread of steady,
+#: diurnal, bursty and regime-switching arrival processes (paper §4.4/§4.5).
+FLEET_MIX: tuple = ("poisson_low", "trapezoid", "yahoo_ads", "iot",
+                    "switching", "poisson_high")
+
+
+def fleet_workloads(n: int, *, seed: int = 0,
+                    mix: Optional[Sequence[str]] = None) -> list[Workload]:
+    """Deterministic heterogeneous workload roster for an N-cluster fleet.
+
+    Cluster ``i`` gets ``mix[i % len(mix)]``; stochastic generators (IoT) are
+    seeded ``seed + i`` so the roster is fully determined by ``(n, seed, mix)``
+    — replicating a fleet replays the exact same arrival processes, which is
+    what makes fleet runs reproducible window-for-window (tests/test_fleet.py).
+
+    Note for pooled analysis (AutoTuner over one fleet): cluster identity is
+    an unmodelled covariate in the Lasso, so mixing wildly different rate
+    scales (poisson_high's λ2=100k ev/s next to ads traffic) dilutes lever
+    recovery; pass a ``mix`` of comparable scales or spend a bigger collect
+    budget when the full roster is used.
+    """
+    roster = tuple(mix) if mix is not None else FLEET_MIX
+    out: list[Workload] = []
+    for i in range(n):
+        name = roster[i % len(roster)]
+        kw = {"seed": seed + i} if name == "iot" else {}
+        out.append(get_workload(name, **kw))
+    return out
 
 
 def get_workload(name: str, **kw) -> Workload:

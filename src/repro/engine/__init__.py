@@ -2,16 +2,19 @@
 and simulated-at-scale (SimCluster), sharing lever specs and the 90-metric
 monitoring contract."""
 from repro.engine.engine import BatchReport, EngineConfig, StreamEngine
+from repro.engine.fleet import FleetEnv
 from repro.engine.levers import EFFECTIVE, LEVER_NAMES, LEVER_SPECS, build_lever_specs
 from repro.engine.local import LOCAL_LEVERS, LocalEngine
 from repro.engine.queue import EventBuffer, IdempotentSink
-from repro.engine.simcluster import MetricsWindowData, SimCluster, SimSpec
+from repro.engine.simcluster import FleetCore, MetricsWindowData, SimCluster, SimSpec
 
 __all__ = [
     "BatchReport",
     "EFFECTIVE",
     "EngineConfig",
     "EventBuffer",
+    "FleetCore",
+    "FleetEnv",
     "IdempotentSink",
     "LEVER_NAMES",
     "LEVER_SPECS",

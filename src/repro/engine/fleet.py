@@ -1,0 +1,103 @@
+"""FleetEnv — the fleet-parallel simulation layer (DESIGN.md §2a).
+
+The paper's offline phase explores lever space on ~80 EC2 clusters running in
+parallel. ``FleetEnv`` reproduces that shape in simulation: N independent
+``SimCluster`` states — heterogeneous workloads, models and seeds — stepped
+in a single batched call. All queueing/performance maths are vectorised over
+the cluster axis (``repro.engine.simcluster.FleetCore``); only the RNG draws
+stay on per-cluster ``np.random.Generator`` streams, which makes a fleet run
+*bit-for-bit identical* to N serial ``SimCluster`` runs with matched seeds
+(tests/test_fleet.py proves it) while being an order of magnitude faster
+(benchmarks/fleet_scaling.py measures it).
+
+API shape (the plural twin of ``TuningEnv``; see
+``repro.core.configurator.FleetTuningEnv``):
+
+    env = FleetEnv.heterogeneous(64, seed=0)     # mixed workloads
+    reports = env.apply_configs(configs)         # one config per cluster
+    stabs = env.stabilisation_times()            # (N,) seconds
+    windows = env.observe(stabs)                 # per-cluster windows
+    windows = env.observe(240.0)                 # shared window
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.discretize import LeverSpec
+from repro.data.workloads import PoissonWorkload, Workload, fleet_workloads
+from repro.engine.levers import LEVER_SPECS
+from repro.engine.simcluster import FleetCore, MetricsWindowData, SimSpec
+
+
+class FleetEnv(FleetCore):
+    """N simulated clusters stepped as one batch (the paper's 80-cluster sweep)."""
+
+    def __init__(
+        self,
+        workloads: Optional[Sequence[Workload]] = None,
+        models: Optional[Sequence[ModelConfig]] = None,
+        *,
+        n: Optional[int] = None,
+        model: Optional[ModelConfig] = None,
+        spec: Optional[SimSpec] = None,
+        lever_specs: Optional[Sequence[LeverSpec]] = None,
+        seeds: Optional[Sequence[int]] = None,
+        seed: int = 0,
+    ):
+        from repro import configs
+
+        if workloads is None:
+            workloads = [PoissonWorkload(10_000, 0.5) for _ in range(n or 8)]
+        workloads = list(workloads)
+        n = len(workloads)
+        if models is None:
+            base = model or configs.get("smollm_135m")
+            models = [base] * n
+        if seeds is None:
+            seeds = [seed + i for i in range(n)]
+        assert len(models) == n and len(list(seeds)) == n
+        super().__init__(workloads, list(models), spec or SimSpec(),
+                         list(lever_specs or LEVER_SPECS), list(seeds))
+
+    # ------------------------------------------------------------ constructors
+    @classmethod
+    def homogeneous(cls, n: int, workload_factory=None, *, seed: int = 0,
+                    **kw) -> "FleetEnv":
+        """N identical-workload clusters with distinct seeds (the serial-loop
+        baseline's natural batched twin)."""
+        factory = workload_factory or (lambda i: PoissonWorkload(10_000, 0.5))
+        return cls([factory(i) for i in range(n)], seed=seed, **kw)
+
+    @classmethod
+    def heterogeneous(cls, n: int, *, seed: int = 0, mix=None, **kw) -> "FleetEnv":
+        """N clusters over the deterministic mixed-workload roster
+        (``repro.data.workloads.fleet_workloads``), mimicking the paper's
+        fleet of differently-loaded production clusters."""
+        return cls(fleet_workloads(n, seed=seed, mix=mix), seed=seed, **kw)
+
+    # ----------------------------------------------------------------- env API
+    @property
+    def n_clusters(self) -> int:
+        return self.n
+
+    def current_configs(self) -> list[dict]:
+        return [dict(c) for c in self.configs]
+
+    def observe(self, window_s) -> list[MetricsWindowData]:
+        """Advance all clusters; ``window_s`` is a scalar or an (N,) array of
+        per-cluster windows (e.g. per-cluster stabilisation times)."""
+        return self.observe_fleet(window_s)
+
+    def advance(self, window_s) -> None:
+        """observe() minus the unread window summaries (stabilisation waits)."""
+        self.advance_fleet(window_s)
+
+    def runnable_mask(self, configs: Sequence[dict]) -> np.ndarray:
+        """(N,) bool — which candidate configs the paper's allow-list accepts."""
+        return self.runnable(configs)
+
+    def clocks(self) -> np.ndarray:
+        return self.clock.copy()

@@ -10,8 +10,9 @@ dry-run reports for the real models.
 
 Performance model per micro-batch (batch interval T_b, a lever):
 
-  service = t_overhead + max(t_compute, t_memory) + t_collective
+  service = t_overhead + t_compute · mem_penalty + t_collective
   t_compute    ~ batch_tokens · c_tok / (chips · peak · eff)
+  mem_penalty  ~ 1 + spill cliff once the KV/working set overflows HBM
   t_collective ~ tp-dependent per-token collective bytes / ICI, reduced by
                  compression and microbatch overlap
   t_overhead   ~ dispatch + driver stalls (driver memory / allocator / GC
@@ -22,10 +23,21 @@ utilisation ρ = service/T_b; backlog drains at the spare capacity. Event
 latency = batching wait + queue delay + service (+ straggler / failure
 tails). ~17 of the 109 levers move these terms (engine/levers.py EFFECTIVE);
 the rest are inert — Lasso must recover the distinction.
+
+Fleet-parallel form (DESIGN.md §2a): the paper explores lever space on ~80
+EC2 clusters in parallel, so the whole performance/queueing model here is
+written *array-over-clusters*: every state variable is an ``(N,)`` array and
+every model term is computed for all N clusters in one vectorised pass
+(``pack_configs`` / ``service_terms_arrays`` / ``FleetCore``). Only the
+per-cluster RNG draws stay on independent ``np.random.Generator`` streams so
+a fleet of N clusters is *bit-for-bit* identical to N serial ``SimCluster``
+runs with matched seeds. ``SimCluster`` itself is the N=1 view over
+``FleetCore``; ``repro.engine.fleet.FleetEnv`` is the N>1 batched env.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections.abc import Mapping
 from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
@@ -35,18 +47,59 @@ from repro.configs.base import ModelConfig
 from repro.core.discretize import LeverSpec
 from repro.data.workloads import Workload, PoissonWorkload
 from repro.engine.levers import LEVER_SPECS
-from repro.monitoring.metrics import REGISTRY, TimeSeriesStore
+from repro.monitoring.metrics import FACTORS, FleetSeriesStore, REGISTRY
 
 PEAK_FLOPS = 197e12
 TOKENS_PER_MB = 16.0
 
+# Categorical lever -> performance-model factor tables (DESIGN.md §2).
+_REMAT_FACTOR = {"none": 1.0, "block": 1.12, "full": 1.35}
+_KV_BLOCK_PRESSURE = {64: 0.28, 128: 0.18, 256: 0.22, 512: 0.3}
+_TP_COMPUTE = {4: 1.18, 8: 1.06, 16: 1.0, 32: 1.07}
+_GRAD_COMPRESSION = {"int8": 0.55, "topk": 0.4}
+
+# Cap on per-tick latency samples (events sampled per micro-batch).
+_MAX_LAT_SAMPLES = 64
+
+# Ticks of randomness drawn per cluster per bulk-draw chunk. Bulk draws into
+# persistent buffers amortise Generator call overhead (~3x fewer RNG ms per
+# window at fleet size 64) while keeping per-cluster streams: cluster i's
+# stream consumption depends only on its own tick count, never on fleet size.
+_CHUNK_TICKS = 32
+
+
+class LazyPerNode(Mapping):
+    """Read-only metric->(n_nodes,) mapping over a dense (nodes, metrics)
+    window matrix. Column views materialise on access, so consumers that
+    touch a handful of the 90 metrics (the heat-map encoder reads ~7) don't
+    pay for 90 eager dict entries per window."""
+
+    __slots__ = ("_matrix", "_index")
+
+    def __init__(self, matrix: np.ndarray, index: dict):
+        self._matrix = matrix
+        self._index = index
+
+    def __getitem__(self, name: str) -> np.ndarray:
+        return self._matrix[:, self._index[name]]
+
+    def __iter__(self):
+        return iter(self._index)
+
+    def __len__(self) -> int:
+        return len(self._index)
+
 
 @dataclass
 class MetricsWindowData:
-    per_node: dict
+    per_node: Mapping
     latencies_ms: np.ndarray
     p99_ms: float
     clock_s: float
+    # (n_nodes, n_metrics) window average in registry order — the dense twin
+    # of per_node, letting consumers reduce all 90 metrics in one array op
+    # instead of 90 dict lookups (None for envs that don't provide it)
+    node_matrix: Optional[np.ndarray] = None
 
     @property
     def mean_ms(self) -> float:
@@ -71,8 +124,597 @@ class SimSpec:
                                    # backlog (and latency) cannot grow unboundedly
 
 
+# --------------------------------------------------------------------------
+# Array-over-clusters performance model (DESIGN.md §2a)
+# --------------------------------------------------------------------------
+
+#: packed-array key -> scalar extractor over one config dict. Categorical
+#: levers are mapped straight to their model factors so the hot path is pure
+#: float arithmetic over the cluster axis. ("emit_every": paper cadence — 90
+#: metrics per simulated MINUTE per node, i.e. every round(60/T_b) ticks.)
+_PACKERS: dict = {
+    "T_b": lambda c: float(c["batch_interval_s"]),
+    "max_batch_events": lambda c: float(c["max_batch_events"]),
+    "eff_block_q": lambda c: 1.0 if c["attn_block_q"] == 128 else 0.88,
+    "eff_block_k": lambda c: 1.0 if c["attn_block_k"] == 128 else 0.9,
+    "eff_dtype": lambda c: 1.0 if c["compute_dtype"] == "bf16" else 0.5,
+    "remat": lambda c: _REMAT_FACTOR[c["remat_policy"]],
+    "kv_pressure": lambda c: _KV_BLOCK_PRESSURE[int(c["kv_block"])],
+    "tp": lambda c: float(int(c["model_axis_size"])),
+    "tp_compute": lambda c: _TP_COMPUTE[int(c["model_axis_size"])],
+    "compression": lambda c: _GRAD_COMPRESSION.get(c["grad_compression"], 1.0),
+    "mb": lambda c: float(int(c["microbatch_count"])),
+    "expert_parallel": lambda c: bool(c["expert_parallel"]),
+    "driver_memory_gb": lambda c: float(c["driver_memory_gb"]),
+    "allocator_arena_mb": lambda c: float(c["allocator_arena_mb"]),
+    "sink_partitions": lambda c: float(int(c["sink_partitions"])),
+    "prefetch_depth": lambda c: float(max(int(c["prefetch_depth"]), 0)),
+    "backup_tasks": lambda c: bool(c["backup_tasks"]),
+    "straggler_timeout_s": lambda c: float(c["straggler_timeout_s"]),
+    "failure_inject_frac": lambda c: float(c["failure_inject_frac"]),
+    "max_inflight_batches": lambda c: float(c["max_inflight_batches"]),
+    "emit_every": lambda c: max(1, int(round(60.0 / float(c["batch_interval_s"])))),
+}
+
+#: lever name -> packed keys it feeds, for in-place single-lever updates
+_LEVER_TO_PACKED: dict = {
+    "batch_interval_s": ("T_b", "emit_every"),
+    "max_batch_events": ("max_batch_events",),
+    "attn_block_q": ("eff_block_q",),
+    "attn_block_k": ("eff_block_k",),
+    "compute_dtype": ("eff_dtype",),
+    "remat_policy": ("remat",),
+    "kv_block": ("kv_pressure",),
+    "model_axis_size": ("tp", "tp_compute"),
+    "grad_compression": ("compression",),
+    "microbatch_count": ("mb",),
+    "expert_parallel": ("expert_parallel",),
+    "driver_memory_gb": ("driver_memory_gb",),
+    "allocator_arena_mb": ("allocator_arena_mb",),
+    "sink_partitions": ("sink_partitions",),
+    "prefetch_depth": ("prefetch_depth",),
+    "backup_tasks": ("backup_tasks",),
+    "straggler_timeout_s": ("straggler_timeout_s",),
+    "failure_inject_frac": ("failure_inject_frac",),
+    "max_inflight_batches": ("max_inflight_batches",),
+}
+
+
+def pack_configs(configs: Sequence[dict]) -> dict[str, np.ndarray]:
+    """Extract the service-model levers of N cluster configs into (N,) arrays."""
+    return {k: np.array([f(c) for c in configs]) for k, f in _PACKERS.items()}
+
+
+def model_constants(models: Sequence[ModelConfig]) -> dict[str, np.ndarray]:
+    """Per-cluster model constants the service model consumes."""
+    return {
+        "flops_per_tok": np.array([2.0 * m.active_param_count() for m in models]),
+        "kv_per_tok": np.array([float(m.num_layers * m.num_kv_heads
+                                      * m.resolved_head_dim * 2 * 2) for m in models]),
+        "is_moe": np.array([m.family == "moe" for m in models]),
+    }
+
+
+def service_terms_arrays(cc: dict[str, np.ndarray], mc: dict[str, np.ndarray],
+                         spec: SimSpec, chips: int, rate, ev_size,
+                         batch_events=None) -> dict[str, np.ndarray]:
+    """The per-micro-batch service model, vectorised over the cluster axis.
+
+    All inputs are (N,) arrays (or scalars that broadcast); the returned terms
+    are (N,) arrays. This is the single implementation both the serial
+    ``SimCluster`` (N=1) and the batched ``FleetEnv`` step through, so serial
+    and fleet results agree bit-for-bit.
+    """
+    T_b = cc["T_b"]
+    if batch_events is None:
+        batch_events = np.minimum(rate * T_b, cc["max_batch_events"])
+    tokens = batch_events * ev_size * TOKENS_PER_MB
+
+    # --- efficiency factors (kernel / precision / padding levers) -------
+    eff = spec.base_mfu * cc["eff_block_q"] * cc["eff_block_k"] * cc["eff_dtype"]
+    t_compute = tokens * mc["flops_per_tok"] * cc["remat"] / (chips * PEAK_FLOPS * eff)
+
+    # --- memory pressure (kv block / batch size / hbm budget) -----------
+    kv_gb = tokens * mc["kv_per_tok"] / 1e9
+    mem_frac = np.minimum(kv_gb / (chips * spec.hbm_gb_per_chip) + cc["kv_pressure"], 1.5)
+    t_mem_penalty = 1.0 + np.maximum(mem_frac - 1.0, 0.0) * 2.0  # spill cliff
+
+    # --- collective term (tp size / compression / microbatch overlap) ----
+    coll = spec.collective_frac * t_compute * (cc["tp"] / 16.0) ** 0.5
+    coll = coll * cc["compression"]
+    coll = coll / (1.0 + 0.45 * (cc["mb"] - 1.0))            # overlap with compute
+    moe = mc["is_moe"] & cc["expert_parallel"]
+    t_compute = np.where(moe, t_compute * 0.92, t_compute)   # no replicated expert FFN
+    coll = np.where(moe, coll * 1.15, coll)                  # but adds all-to-all
+    # tp also trades compute efficiency (smaller per-chip matmuls)
+    t_compute = t_compute * cc["tp_compute"]
+
+    # --- overhead (dispatch / driver stalls / sink / prefetch) -----------
+    ovh = spec.dispatch_overhead_s * (1.0 + 0.12 * (cc["mb"] - 1.0))
+    ovh = ovh + spec.driver_gc_coeff / np.maximum(cc["driver_memory_gb"], 1.0) * 0.1
+    ovh = ovh + 0.12 * np.maximum(
+        np.log2(512.0 / np.maximum(cc["allocator_arena_mb"], 32.0)), 0.0)
+    sink = cc["sink_partitions"]
+    ovh = ovh + 0.25 / np.maximum(sink, 1.0) + 0.004 * sink
+    ovh = ovh * (0.45 + 0.55 / (1.0 + cc["prefetch_depth"]))
+
+    service = ovh + t_compute * t_mem_penalty + coll
+    zeros = np.zeros_like(service)
+    return {
+        "service": service, "t_compute": t_compute * t_mem_penalty,
+        "t_overhead": ovh, "t_collective": coll,
+        "mem_frac": np.minimum(mem_frac, 1.0), "eff": eff + zeros,
+        "tokens": tokens + zeros, "straggler": zeros, "failure": zeros.copy(),
+    }
+
+
+def _row_percentiles(arr: np.ndarray, qs: np.ndarray) -> np.ndarray:
+    """Per-row percentiles via one multi-kth partition + linear interpolation.
+
+    Row results depend only on that row's values (partition and lerp are
+    per-row), so N=1 and N=64 stepping stay bitwise identical — and one
+    ``np.partition`` call replaces the much heavier ``np.percentile``
+    machinery on this per-tick path.
+    """
+    L = arr.shape[1]
+    pos = (L - 1) * qs / 100.0
+    lo = np.floor(pos).astype(np.int64)
+    hi = np.ceil(pos).astype(np.int64)
+    part = np.partition(arr, np.unique(np.concatenate([lo, hi])), axis=1)
+    a, b = part[:, lo], part[:, hi]
+    return a + (pos - lo) * (b - a)
+
+
+_PCT_TICK = np.array([50.0, 95.0, 99.0])
+_PCT_P99 = np.array([99.0])
+
+_EMIT_CONST: Optional[dict] = None
+
+
+def _emission_constants() -> dict:
+    """(factors × metrics) loading, scale, noise, bias arrays — shared by all
+    clusters (the registry is a module-level constant)."""
+    global _EMIT_CONST
+    if _EMIT_CONST is None:
+        M = len(REGISTRY)
+        W = np.zeros((len(FACTORS), M))
+        findex = {f: i for i, f in enumerate(FACTORS)}
+        for j, m in enumerate(REGISTRY):
+            for f, w in m.loading.items():
+                W[findex[f], j] = w
+        li = {m.name: j for j, m in enumerate(REGISTRY)}
+        _EMIT_CONST = {
+            "W": W,
+            "scale": np.array([m.scale for m in REGISTRY]),
+            "noise_v": np.array([m.noise for m in REGISTRY]),
+            "bias": np.array([m.bias for m in REGISTRY]),
+            "is_driver": np.array([m.scope == "driver" for m in REGISTRY]),
+            "lat_cols": np.array([li["latency_mean_ms"], li["latency_p50_ms"],
+                                  li["latency_p95_ms"], li["latency_p99_ms"],
+                                  li["latency_max_ms"]]),
+            "queue_col": li["queue_depth"],
+        }
+    return _EMIT_CONST
+
+
+class FleetCore:
+    """Array-over-clusters state + batched stepping for N simulated clusters.
+
+    Every piece of queueing state (clock, backlog, server occupancy, reconfig
+    count) is an (N,) array and a single ``_tick`` advances all live clusters
+    at once. Heterogeneity is free: each cluster has its own workload, model,
+    config dict and RNG stream. ``SimCluster`` wraps an N=1 instance;
+    ``FleetEnv`` exposes the N>1 batched environment (DESIGN.md §2a).
+    """
+
+    def __init__(self, workloads: Sequence[Workload], models: Sequence[ModelConfig],
+                 spec: SimSpec, lever_specs: Sequence[LeverSpec],
+                 seeds: Sequence[int]):
+        assert len(workloads) == len(models) == len(seeds)
+        self.n = len(workloads)
+        self.workloads = list(workloads)
+        self.models = list(models)
+        self.spec = spec
+        self.lever_specs = list(lever_specs)
+        self.specs_by_name = {s.name: s for s in self.lever_specs}
+        self.metric_names = [m.name for m in REGISTRY]
+        self.n_nodes = spec.n_nodes
+        self.chips = (spec.n_nodes - 1) * spec.chips_per_worker
+        self.mc = model_constants(self.models)
+        # SFC64: ~25 % faster bulk normal generation than PCG64 on this hot
+        # path; one independent stream per cluster, seeded per cluster.
+        self.rngs = [np.random.Generator(np.random.SFC64(s)) for s in seeds]
+        self.node_speed = np.stack(
+            [1.0 + 0.03 * rng.standard_normal(self.n_nodes) for rng in self.rngs])
+        self.clock = np.zeros(self.n)
+        self.backlog = np.zeros(self.n)
+        self.server_free = np.zeros(self.n)
+        self.reconfigs = np.zeros(self.n, np.int64)
+        self.last_service = np.full(self.n, np.nan)
+        self.last_load_s = np.zeros(self.n)
+        self.configs = [self._default_config() for _ in range(self.n)]
+        self.store = FleetSeriesStore(self.metric_names, self.n, self.n_nodes)
+        self._packed: Optional[dict] = None
+        self._crate: Optional[np.ndarray] = None
+        # (N, nodes, metrics) emission factor: metric scale × per-node speed
+        # for worker metrics, plain scale for driver metrics — folding three
+        # broadcast passes of the emission hot loop into one
+        emc = _emission_constants()
+        self._emit_factor = self.node_speed[:, :, None] * emc["scale"][None, None, :]
+        self._emit_factor[:, :, emc["is_driver"]] = emc["scale"][emc["is_driver"]]
+
+    # ------------------------------------------------------------- config
+    def _default_config(self) -> dict:
+        return {s.name: s.default_value() for s in self.lever_specs}
+
+    def packed(self) -> dict[str, np.ndarray]:
+        if self._packed is None:
+            self._packed = pack_configs(self.configs)
+        return self._packed
+
+    def invalidate(self) -> None:
+        self._packed = None
+
+    # ---------------------------------------------------------------- env ops
+    def reset(self) -> None:
+        self.clock[:] = 0.0
+        self.backlog[:] = 0.0
+        self.server_free[:] = 0.0
+        self.reconfigs[:] = 0
+        self.last_service[:] = np.nan
+        self.configs = [self._default_config() for _ in range(self.n)]
+        self.store.clear()
+        self.invalidate()
+
+    def apply_configs(self, configs: Sequence[dict],
+                      changed_levers: Optional[Sequence] = None) -> list[dict]:
+        """Install one config per cluster. Reconfiguration costs loading time
+        while Kafka buffers arrivals (paper §4.2); per-cluster RNG keeps the
+        fleet bit-compatible with serial runs.
+
+        ``changed_levers`` (per-cluster iterables of lever names) lets callers
+        that know exactly which levers moved skip the 109-key config diff AND
+        keeps the packed lever arrays updated in place instead of repacked."""
+        reports = []
+        incremental = changed_levers is not None and self._packed is not None
+        for i, cfg in enumerate(configs):
+            old = self.configs[i]
+            if changed_levers is None:
+                changed = [k for k, v in cfg.items() if old.get(k) != v]
+            else:
+                changed = [k for k in changed_levers[i] if old.get(k) != cfg.get(k)]
+            reboot = any(self.specs_by_name[k].reboot for k in changed)
+            rejit = any(self.specs_by_name[k].group in ("kernel", "memory", "parallel")
+                        for k in changed)
+            load_s = 10.0 + (60.0 if reboot else 0.0) + (8.0 if rejit else 0.0)
+            load_s *= 1.0 + self.spec.noise * abs(self.rngs[i].standard_normal())
+            # Kafka buffers arrivals during the reconfiguration (paper §4.2)
+            self.backlog[i] += self.workloads[i].rate(self.clock[i]) * load_s
+            self.clock[i] += load_s
+            self.configs[i] = dict(cfg)
+            self.reconfigs[i] += 1
+            self.last_load_s[i] = load_s
+            reports.append({"load_s": float(load_s), "rebooted": reboot})
+            if incremental:
+                for k in changed:
+                    for key in _LEVER_TO_PACKED.get(k, ()):
+                        self._packed[key][i] = _PACKERS[key](cfg)
+        if not incremental:
+            self.invalidate()
+        return reports
+
+    def stabilisation_times(self) -> np.ndarray:
+        """Paper §4.2: stabilisation detected from latency-variance trends,
+        '<3 min 99 % of the time'. Modelled as base + term ∝ service change."""
+        rate = np.array([w.rate(t) for w, t in zip(self.workloads, self.clock)])
+        size = np.array([w.mean_size(t) for w, t in zip(self.workloads, self.clock)])
+        s_new = service_terms_arrays(self.packed(), self.mc, self.spec,
+                                     self.chips, rate, size)["service"]
+        prev = np.where(np.isnan(self.last_service), s_new, self.last_service)
+        rel = np.abs(s_new - prev) / np.maximum(prev, 1e-6)
+        self.last_service = s_new
+        return np.clip(30.0 + 240.0 * rel, 30.0, 180.0)
+
+    def runnable(self, configs: Sequence[dict]) -> np.ndarray:
+        """Paper's allow-list, vectorised: keep only configs the engine could
+        schedule (service within 2.5 batch intervals, ≥70 % throughput)."""
+        rate = np.array([w.rate(t) for w, t in zip(self.workloads, self.clock)])
+        size = np.array([w.mean_size(t) for w, t in zip(self.workloads, self.clock)])
+        cc = pack_configs(configs)
+        service = service_terms_arrays(cc, self.mc, self.spec, self.chips,
+                                       rate, size)["service"]
+        T_b = cc["T_b"]
+        batch = np.minimum(rate * T_b, cc["max_batch_events"])
+        throughput = batch / np.maximum(service, T_b)
+        return (service <= 2.5 * T_b) & (throughput >= 0.7 * rate)
+
+    # ---------------------------------------------------------- bulk RNG draws
+    def _buffers(self) -> dict:
+        """Persistent per-chunk draw buffers (allocated once; RNG fills them
+        in place with ``out=`` so bulk generation has no allocation cost)."""
+        if not hasattr(self, "_buf"):
+            n, ch, nodes, M = self.n, _CHUNK_TICKS, self.n_nodes, len(REGISTRY)
+            self._buf = {
+                "z": np.empty((n, ch)),            # arrival noise
+                "u_strag": np.empty((n, ch)),      # straggler gate
+                "u_raw": np.empty((n, ch)),        # straggler severity
+                "u_fail": np.empty((n, ch)),       # failure gate
+                "waits_u": np.empty((n, ch, _MAX_LAT_SAMPLES)),  # batching waits
+                "z2": np.empty((n, ch, _MAX_LAT_SAMPLES)),       # latency jitter
+                "mnoise": np.empty((n, ch, nodes, M)),           # metric noise
+            }
+        return self._buf
+
+    def _draw_chunk(self, ch_act: np.ndarray, remaining: np.ndarray,
+                    t0: int, emit_every: np.ndarray, forced: np.ndarray,
+                    n_ticks: np.ndarray) -> dict:
+        """Fill the draw buffers for the next ≤_CHUNK_TICKS ticks of every
+        active cluster, each from its own Generator stream. A cluster draws
+        exactly ``min(chunk, its remaining ticks)`` ticks' worth (and one
+        metric-noise slot per metric *emission* in that span, including the
+        forced final-tick emission of sub-minute windows), so stream
+        consumption is independent of fleet composition — the bit-for-bit
+        guarantee behind tests/test_fleet.py."""
+        buf = self._buffers()
+        z, u_strag, u_raw, u_fail = (buf["z"], buf["u_strag"], buf["u_raw"],
+                                     buf["u_fail"])
+        waits_u, z2, mnoise = buf["waits_u"], buf["z2"], buf["mnoise"]
+        for i in ch_act:
+            L = int(min(_CHUNK_TICKS, remaining[i]))
+            ee = int(emit_every[i])
+            n_emit = (t0 + L) // ee - t0 // ee
+            if forced[i] and t0 <= n_ticks[i] - 1 < t0 + L:
+                n_emit += 1
+            rng = self.rngs[i]
+            rng.standard_normal(out=z[i, :L])
+            rng.random(out=u_strag[i, :L])
+            rng.random(out=u_raw[i, :L])
+            rng.random(out=u_fail[i, :L])
+            rng.random(out=waits_u[i, :L])
+            rng.standard_normal(out=z2[i, :L])
+            if n_emit:
+                rng.standard_normal(out=mnoise[i, :n_emit])
+        return buf
+
+    def observe_fleet(self, window_s, *,
+                      summarise: bool = True) -> Optional[list[MetricsWindowData]]:
+        """Advance every cluster by its window and emit per-cluster metrics.
+
+        ``window_s`` may be a scalar (same window for all) or an (N,) array
+        (per-cluster stabilisation windows). Clusters tick on their own
+        ``batch_interval_s``, so tick counts differ; each tick advances the
+        still-active subset in one vectorised pass. ``summarise=False`` skips
+        the window-summary construction (see ``advance_fleet``).
+        """
+        win = np.asarray(window_s, float)
+        if win.ndim == 0:
+            win = np.full(self.n, float(win))
+        cc = self.packed()
+        n_ticks = np.maximum(1, np.round(win / cc["T_b"]).astype(np.int64))
+        self.server_free = np.maximum(self.server_free, self.clock)
+        # constant-rate workloads (Poisson) skip the per-tick Python rate()
+        # calls; a workload's constancy cannot change mid-observe
+        if all(getattr(w, "constant", False) for w in self.workloads):
+            self._crate = np.array([w.rate(t) for w, t in
+                                    zip(self.workloads, self.clock)])
+            self._csize = np.array([w.mean_size(t) for w, t in
+                                    zip(self.workloads, self.clock)])
+        else:
+            self._crate = None
+        lat_acc: list[list[np.ndarray]] = [[] for _ in range(self.n)]
+        emc = _emission_constants()
+        # windows shorter than one emission period would otherwise emit no
+        # metric sample at all: force one on the final tick instead
+        forced = n_ticks < cc["emit_every"]
+        max_t = int(n_ticks.max())
+        all_ids = np.arange(self.n)
+        for t0 in range(0, max_t, _CHUNK_TICKS):
+            ch_act = np.nonzero(n_ticks > t0)[0]
+            buf = self._draw_chunk(ch_act, n_ticks - t0, t0, cc["emit_every"],
+                                   forced, n_ticks)
+            for dt in range(min(_CHUNK_TICKS, max_t - t0)):
+                live = n_ticks > t0 + dt
+                act = all_ids if live.all() else np.nonzero(live)[0]
+                self._tick(act, cc, lat_acc, emc, buf, dt, t0, forced, n_ticks)
+        if not summarise:
+            return None
+        return self._window_results(win, lat_acc)
+
+    def advance_fleet(self, window_s) -> None:
+        """``observe_fleet`` without the window summaries — for stabilisation
+        waits whose metrics nobody reads (reward is measured on the window
+        AFTER stabilisation, paper §4.2). RNG-stream-identical to a full
+        observe of the same span."""
+        self.observe_fleet(window_s, summarise=False)
+
+    def _window_results(self, win: np.ndarray,
+                        lat_acc: list) -> list[MetricsWindowData]:
+        """Window-end summaries, with equal-shape clusters sharing one
+        vectorised stats pass (bitwise identical to per-cluster reduction)."""
+        zero = np.zeros((self.n_nodes, len(self.metric_names)))
+        # window samples are always fully populated (the store only hands back
+        # appended rows), so plain mean — no NaN-replacement copies
+        avgs = [
+            np.mean(w, axis=0) if w.shape[0] else zero
+            for w in (self.store.window_of(i, win[i], self.clock[i])
+                      for i in range(self.n))
+        ]
+        lats = [np.concatenate(lat_acc[i]) if lat_acc[i] else np.zeros(1)
+                for i in range(self.n)]
+        p99 = np.empty(self.n)
+        lens = np.array([l.size for l in lats])
+        for L in np.unique(lens):
+            rows = np.nonzero(lens == L)[0]
+            p99[rows] = _row_percentiles(
+                np.stack([lats[i] for i in rows]), _PCT_P99)[:, 0]
+        index = self.store.index
+        return [
+            MetricsWindowData(
+                per_node=LazyPerNode(avgs[i], index),
+                latencies_ms=lats[i],
+                p99_ms=float(p99[i]),
+                clock_s=float(self.clock[i]),
+                node_matrix=avgs[i],
+            )
+            for i in range(self.n)
+        ]
+
+    # ------------------------------------------------------------- tick
+    def _tick(self, act: np.ndarray, cc: dict, lat_acc: list, emc: dict,
+              buf: dict, dt: int, t0: int, forced: np.ndarray,
+              n_ticks: np.ndarray) -> None:
+        """One micro-batch tick for the active cluster subset ``act``."""
+        spec = self.spec
+        wls, clock = self.workloads, self.clock
+        full = act.size == self.n
+        ccs = cc if full else {k: v[act] for k, v in cc.items()}
+        mcs = self.mc if full else {k: v[act] for k, v in self.mc.items()}
+        take = (lambda a: a[:, dt]) if full else (lambda a: a[act, dt])
+        T_b = ccs["T_b"]
+        if self._crate is not None:
+            rate = self._crate if full else self._crate[act]
+            ev_size = self._csize if full else self._csize[act]
+        else:
+            rate = np.array([wls[i].rate(clock[i]) for i in act])
+            ev_size = np.array([wls[i].mean_size(clock[i]) for i in act])
+        z = take(buf["z"])
+        arrivals = rate * T_b * (1.0 + spec.noise * z)
+        # age of the oldest backlog BEFORE this tick's arrivals join
+        backlog = self.backlog[act]
+        backlog_age = backlog / np.maximum(rate, 1.0)
+        backlog = backlog + np.maximum(arrivals, 0.0)
+        # Kafka retention: events older than retention_s age out (dropped)
+        backlog = np.minimum(backlog, rate * spec.retention_s)
+        batch = np.minimum(backlog, ccs["max_batch_events"])
+        terms = service_terms_arrays(ccs, mcs, spec, self.chips, rate, ev_size, batch)
+        service = terms["service"]
+        # straggler / failure tails — gates and severities from the per-cluster
+        # streams, tail shaping fully vectorised
+        slo, shi = spec.straggler_slow
+        smask = take(buf["u_strag"]) < spec.straggler_prob
+        raw = slo + (shi - slo) * take(buf["u_raw"])
+        timeout_slow = np.minimum(
+            raw, np.maximum(1.2, 1.0 + ccs["straggler_timeout_s"]
+                            / np.maximum(T_b, 1e-3)))
+        # speculative re-execution (backup_tasks) hides the tail at 1.1x
+        slow = np.where(smask, np.where(ccs["backup_tasks"], 1.1, timeout_slow), 1.0)
+        fmask = take(buf["u_fail"]) < ccs["failure_inject_frac"]
+        slow = np.where(fmask, slow * 2.0, slow)
+        service = service * slow
+        # single logical server per cluster: a batch starts when both the
+        # window has closed AND the previous batch finished (service > T_b
+        # piles up). max_inflight_batches bounds the scheduling queue
+        # (backpressure): beyond it, events WAIT IN KAFKA (backlog ages)
+        # instead of piling into in-flight batches — so sustained throughput
+        # is batch/service.
+        batch_close = clock[act] + T_b
+        start = np.maximum(batch_close, self.server_free[act])
+        done = start + service
+        inflight_cap = np.maximum(ccs["max_inflight_batches"], 1.0) * T_b
+        self.server_free[act] = np.minimum(done, batch_close + inflight_cap)
+        processed = np.where(service <= T_b, batch, batch * (T_b / service))
+        self.backlog[act] = np.maximum(backlog - processed, 0.0)
+        rho = service / T_b
+        queue_delay = (start - batch_close) + backlog_age
+        # per-event latency sample: padded (m, 64) math, rows sliced to their
+        # own sample count n_s afterwards
+        n_s = np.maximum(np.minimum(batch.astype(np.int64), _MAX_LAT_SAMPLES), 1)
+        waits = take(buf["waits_u"]) * T_b[:, None]
+        z2 = take(buf["z2"])
+        lat_ms = (waits + queue_delay[:, None]
+                  + service[:, None] * (1.0 + 0.1 * np.abs(z2))) * 1000.0
+        for j in range(act.size):
+            lat_acc[act[j]].append(lat_ms[j, :n_s[j]])
+        clock[act] = clock[act] + T_b
+        # metric emission at the paper's cadence: once per simulated minute
+        # (every emit_every ticks) — plus a forced final-tick sample for
+        # sub-minute windows — while latency is sampled every tick
+        t = t0 + dt
+        ee = ccs["emit_every"]
+        forced_a = forced if full else forced[act]
+        final_a = (n_ticks if full else n_ticks[act]) - 1 == t
+        emask = ((t + 1) % ee == 0) | (forced_a & final_a)
+        if not emask.any():
+            return
+        sub = slice(None) if emask.all() else np.nonzero(emask)[0]
+        act_e = act if emask.all() else act[sub]
+        # per-cluster metric-noise slot: ordinal of this emission within the
+        # current draw chunk (mirrors _draw_chunk's consumption accounting);
+        # a forced emission is its window's only one, hence slot 0
+        ee_e = ee[sub]
+        slot = np.where(forced_a[sub], 0, (t + 1) // ee_e - t0 // ee_e - 1)
+        if act_e.size == self.n and slot.max() == slot.min():
+            noise = buf["mnoise"][:, int(slot[0])]
+        else:
+            noise = buf["mnoise"][act_e, slot]
+        terms = {k: v[sub] for k, v in terms.items()}
+        terms.update(service=service[sub], straggler=smask[sub].astype(float),
+                     failure=fmask[sub].astype(float), rho=rho[sub])
+        self._emit(act_e, terms, queue_delay[sub], lat_ms[sub], n_s[sub],
+                   emc, noise)
+
+    # ------------------------------------------------------------ metric emission
+    def _emit(self, act: np.ndarray, terms: dict, queue_delay: np.ndarray,
+              lat_ms: np.ndarray, n_s: np.ndarray, emc: dict,
+              noise: np.ndarray) -> None:
+        m = act.size
+        s = np.maximum(terms["service"], 1e-6)
+        rho = terms["rho"]
+        lvec = np.stack([
+            np.minimum(rho, 3.0) + 0.2 * np.log1p(queue_delay),          # load
+            np.minimum(terms["t_compute"] / s, 1.0) * np.minimum(rho, 1.0),  # compute
+            terms["mem_frac"],                                           # memory
+            terms["t_collective"] / s,                                   # network
+            terms["t_overhead"] / s,                                     # host
+            terms["eff"] / self.spec.base_mfu,                           # efficiency
+            terms["straggler"] + terms["failure"] + 0.1 * self.reconfigs[act],
+            0.6 * np.minimum(rho, 1.0) + 0.4 * terms["eff"],             # power
+        ], axis=1)                                                       # (m, 8)
+        W, bias = emc["W"], emc["bias"]
+        # einsum (not BLAS) keeps the factor-sum order independent of m, so
+        # N=1 and N=64 stepping stay bitwise identical
+        base = np.einsum("mf,fk->mk", lvec, W) + bias                    # (m, metrics)
+        F = self._emit_factor if m == self.n else self._emit_factor[act]
+        # compute straight into the store's next ring slot when the fleet is
+        # in lockstep — skips one (m, nodes, metrics) copy per tick
+        slot = self.store.lockstep_slot() if m == self.n else None
+        if slot is None:
+            if not hasattr(self, "_emit_scratch"):
+                self._emit_scratch = np.empty_like(self._emit_factor)
+            vals = self._emit_scratch[:m]
+        else:
+            vals = slot
+        np.multiply(F, base[:, None, :], out=vals)                       # (m, nodes, metrics)
+        # relative metric noise, applied in place (noise slots are consumed
+        # exactly once per chunk, so mutating the draw buffer is safe)
+        noise *= emc["noise_v"]
+        noise += 1.0
+        vals *= noise
+        # ground the latency metrics in the actual simulated latencies;
+        # equal-length sample rows share one vectorised stats pass
+        stats = np.empty((m, 5))
+        lo, hi = int(n_s.min()), int(n_s.max())
+        for L in ((hi,) if lo == hi else np.unique(n_s)):
+            rows = slice(None) if lo == hi else np.nonzero(n_s == L)[0]
+            arr = lat_ms[rows, :L]
+            stats[rows, 0] = np.mean(arr, axis=1)
+            stats[rows, 1:4] = _row_percentiles(arr, _PCT_TICK)
+            stats[rows, 4] = np.max(arr, axis=1)
+        vals[:, :, emc["lat_cols"]] = stats[:, None, :]
+        vals[:, :, emc["queue_col"]] = self.backlog[act][:, None]
+        if slot is None:
+            self.store.append_batch(act, self.clock[act], vals)
+        else:
+            self.store.commit_slot(self.clock)
+
+
 class SimCluster:
-    """Implements repro.core.configurator.TuningEnv on a simulated clock."""
+    """Implements repro.core.configurator.TuningEnv on a simulated clock.
+
+    The N=1 view over ``FleetCore``: all queueing/perf maths run through the
+    same array-over-clusters code path the fleet uses, which is what makes
+    ``FleetEnv`` batching bit-for-bit equivalent to serial stepping.
+    """
 
     def __init__(
         self,
@@ -88,239 +730,92 @@ class SimCluster:
         self.workload = workload or PoissonWorkload(10_000, 0.5)
         self.model = model or configs.get("smollm_135m")
         self.spec = spec or SimSpec()
-        self.lever_specs = list(lever_specs or LEVER_SPECS)
-        self.metric_names = [m.name for m in REGISTRY]
-        self.n_nodes = self.spec.n_nodes
-        self._rng = np.random.default_rng(seed)
-        self.store = TimeSeriesStore(self.metric_names, self.n_nodes)
-        self.clock = 0.0
-        self.backlog_events = 0.0
-        self.config = {s.name: s.default_value() for s in self.lever_specs}
-        self._reconfig_count = 0
-        self._last_service = None
-        self._server_free = 0.0
-        self._node_speed = 1.0 + 0.03 * self._rng.standard_normal(self.n_nodes)
+        self._core = FleetCore([self.workload], [self.model], self.spec,
+                               list(lever_specs or LEVER_SPECS), [seed])
+        self.lever_specs = self._core.lever_specs
+        self.metric_names = self._core.metric_names
+        self.n_nodes = self._core.n_nodes
+
+    # ------------------------------------------------- N=1 views over the core
+    @property
+    def clock(self) -> float:
+        return float(self._core.clock[0])
+
+    @clock.setter
+    def clock(self, v: float) -> None:
+        self._core.clock[0] = v
+
+    @property
+    def backlog_events(self) -> float:
+        return float(self._core.backlog[0])
+
+    @backlog_events.setter
+    def backlog_events(self, v: float) -> None:
+        self._core.backlog[0] = v
+
+    @property
+    def config(self) -> dict:
+        # hand out the live dict (legacy mutate-through-getter semantics) and
+        # conservatively drop the packed-lever cache: a caller may mutate the
+        # returned dict in place, which the setter would never see
+        self._core.invalidate()
+        return self._core.configs[0]
+
+    @config.setter
+    def config(self, cfg: dict) -> None:
+        self._core.configs[0] = cfg
+        self._core.invalidate()
+
+    @property
+    def store(self) -> FleetSeriesStore:
+        return self._core.store
+
+    @property
+    def _rng(self) -> np.random.Generator:
+        return self._core.rngs[0]
+
+    @property
+    def _node_speed(self) -> np.ndarray:
+        return self._core.node_speed[0]
+
+    @property
+    def _reconfig_count(self) -> int:
+        return int(self._core.reconfigs[0])
 
     # ------------------------------------------------------------------ env API
     def reset(self) -> None:
-        self.clock = 0.0
-        self.backlog_events = 0.0
-        self.config = {s.name: s.default_value() for s in self.lever_specs}
-        self.store = TimeSeriesStore(self.metric_names, self.n_nodes)
-        self._reconfig_count = 0
-        self._last_service = None
-        self._server_free = 0.0
+        self._core.reset()
 
     def current_config(self) -> dict:
-        return dict(self.config)
+        return dict(self._core.configs[0])
 
     def apply_config(self, config: dict) -> dict:
-        changed = [k for k, v in config.items() if self.config.get(k) != v]
-        reboot = any(self._spec_of(k).reboot for k in changed)
-        rejit = any(self._spec_of(k).group in ("kernel", "memory", "parallel")
-                    for k in changed)
-        load_s = 10.0 + (60.0 if reboot else 0.0) + (8.0 if rejit else 0.0)
-        load_s *= 1.0 + self.spec.noise * abs(self._rng.standard_normal())
-        # Kafka buffers arrivals during the reconfiguration (paper §4.2)
-        self.backlog_events += self.workload.rate(self.clock) * load_s
-        self.clock += load_s
-        self.config = dict(config)
-        self._reconfig_count += 1
-        self._last_load_s = load_s
-        return {"load_s": load_s, "rebooted": reboot}
+        return self._core.apply_configs([config])[0]
 
     def stabilisation_time(self) -> float:
-        """Paper §4.2: stabilisation detected from latency-variance trends,
-        '<3 min 99 % of the time'. Modelled as base + term ∝ service change."""
-        s_new = self._service_terms(self.workload.rate(self.clock),
-                                    self.workload.mean_size(self.clock))["service"]
-        prev = self._last_service or s_new
-        rel = abs(s_new - prev) / max(prev, 1e-6)
-        self._last_service = s_new
-        return float(np.clip(30.0 + 240.0 * rel, 30.0, 180.0))
+        return float(self._core.stabilisation_times()[0])
 
     def observe(self, window_s: float) -> MetricsWindowData:
         """Advance the sim by window_s; emit metrics + latency sample."""
-        cfg = self.config
-        T_b = float(cfg["batch_interval_s"])
-        n_ticks = max(1, int(round(window_s / T_b)))
-        lat_samples = []
-        self._server_free = max(self._server_free, self.clock)
-        for _ in range(n_ticks):
-            rate = self.workload.rate(self.clock)
-            ev_size = self.workload.mean_size(self.clock)
-            arrivals = rate * T_b * (1 + self.spec.noise * self._rng.standard_normal())
-            # age of the oldest backlog BEFORE this tick's arrivals join
-            backlog_age = self.backlog_events / max(rate, 1.0)
-            self.backlog_events += max(arrivals, 0.0)
-            # Kafka retention: events older than retention_s age out (dropped)
-            self.backlog_events = min(self.backlog_events,
-                                      rate * self.spec.retention_s)
-            batch = min(self.backlog_events, float(cfg["max_batch_events"]))
-            terms = self._service_terms(rate, ev_size, batch_events=batch)
-            service = terms["service"]
-            # straggler / failure tails
-            slow = 1.0
-            if self._rng.uniform() < self.spec.straggler_prob:
-                raw = self._rng.uniform(*self.spec.straggler_slow)
-                if bool(cfg["backup_tasks"]):
-                    slow = 1.1  # speculative re-execution hides the tail
-                else:
-                    timeout = float(cfg["straggler_timeout_s"])
-                    slow = min(raw, max(1.2, 1.0 + timeout / max(T_b, 1e-3)))
-                terms["straggler"] = 1.0
-            if self._rng.uniform() < float(cfg["failure_inject_frac"]):
-                slow *= 2.0
-                terms["failure"] = 1.0
-            service *= slow
-            # single logical server: a batch starts when both the window has
-            # closed AND the previous batch finished (service > T_b piles up).
-            # max_inflight_batches bounds the scheduling queue (backpressure):
-            # beyond it, events WAIT IN KAFKA (backlog ages) instead of piling
-            # into in-flight batches — so sustained throughput is batch/service.
-            batch_close = self.clock + T_b
-            start = max(batch_close, self._server_free)
-            done = start + service
-            inflight_cap = max(float(cfg["max_inflight_batches"]), 1.0) * T_b
-            self._server_free = min(done, batch_close + inflight_cap)
-            processed = batch if service <= T_b else batch * (T_b / service)
-            self.backlog_events = max(self.backlog_events - processed, 0.0)
-            rho = service / T_b
-            queue_delay = (start - batch_close) + backlog_age
-            n_s = max(min(int(batch), 64), 1)
-            waits = self._rng.uniform(0, T_b, n_s)
-            lat = (waits + queue_delay + service
-                   * (1 + 0.1 * np.abs(self._rng.standard_normal(n_s))))
-            lat_samples.append(lat * 1000.0)
-            terms.update(rho=rho, batch=batch, queue_delay=queue_delay,
-                         rate=rate, service=service)
-            self.clock += T_b
-            self._emit_metrics(terms, lat)
-        lats = np.concatenate(lat_samples) if lat_samples else np.zeros(1)
-        return MetricsWindowData(
-            per_node=self.store.node_average(window_s, self.clock),
-            latencies_ms=lats,
-            p99_ms=float(np.percentile(lats, 99)),
-            clock_s=self.clock,
-        )
+        return self._core.observe_fleet(float(window_s))[0]
+
+    def advance(self, window_s: float) -> None:
+        """observe() minus the unread window summary (stabilisation waits)."""
+        self._core.advance_fleet(float(window_s))
 
     # ------------------------------------------------------------- perf model
     def _spec_of(self, name: str) -> LeverSpec:
-        for s in self.lever_specs:
-            if s.name == name:
-                return s
-        raise KeyError(name)
+        try:
+            return self._core.specs_by_name[name]
+        except KeyError:
+            raise KeyError(name) from None
 
     def _chips(self) -> int:
-        return (self.n_nodes - 1) * self.spec.chips_per_worker
+        return self._core.chips
 
     def _service_terms(self, rate: float, ev_size: float = 0.5,
                        batch_events: Optional[float] = None) -> dict:
-        cfg = self.config
-        T_b = float(cfg["batch_interval_s"])
-        if batch_events is None:
-            batch_events = min(rate * T_b, float(cfg["max_batch_events"]))
-        tokens = batch_events * ev_size * TOKENS_PER_MB
-
-        # --- efficiency factors (kernel / precision / padding levers) -------
-        eff = self.spec.base_mfu
-        eff *= 1.0 if cfg["attn_block_q"] == 128 else 0.88
-        eff *= 1.0 if cfg["attn_block_k"] == 128 else 0.9
-        eff *= 1.0 if cfg["compute_dtype"] == "bf16" else 0.5   # f32 halves MXU
-        remat = {"none": 1.0, "block": 1.12, "full": 1.35}[cfg["remat_policy"]]
-
-        flops_per_tok = 2.0 * self.model.active_param_count()
-        chips = self._chips()
-        t_compute = tokens * flops_per_tok * remat / (chips * PEAK_FLOPS * eff)
-
-        # --- memory pressure (kv block / batch size / hbm budget) -----------
-        kv_gb = (tokens * self.model.num_layers * self.model.num_kv_heads
-                 * self.model.resolved_head_dim * 2 * 2) / 1e9
-        mem_frac = min(kv_gb / (chips * self.spec.hbm_gb_per_chip)
-                       + {64: 0.28, 128: 0.18, 256: 0.22, 512: 0.3}[int(cfg["kv_block"])],
-                       1.5)
-        t_mem_penalty = 1.0 + max(mem_frac - 1.0, 0.0) * 2.0  # spill cliff
-
-        # --- collective term (tp size / compression / microbatch overlap) ----
-        tp = int(cfg["model_axis_size"])
-        coll = self.spec.collective_frac * t_compute * (tp / 16.0) ** 0.5
-        if cfg["grad_compression"] == "int8":
-            coll *= 0.55
-        elif cfg["grad_compression"] == "topk":
-            coll *= 0.4
-        mb = int(cfg["microbatch_count"])
-        coll /= (1.0 + 0.45 * (mb - 1))            # overlap with compute
-        if self.model.family == "moe" and bool(cfg["expert_parallel"]):
-            t_compute *= 0.92                       # no replicated expert FFN
-            coll *= 1.15                            # but adds all-to-all
-        # tp also trades compute efficiency (smaller per-chip matmuls)
-        t_compute *= {4: 1.18, 8: 1.06, 16: 1.0, 32: 1.07}[tp]
-
-        # --- overhead (dispatch / driver stalls / sink / prefetch) -----------
-        ovh = self.spec.dispatch_overhead_s * (1.0 + 0.12 * (mb - 1))
-        ovh += self.spec.driver_gc_coeff / max(float(cfg["driver_memory_gb"]), 1.0) * 0.1
-        arena = float(cfg["allocator_arena_mb"])
-        ovh += 0.12 * max(np.log2(512.0 / max(arena, 32.0)), 0.0)
-        sink = int(cfg["sink_partitions"])
-        ovh += 0.25 / max(sink, 1) + 0.004 * sink
-        pf = max(int(cfg["prefetch_depth"]), 0)
-        ovh *= 0.45 + 0.55 / (1.0 + pf)
-
-        service = ovh + max(t_compute, t_compute * 0.2) * t_mem_penalty + coll
-        return {
-            "service": float(service), "t_compute": float(t_compute * t_mem_penalty),
-            "t_overhead": float(ovh), "t_collective": float(coll),
-            "mem_frac": float(min(mem_frac, 1.0)), "eff": float(eff),
-            "tokens": float(tokens), "straggler": 0.0, "failure": 0.0,
-        }
-
-    # ------------------------------------------------------------ metric emission
-    def _loading_matrices(self):
-        """Cache (factors × metrics) loading, scale, noise, bias arrays."""
-        if not hasattr(self, "_W"):
-            from repro.monitoring.metrics import FACTORS
-
-            M = len(REGISTRY)
-            self._W = np.zeros((len(FACTORS), M))
-            self._scale = np.array([m.scale for m in REGISTRY])
-            self._noise_v = np.array([m.noise for m in REGISTRY])
-            self._bias = np.array([m.bias for m in REGISTRY])
-            self._is_driver = np.array([m.scope == "driver" for m in REGISTRY])
-            self._factor_index = {f: i for i, f in enumerate(FACTORS)}
-            for j, m in enumerate(REGISTRY):
-                for f, w in m.loading.items():
-                    self._W[self._factor_index[f], j] = w
-        return self._W
-
-    def _emit_metrics(self, terms: dict, lat_s: np.ndarray) -> None:
-        s = max(terms["service"], 1e-6)
-        latents = {
-            "load": min(terms["rho"], 3.0) + 0.2 * np.log1p(terms["queue_delay"]),
-            "compute": min(terms["t_compute"] / s, 1.0) * min(terms["rho"], 1.0),
-            "memory": terms["mem_frac"],
-            "network": terms["t_collective"] / s,
-            "host": terms["t_overhead"] / s,
-            "efficiency": terms["eff"] / self.spec.base_mfu,
-            "reliability": terms["straggler"] + terms["failure"]
-            + 0.1 * self._reconfig_count,
-            "power": 0.6 * min(terms["rho"], 1.0) + 0.4 * terms["eff"],
-        }
-        W = self._loading_matrices()
-        lvec = np.array([latents[f] for f in
-                         ("load", "compute", "memory", "network", "host",
-                          "efficiency", "reliability", "power")])
-        base = lvec @ W + self._bias                       # (metrics,)
-        vals = self._node_speed[:, None] * base[None, :]   # (nodes, metrics)
-        vals[:, self._is_driver] = base[self._is_driver]   # driver metrics: no node scale
-        noise = 1.0 + self._noise_v[None, :] * self._rng.standard_normal(vals.shape)
-        vals = self._scale[None, :] * vals * noise
-        # ground the latency metrics in the actual simulated latencies
-        li = self.store.index
-        lat_ms = lat_s * 1000.0
-        vals[:, li["latency_mean_ms"]] = float(np.mean(lat_ms))
-        vals[:, li["latency_p50_ms"]] = float(np.percentile(lat_ms, 50))
-        vals[:, li["latency_p95_ms"]] = float(np.percentile(lat_ms, 95))
-        vals[:, li["latency_p99_ms"]] = float(np.percentile(lat_ms, 99))
-        vals[:, li["latency_max_ms"]] = float(np.max(lat_ms))
-        vals[:, li["queue_depth"]] = self.backlog_events
-        self.store.append(self.clock, vals)
+        terms = service_terms_arrays(
+            self._core.packed(), self._core.mc, self.spec, self._core.chips,
+            rate, ev_size, batch_events)
+        return {k: float(np.asarray(v).reshape(-1)[0]) for k, v in terms.items()}

@@ -180,3 +180,82 @@ class TimeSeriesStore:
             return {n: np.zeros(self.n_nodes) for n in self.names}
         avg = np.nanmean(w, axis=0)  # (nodes, metrics)
         return {n: avg[:, self.index[n]] for n in self.names}
+
+
+class FleetSeriesStore:
+    """Batched ``TimeSeriesStore``: one ring buffer over (time, cluster, node,
+    metric) so a fleet tick appends every cluster's sample in a single scatter
+    (DESIGN.md §2a). Clusters keep independent heads/counts/timestamps —
+    ragged fleets (per-cluster batch intervals) stay exact."""
+
+    def __init__(self, names: Sequence[str], n_clusters: int, n_nodes: int,
+                 capacity: int = 256):
+        # capacity sizes the look-back: metric emission is 1/simulated-minute
+        # (DESIGN.md §2), so 256 slots cover >4 h windows while keeping the
+        # ring ~120 MB at fleet size 64 (4096 slots would be ~1.9 GB)
+        self.names = list(names)
+        self.index = {n: i for i, n in enumerate(self.names)}
+        self.n_clusters = n_clusters
+        self.n_nodes = n_nodes
+        self.capacity = capacity
+        self._t = np.zeros((capacity, n_clusters))
+        self._v = np.zeros((capacity, n_clusters, n_nodes, len(self.names)))
+        # fault the ring in now: appends walk forward through fresh slots, so
+        # lazily-paged memory would otherwise page-fault on the hot path for
+        # the first `capacity` ticks
+        self._v.fill(0.0)
+        self._head = np.zeros(n_clusters, np.int64)
+        self._count = np.zeros(n_clusters, np.int64)
+        self._ids = np.arange(n_clusters)
+
+    def clear(self) -> None:
+        """Reset to empty without reallocating (or re-faulting) the ring."""
+        self._head[:] = 0
+        self._count[:] = 0
+        self._t[:] = 0.0
+
+    def lockstep_slot(self) -> Optional[np.ndarray]:
+        """When every cluster's ring head coincides (fleets ticking in
+        lockstep — the common case), expose the next slot as a writable
+        (n_clusters, n_nodes, n_metrics) view so emission can compute straight
+        into the ring without an intermediate array. Commit with
+        ``commit_slot``; returns None when heads have diverged."""
+        h0 = int(self._head[0])
+        if (self._head == h0).all():
+            return self._v[h0]
+        return None
+
+    def commit_slot(self, ts: np.ndarray) -> None:
+        """Finalise a ``lockstep_slot`` write at per-cluster times ts."""
+        h0 = int(self._head[0])
+        self._t[h0] = ts
+        self._head[:] = (h0 + 1) % self.capacity
+        np.minimum(self._count + 1, self.capacity, out=self._count)
+
+    def append_batch(self, ids: np.ndarray, ts: np.ndarray,
+                     values: np.ndarray) -> None:
+        """values (len(ids), n_nodes, n_metrics) at per-cluster times ts."""
+        h = self._head[ids]
+        h0 = int(h[0])
+        if (ids.size == self.n_clusters and (h == h0).all()
+                and (ids == self._ids).all()):
+            # lockstep fleet (the common case): one contiguous slice write.
+            # The ids==arange guard matters — values row i must land in
+            # cluster i, so a permuted ids batch takes the scatter path.
+            self._v[h0] = values
+            self._t[h0] = ts
+            self._head[:] = (h0 + 1) % self.capacity
+        else:
+            self._v[h, ids] = values
+            self._t[h, ids] = ts
+            self._head[ids] = (h + 1) % self.capacity
+        self._count[ids] = np.minimum(self._count[ids] + 1, self.capacity)
+
+    def window_of(self, i: int, seconds: float, now: float) -> np.ndarray:
+        """(samples, n_nodes, n_metrics) for cluster i, t in [now-seconds, now]."""
+        c = int(self._count[i])
+        if c == 0:
+            return np.zeros((0, self.n_nodes, len(self.names)))
+        idx = (int(self._head[i]) - np.arange(1, c + 1)) % self.capacity
+        sel = idx[self._t[idx, i] >= now - seconds]
+        return self._v[sel[::-1], i]

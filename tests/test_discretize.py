@@ -1,6 +1,7 @@
 """§2.4.1 dynamic discretisation: split / extend / merge / jitter / bounds."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep; skip, never fail collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core.discretize import DynamicBins, LeverDiscretiser, LeverSpec

@@ -39,6 +39,8 @@ for arch, shape in cells:
         compiled = bundle.lower().compile()
         hlo = compiled.as_text()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jax returns [dict]
+            cost = cost[0] if cost else {}
         coll = collective_bytes_from_hlo(hlo)
         terms = roofline_terms(float(cost.get("flops", 0.0)),
                                float(cost.get("bytes accessed", 0.0)), coll, 8)

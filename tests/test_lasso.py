@@ -1,6 +1,7 @@
 """§2.3 Lasso path lever ranking."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep; skip, never fail collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core import lasso

@@ -1,6 +1,7 @@
 """§2.2 metric selection: variance filter, spline repair, FA, k-means."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep; skip, never fail collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core import metrics_selection as ms

@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep; skip, never fail collection
 from hypothesis import given, settings, strategies as st
 
 from repro.optim import adamw, clip_by_global_norm, rmsprop, sgd

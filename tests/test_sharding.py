@@ -2,6 +2,7 @@
 import jax
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep; skip, never fail collection
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
