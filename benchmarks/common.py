@@ -48,3 +48,16 @@ def make_dist2_env(seed: int = 0):
     from repro.engine import SimCluster
 
     return SimCluster(PoissonWorkload(100_000, 5.0), seed=seed)
+
+
+def write_json(rows: list, path, meta: dict = None) -> None:
+    """Persist benchmark rows as ``BENCH_*.json`` so CI can archive the perf
+    trajectory as workflow artifacts."""
+    import json
+    from pathlib import Path
+
+    out = {"meta": meta or {},
+           "rows": [{"name": r.name, "value": r.value, "unit": r.unit,
+                     "derived": r.derived} for r in rows]}
+    Path(path).write_text(json.dumps(out, indent=2))
+    print(f"[json] wrote {path}", flush=True)

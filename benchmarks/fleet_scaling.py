@@ -1,28 +1,34 @@
-"""Fleet-parallel exploration throughput: FleetEnv vs the serial loop.
+"""Fleet exploration throughput: numpy oracle vs the device-resident engine.
 
 The paper's offline phase sweeps lever space on ~80 EC2 clusters in
 parallel; this benchmark measures how fast the simulated twin of that sweep
-runs. For each fleet size N it times the real §2.1 exploration loop
-(``AutoTuner.collect``: random single-lever perturbation + guard + apply +
-stabilisation + observation window, one window per cluster per round) three
-ways:
+runs, across the three tick backends (DESIGN.md §9). Two measurements:
 
-  * **baseline** — N seed-repository ``SerialBaselineCluster`` environments
-    stepped one at a time (``benchmarks/serial_baseline.py``: the per-scalar
-    pre-FleetEnv serial loop this refactor replaces — the ≥10× acceptance
-    gate is against this);
-  * **serial**   — N post-refactor ``SimCluster`` environments stepped one
-    at a time (the same array core at N=1; shows how much of the win the
-    refactor gives even WITHOUT batching);
-  * **fleet**    — one batched ``FleetEnv`` stepping all N clusters per call.
+1. **Legacy scaling rows** (PR 1 continuity): the `AutoTuner.collect` loop
+   on the numpy backend against the seed repository's per-scalar serial
+   environment (`benchmarks/serial_baseline.py`).
+2. **Backend matrix** (`explore_*` rows): the §2.1 exploration round —
+   one random single-lever change per cluster (vectorised static-grid walk),
+   allow-list guard, apply, stabilisation preroll, one 240 s observation
+   window — identical for every backend, sized per backend:
 
-A second scenario runs a heterogeneous fleet with ``SwitchingWorkload``
-members through a short REINFORCE phase, flips the workload regime mid-run
-and reports the recovery (paper §4.5) — adaptation exercised across clusters
-with different arrival processes.
+       numpy    N ≤ 64      (the PR 1 fleet; the ≥10x reference)
+       jax      N = 1024+   (device-resident lax.scan engine)
+       pallas   N small     (fused fleet_tick kernel, interpret mode on CPU)
 
-    PYTHONPATH=src python benchmarks/fleet_scaling.py           # full
-    PYTHONPATH=src python benchmarks/fleet_scaling.py --tiny    # CI smoke
+   Device backends are prewarmed through their jit shape ladder before
+   timing (one-time compile, excluded — the thing being measured is the
+   steady-state sweep).
+
+The acceptance gate: jax at N=1024 must clear **≥10x exploration windows/s**
+over the numpy fleet at N=64 on the same loop.
+
+    PYTHONPATH=src python benchmarks/fleet_scaling.py                 # full
+    PYTHONPATH=src python benchmarks/fleet_scaling.py --backend jax   # gate
+    PYTHONPATH=src python benchmarks/fleet_scaling.py --quick         # CI
+
+Writes ``BENCH_fleet_scaling.json`` (override with ``--json``) so CI can
+archive the perf trajectory.
 """
 from __future__ import annotations
 
@@ -34,13 +40,134 @@ import time
 import numpy as np
 
 try:
-    from benchmarks.common import Row, emit
+    from benchmarks.common import Row, emit, write_json
 except ModuleNotFoundError:  # direct `python benchmarks/fleet_scaling.py`
     sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-    from benchmarks.common import Row, emit
+    from benchmarks.common import Row, emit, write_json
 
 WINDOW_S = 240.0
 
+
+# --------------------------------------------------------------------------
+# the §2.1 exploration round, identical across backends
+# --------------------------------------------------------------------------
+
+class FleetWalker:
+    """Vectorised random single-lever walk over N config dicts (paper §2.1:
+    'modified the value of one in 109 levers' per window).
+
+    Continuous levers step one bin on a static 10-bin grid (log levers in
+    log space) with ridge jitter — the non-adaptive twin of
+    ``LeverDiscretiser.apply``, batched so proposing 1024 changes costs
+    milliseconds, not a python round-trip per cluster."""
+
+    def __init__(self, specs, configs, seed: int = 0):
+        self.specs = list(specs)
+        self.configs = configs          # owned; mutated in place
+        self.rng = np.random.default_rng(seed)
+        self.grids = {}
+        for s in self.specs:
+            if s.kind in ("float", "int", "log"):
+                lo, hi = ((np.log(s.lo), np.log(s.hi)) if s.kind == "log"
+                          else (s.lo, s.hi))
+                self.grids[s.name] = np.linspace(lo, hi, 11)
+
+    def propose(self):
+        """Mutate one random lever per cluster; returns (changed, undo)."""
+        N = len(self.configs)
+        idx = self.rng.integers(len(self.specs), size=N)
+        direction = self.rng.choice([-1, 1], size=N)
+        jit = self.rng.uniform(-1, 1, size=N)
+        changed, undo = [], []
+        for i in range(N):
+            s = self.specs[idx[i]]
+            cfg = self.configs[i]
+            old = cfg[s.name]
+            if s.kind == "bool":
+                new = not bool(old)
+            elif s.kind == "choice":
+                j = s.choices.index(old)
+                new = s.choices[(j + direction[i]) % len(s.choices)]
+            else:
+                e = self.grids[s.name]
+                v = np.log(old) if s.kind == "log" else old
+                b = int(np.clip(np.searchsorted(e, v, "right") - 1, 0, 9))
+                b2 = int(np.clip(b + direction[i], 0, 9))
+                mid = (0.5 * (e[b2] + e[b2 + 1])
+                       + jit[i] * 0.1 * (e[b2 + 1] - e[b2]))
+                new = float(np.exp(mid)) if s.kind == "log" else float(mid)
+                if s.kind == "int":
+                    new = int(round(new))
+            cfg[s.name] = new
+            changed.append((s.name,))
+            undo.append((s.name, old))
+        return changed, undo
+
+    def revert(self, ok, undo) -> None:
+        for i, o in enumerate(ok):
+            if not o:
+                name, old = undo[i]
+                self.configs[i][name] = old
+
+
+def explore_windows_per_s(n: int, backend: str, rounds: int, seed: int,
+                          warmup: int = 3) -> float:
+    """Steady-state §2.1 exploration throughput for one (backend, N)."""
+    from repro.data.workloads import PoissonWorkload
+    from repro.engine import FleetEnv
+
+    env = FleetEnv([PoissonWorkload(10_000, 0.5) for _ in range(n)],
+                   seeds=[seed + i for i in range(n)], backend=backend)
+    env.prewarm(WINDOW_S)
+    configs = env.current_configs()
+    walker = FleetWalker(env.lever_specs, configs, seed=seed)
+
+    def round_():
+        changed, undo = walker.propose()
+        ok = env.runnable_delta(configs, changed)
+        walker.revert(ok, undo)
+        changed = [ch if o else () for ch, o in zip(changed, ok)]
+        env.apply_configs(configs, changed_levers=changed, copy=False)
+        stabs = env.stabilisation_times()
+        return env.observe_stats(WINDOW_S, preroll_s=stabs)
+
+    for _ in range(warmup):
+        round_()
+    stats = None
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        stats = round_()
+    # device backends queue asynchronously: the sweep ends when the last
+    # window's stats actually exist
+    float(np.asarray(stats["p99_ms"])[0])
+    dt = time.perf_counter() - t0
+    return n * rounds / dt
+
+
+def backend_matrix(plan: list, rounds: int, seed: int) -> list[Row]:
+    """``plan`` is [(backend, (sizes...)), ...]; emits explore_* rows plus
+    the device-speedup gate row."""
+    rows: list[Row] = []
+    wps: dict = {}
+    for backend, sizes in plan:
+        for n in sizes:
+            w = explore_windows_per_s(n, backend, rounds, seed)
+            wps[(backend, n)] = w
+            rows.append(Row(f"explore_{backend}{n}_windows_per_s", w, "win/s",
+                            "§2.1 round: walk+guard+apply+stabilise+observe"))
+    ref = wps.get(("numpy", 64))
+    jax_sizes = [n for (b, n) in wps if b == "jax"]
+    if ref and jax_sizes:
+        n_max = max(jax_sizes)
+        rows.append(Row(f"device_speedup_jax{n_max}_vs_numpy64",
+                        wps[("jax", n_max)] / ref, "x",
+                        "acceptance gate: >=10x"))
+    return rows
+
+
+# --------------------------------------------------------------------------
+# legacy PR 1 rows: AutoTuner.collect vs the seed serial baseline
+# --------------------------------------------------------------------------
 
 def _collect_serial(n: int, rounds: int, seed: int, env_cls) -> float:
     from repro.core import AutoTuner
@@ -98,7 +225,7 @@ def scaling(sizes, rounds: int, seed: int) -> list[Row]:
         ]
         speedup_at_max = speedup
     rows.append(Row("speedup_at_max_fleet", speedup_at_max, "x",
-                    f"target >=10x at N={sizes[-1]}"))
+                    f"PR 1 gate: >=10x at N={sizes[-1]}"))
     return rows
 
 
@@ -154,32 +281,72 @@ def adaptation(n: int, updates: int, seed: int) -> list[Row]:
 
 def run(seed: int = 0) -> list[Row]:
     """Aggregate-harness entry (python -m benchmarks.run): mid-size budget."""
-    return scaling((1, 16, 64), rounds=6, seed=seed) + adaptation(16, 2, seed)
+    rows = scaling((1, 16, 64), rounds=6, seed=seed)
+    rows += backend_matrix([("numpy", (64,)), ("jax", (256,))],
+                           rounds=8, seed=seed)
+    rows += adaptation(16, 2, seed)
+    return rows
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--tiny", action="store_true",
-                    help="CI smoke: tiny fleets, one round, skip heavy parts")
+    ap.add_argument("--quick", "--tiny", action="store_true", dest="quick",
+                    help="CI smoke: tiny fleets, few rounds, all backends, "
+                         "no gate")
+    ap.add_argument("--backend", choices=["all", "numpy", "jax", "pallas"],
+                    default="all",
+                    help="which explore backends to measure (numpy N=64 is "
+                         "always included as the speedup reference)")
     ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--explore-rounds", type=int, default=16,
+                    help="timed §2.1 rounds per (backend, N) in the matrix")
+    ap.add_argument("--jax-sizes", type=int, nargs="+", default=[256, 1024])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="BENCH_fleet_scaling.json",
+                    help="perf-trajectory artifact path ('' to skip)")
+    ap.add_argument("--skip-legacy", action="store_true",
+                    help="skip the PR 1 serial-baseline scaling rows")
     args = ap.parse_args(argv)
 
-    if args.tiny:
-        sizes, rounds, adapt_n, updates = (1, 4), 1, 4, 1
+    rows: list[Row] = []
+    if args.quick:
+        rows += backend_matrix(
+            [("numpy", (8,)), ("jax", (8,)), ("pallas", (8,))],
+            rounds=2, seed=args.seed)
+        rows += scaling((1, 4), rounds=1, seed=args.seed)
     else:
-        sizes, rounds, adapt_n, updates = (1, 8, 16, 64), args.rounds, 16, 2
-
-    rows = scaling(sizes, rounds, args.seed)
-    rows += adaptation(adapt_n, updates, args.seed)
+        if not args.skip_legacy:
+            rows += scaling((1, 8, 16, 64), args.rounds, args.seed)
+        plan = [("numpy", (64,))]
+        if args.backend in ("all", "jax"):
+            plan.append(("jax", tuple(args.jax_sizes)))
+        if args.backend in ("all", "pallas"):
+            # interpret mode off-TPU: a small fleet, as a correctness +
+            # relative-cost reference, not a speed claim
+            plan.append(("pallas", (32,)))
+        rows += backend_matrix(plan, args.explore_rounds, args.seed)
+        if args.backend in ("all", "numpy"):
+            rows += adaptation(16, 2, args.seed)
     emit(rows)
+    if args.json:
+        import platform
 
-    speedup = next(r.value for r in rows if r.name == "speedup_at_max_fleet")
-    if not args.tiny and speedup < 10.0:
-        print(f"FAIL: fleet speedup {speedup:.1f}x < 10x at N={sizes[-1]}",
-              file=sys.stderr)
-        return 1
-    return 0
+        write_json(rows, args.json, meta={
+            "bench": "fleet_scaling", "quick": args.quick,
+            "backend": args.backend, "seed": args.seed,
+            "python": platform.python_version(),
+        })
+
+    failed = 0
+    if not args.quick:
+        for name, label in (("device_speedup_jax", "device speedup"),
+                            ("speedup_at_max_fleet", "PR 1 fleet speedup")):
+            gate = next((r for r in rows if r.name.startswith(name)), None)
+            if gate is not None and gate.value < 10.0:
+                print(f"FAIL: {label} {gate.value:.1f}x < 10x",
+                      file=sys.stderr)
+                failed = 1
+    return failed
 
 
 if __name__ == "__main__":

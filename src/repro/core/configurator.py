@@ -63,12 +63,16 @@ class FleetTuningEnv(Protocol):
     def reset(self) -> None: ...
     def current_configs(self) -> list[dict]: ...
     def apply_configs(self, configs: Sequence[dict],
-                      changed_levers: Optional[Sequence] = None) -> list[dict]:
+                      changed_levers: Optional[Sequence] = None,
+                      copy: bool = True) -> list[dict]:
         """Install one config per cluster; list of {'load_s', 'rebooted'}.
-        ``changed_levers`` optionally names each cluster's moved levers so the
-        env can skip the full config diff."""
-    def observe(self, window_s) -> list[MetricsWindow]:
-        """Advance all clusters by window_s (scalar or per-cluster array)."""
+        ``changed_levers`` optionally names each cluster's moved levers so
+        the env can skip the full config diff; ``copy=False`` hands over
+        ownership of the dicts (hot-loop contract, DESIGN.md §9)."""
+    def observe(self, window_s, preroll_s=None) -> list[MetricsWindow]:
+        """Advance all clusters by window_s (scalar or per-cluster array);
+        ``preroll_s`` prepends a stabilisation wait excluded from the
+        window (fused on-device for jax/pallas backends)."""
     def advance(self, window_s) -> None:
         """observe() without building window summaries (stabilisation waits)."""
     def stabilisation_times(self) -> np.ndarray:
@@ -212,9 +216,17 @@ class Configurator:
         fleet cluster. Each step: one vmapped policy dispatch over all cluster
         states, one batched apply/stabilise/observe across the fleet. The
         trajectories then feed the same per-step-baseline REINFORCE update as
-        the serial path (the batch axis is the episode axis)."""
+        the serial path (the batch axis is the episode axis).
+
+        Over a device-backed fleet (``env.backend`` jax/pallas, DESIGN.md §9)
+        the step tightens further: action sampling is one fused device
+        program (``act_batch_device``), the §4.2 stabilisation wait is fused
+        into the observation window (``observe(..., preroll_s=...)``), and
+        rewards come from the device-computed window means instead of
+        materialising every cluster's latency sample on the host."""
         env = self.env
         N = env.n_clusters
+        device = getattr(env, "backend", "numpy") != "numpy"
         trajs = [Trajectory() for _ in range(N)]
         records: list[list[StepRecord]] = [[] for _ in range(N)]
         configs = env.current_configs()
@@ -223,7 +235,11 @@ class Configurator:
             states = np.stack([self._encode(w, c)
                                for w, c in zip(windows, configs)])
             t0 = time.perf_counter()
-            actions = self.agent.act_batch(states, explore=explore)
+            if device:
+                actions = np.asarray(self.agent.act_batch_device(
+                    states, explore=explore))
+            else:
+                actions = self.agent.act_batch(states, explore=explore)
             gen_s = (time.perf_counter() - t0) / N
             decoded = [self.agent.action_decode(int(a)) for a in actions]
             new_configs = [self.disc.apply(c, lever, direction)
@@ -231,11 +247,16 @@ class Configurator:
             reports = env.apply_configs(new_configs,
                                         changed_levers=[(l,) for l, _ in decoded])
             stabs = env.stabilisation_times()
-            env.advance(stabs)  # paper §4.2: reward measured after stabilisation
-            windows = env.observe(self.window_s)
+            # paper §4.2: reward measured on the window after stabilisation
+            windows = env.observe(self.window_s, preroll_s=stabs)
+            if device and self.reward_mode == "neg_mean":
+                rewards = [-w.mean_ms / 1000.0 for w in windows]
+            else:
+                rewards = [reward_from_latency(w.latencies_ms,
+                                               self.reward_mode)
+                           for w in windows]
             for i in range(N):
-                reward = reward_from_latency(windows[i].latencies_ms,
-                                             self.reward_mode)
+                reward = rewards[i]
                 trajs[i].add(states[i], int(actions[i]), reward)
                 lever, direction = decoded[i]
                 records[i].append(StepRecord(

@@ -53,6 +53,24 @@ def policy_probs(params: PyTree, state: jnp.ndarray) -> jnp.ndarray:
 policy_probs_batch = jax.jit(jax.vmap(policy_probs, in_axes=(None, 0)))
 
 
+@partial(jax.jit, static_argnames=("exploit",))
+def sample_actions_device(params: PyTree, states: jnp.ndarray, key: jax.Array,
+                          f: jnp.ndarray, exploit: bool) -> jnp.ndarray:
+    """Policy forward pass + f-gated categorical sampling fused into ONE
+    device program (DESIGN.md §9): logits for all N cluster states, a
+    Gumbel-max draw over the full action space, a renormalised draw over the
+    top lever's two directions, and the per-row exploitation gate — no host
+    round-trip between acting and env stepping."""
+    logits = jax.vmap(lambda s: policy_logits(params, s))(states)
+    k_full, k_sub, k_gate = jax.random.split(key, 3)
+    full_a = jax.random.categorical(k_full, logits, axis=-1)
+    if not exploit:
+        return full_a
+    sub_a = jax.random.categorical(k_sub, logits[:, :2], axis=-1)
+    gate = jax.random.uniform(k_gate, (states.shape[0],)) < f
+    return jnp.where(gate, sub_a, full_a)
+
+
 @jax.jit
 def _batch_pg_loss(params: PyTree, states: jnp.ndarray, actions: jnp.ndarray,
                    advantages: jnp.ndarray, mask: jnp.ndarray,
@@ -117,6 +135,8 @@ class ReinforceAgent:
         self.f_warmup_updates = f_warmup_updates
         self.n_updates = 0
         self._rng = np.random.default_rng(seed)
+        self._act_key = jax.random.PRNGKey(seed ^ 0x5EED)
+        self._act_draws = 0
         self.params = init_policy(state_dim, self.n_actions,
                                   jax.random.PRNGKey(seed), hidden)
         self.opt = rmsprop(lr=lr)
@@ -172,6 +192,18 @@ class ReinforceAgent:
         sub_a = np.minimum(sub_a, 1)
         gate = self._rng.uniform(size=N) < self.f
         return np.where(gate, sub_a, full_a).astype(np.int64)
+
+    def act_batch_device(self, states, *, explore: bool = True) -> jnp.ndarray:
+        """``act_batch`` as one fused device program (threefry counter key):
+        forward pass, f-exploitation gate and categorical draws never leave
+        the device — the acting half of the device-resident episode step
+        (Configurator.run_fleet_episodes over a jax/pallas FleetEnv)."""
+        key = jax.random.fold_in(self._act_key, self._act_draws)
+        self._act_draws += 1
+        exploit = bool(explore and self.n_updates >= self.f_warmup_updates)
+        return sample_actions_device(self.params,
+                                     jnp.asarray(states, jnp.float32), key,
+                                     jnp.float32(self.f), exploit)
 
     # -- learning (Algorithm 1) -----------------------------------------------
     def update(self, episodes: Sequence[Trajectory]) -> dict:

@@ -17,6 +17,12 @@ All generators are deterministic given (seed, window index) so SimCluster
 re-runs are reproducible; they expose ``rate(t)`` (ev/s) and ``mean_size(t)``
 (MB) — the queueing model consumes those — plus ``sample_events`` for the
 real LocalEngine, which needs concrete arrival timestamps.
+
+``rate``/``mean_size`` are *time-vectorised*: ``t`` may be a python float
+(float out), an ``np.ndarray`` or a ``jnp.ndarray`` / tracer (matching array
+out). The device-resident fleet engine (DESIGN.md §9) leans on this to
+evaluate a whole exploration window's (ticks × clusters) rate grid in one
+call per workload instead of one python call per tick.
 """
 from __future__ import annotations
 
@@ -25,6 +31,36 @@ from dataclasses import dataclass
 from typing import Iterator, Optional, Sequence
 
 import numpy as np
+
+
+def _np_of(t):
+    """Array namespace for ``t``: jnp for jax arrays/tracers, numpy otherwise.
+
+    Keeps the workload maths a single implementation that is simultaneously
+    float-exact for the numpy oracle and traceable under ``jax.jit``."""
+    if type(t) is float or isinstance(t, (np.ndarray, np.generic)):
+        return np
+    try:  # jax arrays and tracers — only consulted for non-numpy inputs
+        import jax
+
+        if isinstance(t, jax.Array) or isinstance(t, jax.core.Tracer):
+            import jax.numpy as jnp
+
+            return jnp
+    except ImportError:  # pragma: no cover - jax is a hard dep of the engine
+        pass
+    return np
+
+
+def _scalar_in(t) -> bool:
+    return np.ndim(t) == 0 and _np_of(t) is np
+
+
+def _const_like(t, value: float):
+    """``value`` broadcast to ``t``'s shape (float for scalar ``t``)."""
+    if _scalar_in(t):
+        return float(value)
+    return _np_of(t).asarray(t) * 0.0 + value
 
 
 @dataclass
@@ -38,11 +74,11 @@ class Event:
 class Workload:
     name = "base"
 
-    def rate(self, t: float) -> float:  # events / second
+    def rate(self, t):  # events / second; t scalar or (…,) time array
         raise NotImplementedError
 
-    def mean_size(self, t: float) -> float:  # MB
-        return 0.5
+    def mean_size(self, t):  # MB; t scalar or (…,) time array
+        return _const_like(t, 0.5)
 
     def sample_events(self, t0: float, t1: float, rng: np.random.Generator,
                       max_events: int = 200_000) -> list[Event]:
@@ -69,11 +105,11 @@ class PoissonWorkload(Workload):
     # per-tick loop (repro.engine.simcluster.FleetCore.observe_fleet)
     constant = True
 
-    def rate(self, t: float) -> float:
-        return self.lam
+    def rate(self, t):
+        return _const_like(t, self.lam)
 
-    def mean_size(self, t: float) -> float:
-        return self.event_size_mb
+    def mean_size(self, t):
+        return _const_like(t, self.event_size_mb)
 
 
 @dataclass
@@ -85,17 +121,19 @@ class TrapezoidWorkload(Workload):
     event_size_mb: float = 0.5
     name: str = "trapezoid"
 
-    def rate(self, t: float) -> float:
+    def rate(self, t):
+        xp = _np_of(t)
         period = 2 * self.ramp_s + self.plateau_s
-        u = t % period
-        if u < self.ramp_s:
-            return self.base + (self.peak - self.base) * u / self.ramp_s
-        if u < self.ramp_s + self.plateau_s:
-            return self.peak
-        return self.peak - (self.peak - self.base) * (u - self.ramp_s - self.plateau_s) / self.ramp_s
+        u = xp.asarray(t) % period
+        up = self.base + (self.peak - self.base) * u / self.ramp_s
+        down = self.peak - (self.peak - self.base) \
+            * (u - self.ramp_s - self.plateau_s) / self.ramp_s
+        r = xp.where(u < self.ramp_s, up,
+                     xp.where(u < self.ramp_s + self.plateau_s, self.peak, down))
+        return float(r) if _scalar_in(t) else r
 
-    def mean_size(self, t: float) -> float:
-        return self.event_size_mb
+    def mean_size(self, t):
+        return _const_like(t, self.event_size_mb)
 
 
 @dataclass
@@ -109,11 +147,14 @@ class YahooAdsWorkload(Workload):
     n_campaigns: int = 100
     name: str = "yahoo_ads"
 
-    def rate(self, t: float) -> float:
-        return self.base_rate * (1.0 + self.diurnal_amp * np.sin(2 * np.pi * t / self.day_s))
+    def rate(self, t):
+        xp = _np_of(t)
+        r = self.base_rate * (1.0 + self.diurnal_amp
+                              * xp.sin(2 * np.pi * xp.asarray(t) / self.day_s))
+        return float(r) if _scalar_in(t) else r
 
-    def mean_size(self, t: float) -> float:
-        return self.event_size_mb
+    def mean_size(self, t):
+        return _const_like(t, self.event_size_mb)
 
 
 @dataclass
@@ -133,18 +174,18 @@ class IoTWorkload(Workload):
         self._burst_times = np.cumsum(rng.exponential(1 / self.burst_rate, 512))
         self._burst_sizes = rng.lognormal(np.log(self.burst_scale), 0.8, 512)
 
-    def rate(self, t: float) -> float:
+    def rate(self, t):
+        xp = _np_of(t)
         base = self.fleet / self.heartbeat_s
-        burst = 0.0
-        for bt, bs in zip(self._burst_times, self._burst_sizes):
-            if bt > t + 60:
-                break
-            if 0 <= t - bt < 60:  # each burst drains over ~60 s
-                burst += bs / 60.0
-        return base + burst
+        # each burst drains over ~60 s; vectorised over both t and the burst
+        # schedule ((…, 512) mask against the precomputed burst arrays)
+        dt = xp.asarray(t)[..., None] - self._burst_times
+        active = (dt >= 0) & (dt < 60.0)
+        burst = xp.sum(xp.where(active, self._burst_sizes / 60.0, 0.0), axis=-1)
+        return float(base + burst) if _scalar_in(t) else base + burst
 
-    def mean_size(self, t: float) -> float:
-        return self.event_size_mb
+    def mean_size(self, t):
+        return _const_like(t, self.event_size_mb)
 
 
 @dataclass
@@ -159,11 +200,19 @@ class SwitchingWorkload(Workload):
     def active(self, t: float) -> Workload:
         return self.a if int(t // self.period_s) % 2 == 0 else self.b
 
-    def rate(self, t: float) -> float:
-        return self.active(t).rate(t)
+    def _is_a(self, t):
+        return (_np_of(t).asarray(t) // self.period_s) % 2 == 0
 
-    def mean_size(self, t: float) -> float:
-        return self.active(t).mean_size(t)
+    def rate(self, t):
+        if _scalar_in(t):
+            return self.active(float(t)).rate(float(t))
+        return _np_of(t).where(self._is_a(t), self.a.rate(t), self.b.rate(t))
+
+    def mean_size(self, t):
+        if _scalar_in(t):
+            return self.active(float(t)).mean_size(float(t))
+        return _np_of(t).where(self._is_a(t), self.a.mean_size(t),
+                               self.b.mean_size(t))
 
 
 #: Default roster used to build heterogeneous fleets: a spread of steady,

@@ -18,6 +18,15 @@ API shape (the plural twin of ``TuningEnv``; see
     stabs = env.stabilisation_times()            # (N,) seconds
     windows = env.observe(stabs)                 # per-cluster windows
     windows = env.observe(240.0)                 # shared window
+
+``backend`` selects the tick engine (DESIGN.md §9): ``"numpy"`` (default)
+is the bit-for-bit reference oracle above; ``"jax"`` and ``"pallas"`` run
+the whole window as one device program (``repro.engine.fleet_jax``) —
+*statistically* equivalent (tests/test_fleet_jax.py) and the only way to
+1024-cluster fleets:
+
+    env = FleetEnv.heterogeneous(1024, seed=0, backend="jax")
+    stats = env.observe_stats(240.0)             # device-resident arrays
 """
 from __future__ import annotations
 
@@ -46,6 +55,7 @@ class FleetEnv(FleetCore):
         lever_specs: Optional[Sequence[LeverSpec]] = None,
         seeds: Optional[Sequence[int]] = None,
         seed: int = 0,
+        backend: str = "numpy",
     ):
         from repro import configs
 
@@ -60,7 +70,8 @@ class FleetEnv(FleetCore):
             seeds = [seed + i for i in range(n)]
         assert len(models) == n and len(list(seeds)) == n
         super().__init__(workloads, list(models), spec or SimSpec(),
-                         list(lever_specs or LEVER_SPECS), list(seeds))
+                         list(lever_specs or LEVER_SPECS), list(seeds),
+                         backend=backend)
 
     # ------------------------------------------------------------ constructors
     @classmethod
@@ -86,14 +97,30 @@ class FleetEnv(FleetCore):
     def current_configs(self) -> list[dict]:
         return [dict(c) for c in self.configs]
 
-    def observe(self, window_s) -> list[MetricsWindowData]:
+    def observe(self, window_s, preroll_s=None) -> list[MetricsWindowData]:
         """Advance all clusters; ``window_s`` is a scalar or an (N,) array of
-        per-cluster windows (e.g. per-cluster stabilisation times)."""
-        return self.observe_fleet(window_s)
+        per-cluster windows (e.g. per-cluster stabilisation times).
+        ``preroll_s`` prepends a stabilisation wait excluded from the window
+        (fused into the same device program on jax/pallas backends)."""
+        return self.observe_fleet(window_s, preroll_s=preroll_s)
 
     def advance(self, window_s) -> None:
         """observe() minus the unread window summaries (stabilisation waits)."""
         self.advance_fleet(window_s)
+
+    def observe_stats(self, window_s, preroll_s=None) -> dict:
+        """``observe`` as fleet-shaped arrays (mean/p99/processed/per_node)
+        instead of N window objects; on device backends nothing is pulled
+        from the device until the caller reads an array, and an optional
+        stabilisation ``preroll_s`` fuses the §4.2 wait into the same device
+        program (DESIGN.md §9)."""
+        return self.observe_fleet_stats(window_s, preroll_s=preroll_s)
+
+    def prewarm(self, window_s: float = 240.0) -> None:
+        """Device backends: compile the window-program shape ladder up front
+        so exploration never hits a mid-run jit stall (no-op on numpy)."""
+        if self._dev is not None:
+            self._dev.prewarm(window_s)
 
     def runnable_mask(self, configs: Sequence[dict]) -> np.ndarray:
         """(N,) bool — which candidate configs the paper's allow-list accepts."""

@@ -1,0 +1,736 @@
+"""Device-resident fleet engine: the jax/pallas backends of ``FleetCore``
+(DESIGN.md §9).
+
+The numpy oracle in ``engine/simcluster.py`` ticks the fleet from Python —
+fast enough for 64 clusters, but the interpreter is in the loop once per
+micro-batch tick. Here the whole exploration window is ONE jitted device
+program:
+
+* the per-tick queueing recurrence (backlog, relative server occupancy) is a
+  ``jax.lax.scan`` over ticks of pure ``(N,)`` arithmetic, stepping the same
+  ``service_terms_arrays`` formulas as the oracle (``xp=jnp``);
+* all randomness is **threefry counter RNG**: one base key per engine, one
+  ``fold_in(key, draw_counter)`` per window, purpose-split subkeys inside —
+  so draws are a pure function of (seed, window ordinal) and *skipping*
+  unused draws (e.g. the advance path never materialises latency lanes) is
+  free, unlike the oracle's sequential per-cluster streams;
+* the per-event latency lanes, metric emission and window statistics are
+  vectorised *outside* the scan (the lane jitter is state-independent), with
+  percentiles via a bitonic lane sort and window p99 via ``lax.top_k`` — XLA
+  CPU's general sort is pathologically slow and never on the hot path here;
+* state lives ON DEVICE between calls. The host keeps an exact clock shadow
+  (clock advances deterministically by ``n_ticks · T_b``), so a tuning loop
+  can enqueue apply→stabilise→observe rounds asynchronously and only block
+  when it reads the stats arrays.
+
+``backend="pallas"`` swaps the scan for the fused window kernel in
+``repro.kernels.fleet_tick`` (clusters × latency-lane grid); everything
+around it — RNG, emission, summaries — is shared with the jax path.
+
+Equivalence contract (DESIGN.md §9): *statistical*, not bitwise — the
+counter RNG deliberately breaks the oracle's per-cluster stream accounting;
+``tests/test_fleet_jax.py`` pins window-level latency/throughput agreement.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.simcluster import (_MAX_LAT_SAMPLES, TOKENS_PER_MB,
+                                     _emission_constants, LazyPerNode,
+                                     service_terms_arrays)
+
+_PCTS = (50.0, 95.0, 99.0)
+
+#: shape ladder for the padded scan length / emission-slot count: ticks past
+#: a cluster's own n_ticks are masked inactive, so padding only costs masked
+#: draws (≤33%) — and every window/stabilisation length in a run reuses one
+#: of ~a dozen compiled programs instead of retracing per tick count.
+_SHAPE_BUCKETS = (8, 16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512, 768,
+                  1024)
+
+
+def _bucket(n: int, ladder: tuple = _SHAPE_BUCKETS) -> int:
+    for b in ladder:
+        if n <= b:
+            return b
+    return -256 * (-n // 256)
+
+#: (key, summarise) -> number of times the window program was traced; the
+#: jit-cache regression test asserts re-stepping does not grow these.
+TRACE_COUNTS: dict = {}
+
+
+# --------------------------------------------------------------------------
+# device-side helpers
+# --------------------------------------------------------------------------
+
+def split16(bits: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One uint32 draw -> two U(0,1) at 16-bit resolution (hi, lo halves).
+
+    16 bits is orders of magnitude below the scales any consumer reads
+    (millisecond latency quantiles, 5 %-relative metric noise, probability
+    gates), and halving the threefry bits roughly halves the engine's RNG
+    bill — its single biggest CPU cost. The +0.5 centring keeps the values
+    strictly inside (0, 1), so inverse-CDF transforms never see 0/1."""
+    u_hi = (jnp.right_shift(bits, 16).astype(jnp.float32) + 0.5) / 65536.0
+    u_lo = ((bits & jnp.uint32(0xFFFF)).astype(jnp.float32) + 0.5) / 65536.0
+    return u_hi, u_lo
+
+
+def norm16(u: jnp.ndarray) -> jnp.ndarray:
+    """Inverse-CDF standard normal from a 16-bit uniform (tail exact to the
+    resolution: |z| ≤ ~4.2)."""
+    return jnp.sqrt(2.0) * jax.scipy.special.erfinv(2.0 * u - 1.0)
+
+
+def split_lane_bits(bits: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One uint32 draw per latency lane -> (uniform wait, |normal| jitter)."""
+    u_wait, u_z = split16(bits)
+    return u_wait, jnp.abs(norm16(u_z))
+
+
+def normals_16bit(key, shape: tuple) -> jnp.ndarray:
+    """Standard normals at 16-bit resolution, two per uint32 — half the
+    threefry bits of ``jax.random.normal``. The last dim must be even."""
+    *lead, last = shape
+    assert last % 2 == 0, shape
+    bits = jax.random.bits(key, (*lead, last // 2), jnp.uint32)
+    return norm16(jnp.concatenate(split16(bits), axis=-1))
+
+
+def lane_budget(T: int, cap: int = _MAX_LAT_SAMPLES) -> int:
+    """Latency lanes per tick for a T-tick window: the oracle's 64-lane cap
+    at typical windows, throttled so ticks × lanes stays ~bounded when a
+    fleet member walks ``batch_interval_s`` low (a 0.25 s cluster would
+    otherwise 15x every window's lane bill). The window still collects
+    ≥~1.5k samples — the p99 estimator the reward reads is unaffected at the
+    tolerance the equivalence suite pins."""
+    if T * cap <= 2048:
+        return cap
+    for s in (32, 16, 8):
+        if T * s <= 2048:
+            return s
+    return 8
+
+
+def bitonic_sort_lanes(x: jnp.ndarray) -> jnp.ndarray:
+    """Ascending sort along the last axis (power-of-two length) as a bitonic
+    compare-exchange network — static lane permutations instead of XLA's
+    general sort, which costs ~50x more on the CPU backend."""
+    L = x.shape[-1]
+    assert L & (L - 1) == 0, f"lane count {L} must be a power of two"
+    idx = np.arange(L)
+    k = 2
+    while k <= L:
+        j = k // 2
+        while j >= 1:
+            partner = idx ^ j
+            xp = x[..., partner]
+            ascending = (idx & k) == 0
+            take_min = ascending == (idx < partner)
+            x = jnp.where(jnp.asarray(take_min), jnp.minimum(x, xp),
+                          jnp.maximum(x, xp))
+            j //= 2
+        k *= 2
+    return x
+
+
+#: E|N(0,1)| — the half-normal mean, for the analytic latency stats (the
+#: lane distribution within a tick is base + a·U(0,1) + c·|N(0,1)|)
+_R2PI = float(np.sqrt(2.0 / np.pi))
+
+
+def p99_lanes(T: int, cap: int = _MAX_LAT_SAMPLES, budget: int = 768) -> int:
+    """Latency lanes per tick backing the *window p99* estimate on the jax
+    path (the mean is analytic). ~768 samples pin p99 to ~1–3 % — far inside
+    the equivalence tolerance — at a fixed per-window cost regardless of how
+    low ``batch_interval_s`` walks."""
+    return max(4, min(cap, budget // max(T, 1)))
+
+
+def _lerp_quantile(sorted_x: jnp.ndarray, cnt: jnp.ndarray, q: float,
+                   descending: bool = False) -> jnp.ndarray:
+    """Linear-interpolated q-th percentile of the first ``cnt`` entries of a
+    (..., L) ascending sort (or a (..., K) descending head when
+    ``descending``), matching the oracle's ``_row_percentiles``."""
+    pos = (cnt - 1).astype(jnp.float32) * (q / 100.0)
+    lo = jnp.floor(pos).astype(jnp.int32)
+    hi = jnp.ceil(pos).astype(jnp.int32)
+    if descending:  # index r ascending lives at cnt-1-r in the descending head
+        ia, ib = cnt - 1 - lo, cnt - 1 - hi
+    else:
+        ia, ib = lo, hi
+    a = jnp.take_along_axis(sorted_x, ia[..., None], axis=-1)[..., 0]
+    b = jnp.take_along_axis(sorted_x, ib[..., None], axis=-1)[..., 0]
+    return a + (pos - lo) * (b - a)
+
+
+def _tick_body(carry, xs, T_b, max_b, a_comp, c_coll, b_mem, kvp, ovh,
+               inflight):
+    """One micro-batch tick for all N clusters — the lean scan body, in the
+    clock-relative frame (``sfree_rel`` = server-free time minus the cluster
+    clock, so the recurrence never touches absolute time).
+
+    Only the state-coupled chain lives here (~17 VPU ops on ``(N,)``): the
+    lever tables are pre-folded into per-cluster coefficients
+    (``kernels.fleet_tick.pack_tick_consts`` — shared with the pallas
+    kernel, algebraically identical to ``service_terms_arrays`` and pinned
+    by tests), and every state-independent term (arrivals, straggler slow
+    factors, retention caps) is vectorised over (T, N) outside the scan —
+    a fat scan body is per-op overhead-bound on small arrays."""
+    backlog, sfree_rel = carry
+    arr, ret_ev, slow, sz16, inv_maxr, active = xs
+    backlog_age = backlog * inv_maxr
+    blg = jnp.minimum(backlog + arr, ret_ev)                 # Kafka retention
+    batch = jnp.minimum(blg, max_b)
+    tokens = batch * sz16
+    mem_frac = jnp.minimum(tokens * b_mem + kvp, 1.5)
+    pen = 1.0 + 2.0 * jnp.maximum(mem_frac - 1.0, 0.0)       # spill cliff
+    service = (ovh + tokens * a_comp * pen + tokens * c_coll) * slow
+    # single logical server; max_inflight_batches bounds the schedule queue
+    start_rel = jnp.maximum(T_b, sfree_rel)
+    sfree_new = jnp.minimum(start_rel + service, T_b + inflight) - T_b
+    processed = jnp.where(service <= T_b, batch, batch * (T_b / service))
+    blg_after = jnp.maximum(blg - processed, 0.0)
+    qd = (start_rel - T_b) + backlog_age
+
+    backlog_out = jnp.where(active, blg_after, backlog)
+    sfree_out = jnp.where(active, sfree_new, sfree_rel)
+    return (backlog_out, sfree_out), (service, qd, batch, processed,
+                                      blg_after)
+
+
+@functools.lru_cache(maxsize=64)
+def _window_program(T: int, S: int, E: int, nodes: int, M: int,
+                    spec_key: tuple, chips: int, pallas: bool,
+                    summarise: bool, node_noise: bool, p99_k: int,
+                    lat_cols: tuple, queue_col: int, interpret: bool):
+    """Build + jit the device window program for one static shape bundle.
+
+    N is NOT part of the key — it is carried by the array shapes, so a fleet
+    of any size reuses the cache entry as long as its tick/emission geometry
+    matches (and re-stepping the same fleet never retraces: the jit-cache
+    test pins this)."""
+    from repro.engine.simcluster import SimSpec
+
+    spec = SimSpec(**dict(spec_key))
+
+    def prog(key, backlog, sfree_rel, cc, mc, emitc, rate_g, size_g,
+             n_ticks, n_skip, etick, evalid, reconfigs):
+        """``n_skip`` is the fused stabilisation preroll (paper §4.2): those
+        leading ticks evolve state and consume arrivals but emit nothing and
+        are excluded from the window statistics — one device program per
+        explore round instead of an advance + observe pair."""
+        TRACE_COUNTS[(T, S, E, pallas, summarise)] = \
+            TRACE_COUNTS.get((T, S, E, pallas, summarise), 0) + 1
+        from repro.kernels.fleet_tick import (fleet_tick_window,
+                                              pack_tick_consts)
+
+        N = backlog.shape[0]
+        sfree_rel = jnp.maximum(sfree_rel, 0.0)   # server_free=max(·, clock)
+        k_tick, k_lane, k_emit = jax.random.split(key, 3)
+        t_ax = jnp.arange(T)[:, None]
+        tmask = t_ax < n_ticks[None, :]               # state evolves
+        wmask = tmask & (t_ax >= n_skip[None, :])     # window statistics
+        consts = pack_tick_consts(cc, mc, spec, chips, xp=jnp)
+        (T_b, max_b, a_comp, c_coll, b_mem, kvp, ovh, slow_cap, backup,
+         fail_frac, inflight) = tuple(consts[i] for i in range(11))
+
+        # tick-level draws: two uint32 per (tick, cluster) → arrival noise z
+        # plus the three straggler/failure gates at 16-bit resolution
+        u16, l16 = split16(jax.random.bits(k_tick, (T, 2, N), jnp.uint32))
+        z = norm16(u16[:, 0])
+        u_strag, u_raw, u_fail = l16[:, 0], u16[:, 1], l16[:, 1]
+
+        # state-independent per-tick terms, vectorised over (T, N) outside
+        # the scan (the scan body carries only the state-coupled chain)
+        slo, shi = spec.straggler_slow
+        smask = u_strag < spec.straggler_prob
+        raw = slo + (shi - slo) * u_raw
+        slow = jnp.where(smask, jnp.where(backup != 0, 1.1,
+                                          jnp.minimum(raw, slow_cap)), 1.0)
+        fmask = u_fail < fail_frac
+        slow = jnp.where(fmask, slow * 2.0, slow)
+        smask_f, fmask_f = smask.astype(jnp.float32), fmask.astype(jnp.float32)
+
+        # rate_g/size_g are (1, N) for time-invariant fleets (no T× upload);
+        # XLA broadcasts lazily so the (T, N) views below cost nothing
+        rg = jnp.broadcast_to(rate_g, (T, N))
+        sg = jnp.broadcast_to(size_g, (T, N))
+        if pallas:
+            lane_bits = jax.random.bits(k_lane, (T, S, N), jnp.uint32)
+            u_wait, z2a = split_lane_bits(lane_bits)
+            state_out, ys_k, lat_tsn = fleet_tick_window(
+                jnp.stack([backlog, sfree_rel]), consts, rg, sg,
+                z, u_strag, u_raw, u_fail,
+                tmask.astype(jnp.float32), u_wait, z2a,
+                noise=spec.noise, retention_s=spec.retention_s,
+                straggler_prob=spec.straggler_prob, slo=slo, shi=shi,
+                interpret=interpret)
+            backlog, sfree_rel = state_out[0], state_out[1]
+            service, qd, batch, processed, _, _, blg_e = \
+                tuple(ys_k[i] for i in range(7))
+            lat = jnp.transpose(lat_tsn, (0, 2, 1)) * 1000.0    # (T, N, S) ms
+        else:
+            arr = jnp.maximum(rg * T_b * (1.0 + spec.noise * z), 0.0)
+            xs = (arr, rg * spec.retention_s, slow, sg * TOKENS_PER_MB,
+                  1.0 / jnp.maximum(rg, 1.0), tmask)
+            body = functools.partial(
+                _tick_body, T_b=T_b, max_b=max_b, a_comp=a_comp,
+                c_coll=c_coll, b_mem=b_mem, kvp=kvp, ovh=ovh,
+                inflight=inflight)
+            (backlog, sfree_rel), ys = jax.lax.scan(
+                body, (backlog, sfree_rel), xs)
+            service, qd, batch, processed, blg_e = ys
+            lat = None
+
+        if not summarise:
+            return {"backlog": backlog, "sfree": sfree_rel}
+
+        processed_sum = (processed * wmask).sum(axis=0)
+        base_ms = (qd + service) * 1000.0                        # (T, N)
+        a_ms = (T_b * 1000.0)[None, :]
+        c_ms = 100.0 * service
+        if pallas:
+            # fully-sampled window stats over the kernel's fused lane tiles
+            # (the TPU-shaped path; lanes are near-free in VMEM)
+            n_s = jnp.clip(batch.astype(jnp.int32), 1, S)        # (T, N)
+            lane_valid = (jnp.arange(S)[None, None, :] < n_s[:, :, None]) \
+                & wmask[:, :, None]                              # (T, N, S)
+            cnt = lane_valid.sum(axis=(0, 2))                    # (N,)
+            mean_ms = jnp.where(lane_valid, lat, 0.0).sum(axis=(0, 2)) \
+                / jnp.maximum(cnt, 1)
+            flat = jnp.where(lane_valid, lat, -jnp.inf)
+            flat = jnp.transpose(flat, (1, 0, 2)).reshape(N, T * S)
+            top = jax.lax.top_k(flat, p99_k)[0]                  # descending
+            p99 = _lerp_quantile(top, cnt, 99.0, descending=True)
+        else:
+            # the lane tensor exists only to estimate window stats, so the
+            # jax path replaces it: the mean is the exact expectation of the
+            # per-tick mixture ((T, N) arithmetic), and the p99 is sampled
+            # over a small fixed lane budget (p99_lanes) — constant cost no
+            # matter how low batch_interval_s walks
+            n_s = jnp.clip(batch.astype(jnp.int32), 1, _MAX_LAT_SAMPLES)
+            w_t = n_s.astype(jnp.float32) * wmask
+            mean_ms = (w_t * (base_ms + 0.5 * a_ms + _R2PI * c_ms)) \
+                .sum(axis=0) / jnp.maximum(w_t.sum(axis=0), 1e-9)
+            Sp = p99_lanes(T)
+            u_p, z_p = split_lane_bits(
+                jax.random.bits(k_lane, (T, N, Sp), jnp.uint32))
+            lat_p = base_ms[:, :, None] + a_ms[:, :, None] * u_p \
+                + c_ms[:, :, None] * z_p
+            n_sp = jnp.minimum(n_s, Sp)
+            lv = (jnp.arange(Sp)[None, None, :] < n_sp[:, :, None]) \
+                & wmask[:, :, None]
+            cnt = lv.sum(axis=(0, 2))
+            flat = jnp.where(lv, lat_p, -jnp.inf)
+            flat = jnp.transpose(flat, (1, 0, 2)).reshape(N, T * Sp)
+            kq = min(T * Sp, int(np.ceil(0.01 * (T * Sp - 1))) + 2)
+            top = jax.lax.top_k(flat, kq)[0]
+            p99 = _lerp_quantile(top, cnt, 99.0, descending=True)
+
+        # ---- metric emission at the paper cadence (gathered tick slots) ----
+        g = lambda a: jnp.take_along_axis(a, etick, axis=0)      # (E, N)
+        srv_e, qd_e, batch_e = g(service), g(qd), g(batch)
+        rho_e = srv_e / cc["T_b"]
+        terms_e = service_terms_arrays(cc, mc, spec, chips, g(rg), g(sg),
+                                       batch_e, xp=jnp)
+        s_safe = jnp.maximum(srv_e, 1e-6)
+        lvec = jnp.stack([
+            jnp.minimum(rho_e, 3.0) + 0.2 * jnp.log1p(qd_e),
+            jnp.minimum(terms_e["t_compute"] / s_safe, 1.0)
+            * jnp.minimum(rho_e, 1.0),
+            terms_e["mem_frac"],
+            terms_e["t_collective"] / s_safe,
+            terms_e["t_overhead"] / s_safe,
+            terms_e["eff"] / spec.base_mfu,
+            g(smask_f) + g(fmask_f) + 0.1 * reconfigs[None, :],
+            0.6 * jnp.minimum(rho_e, 1.0) + 0.4 * terms_e["eff"],
+        ], axis=-1)                                              # (E, N, 8)
+        base = jnp.einsum("enf,fk->enk", lvec, emitc["W"]) + emitc["bias"]
+        noise_shape = (E, N, nodes, M) if node_noise else (E, N, 1, M)
+        noise = normals_16bit(k_emit, noise_shape)
+        noisy = base[:, :, None, :] * (1.0 + noise * emitc["noise_v"])
+        ecnt = jnp.maximum(evalid.sum(axis=0), 1)                # (N,)
+        emean = jnp.where(evalid[:, :, None, None], noisy, 0.0).sum(axis=0) \
+            / ecnt[:, None, None]                                # (N, nodes, M)
+        per_node = emitc["F"] * emean
+        # ground latency/queue metrics in the simulated mixture (oracle
+        # semantics: per-emission stats overwrite the factor-model columns)
+        n_s_e = g(n_s)
+        if pallas:
+            # sampled per-emission stats over the kernel's lane tiles
+            lat_e = jnp.take_along_axis(lat, etick[:, :, None], axis=0)
+            lv_e = jnp.arange(S)[None, None, :] < n_s_e[:, :, None]
+            srt = bitonic_sort_lanes(jnp.where(lv_e, lat_e, jnp.inf))
+            stats = [jnp.where(lv_e, lat_e, 0.0).sum(-1) / n_s_e]
+            stats += [_lerp_quantile(srt, n_s_e, q) for q in _PCTS]
+            stats.append(jnp.take_along_axis(srt, (n_s_e - 1)[..., None],
+                                             axis=-1)[..., 0])
+        else:
+            # analytic stats of base + a·U + c·|Z| — the monitoring metrics
+            # feed heat-maps and the §2.2 factor analysis, not the reward,
+            # so smooth approximations of the order statistics are enough
+            # (DESIGN.md §9). The wait term dominates (c/a = service/10·T_b
+            # ≪ 1), so quantiles are the uniform's, mean-shifted by the
+            # jitter term.
+            base_e, c_e = g(base_ms), g(c_ms)
+            a_e = T_b[None, :] * 1000.0
+            q = lambda al: base_e + al * a_e + _R2PI * c_e
+            n_f = n_s_e.astype(jnp.float32)
+            mx = base_e + a_e * n_f / (n_f + 1.0) \
+                + c_e * jnp.sqrt(2.0 * jnp.log(jnp.maximum(n_f, 2.0)))
+            stats = [q(0.5), q(0.5), q(0.95), q(0.99), mx]
+        stats = jnp.stack(stats, axis=-1)                        # (E, N, 5)
+        ew = jnp.where(evalid[:, :, None], stats, 0.0).sum(axis=0) \
+            / ecnt[:, None]                                      # (N, 5)
+        per_node = per_node.at[:, :, list(lat_cols)].set(ew[:, None, :])
+        qmean = jnp.where(evalid, g(blg_e), 0.0).sum(axis=0) / ecnt
+        per_node = per_node.at[:, :, queue_col].set(qmean[:, None])
+
+        out = {"backlog": backlog, "sfree": sfree_rel, "mean_ms": mean_ms,
+               "p99_ms": p99, "processed": processed_sum,
+               "per_node": per_node, "n_s": n_s}
+        if pallas:
+            out["lat"] = lat
+        else:
+            out["qd"], out["service"] = qd, service
+        return out
+
+    return jax.jit(prog, donate_argnums=(1, 2))
+
+
+# --------------------------------------------------------------------------
+# lazy window views (protocol-compatible with MetricsWindowData)
+# --------------------------------------------------------------------------
+
+class _WindowBatch:
+    """Holds one observe call's device results; converts to numpy lazily and
+    at most once, shared by all N window views."""
+
+    def __init__(self, dev: dict, n_ticks: np.ndarray, clock: np.ndarray,
+                 index: dict, lane_seed: int = 0,
+                 n_skip: Optional[np.ndarray] = None):
+        self._dev = dev
+        self._np: dict = {}
+        self.n_ticks = n_ticks
+        self.n_skip = np.zeros_like(n_ticks) if n_skip is None else n_skip
+        self.clock = clock
+        self.index = index
+        self.lane_seed = lane_seed
+
+    def arr(self, name: str) -> np.ndarray:
+        if name not in self._np:
+            self._np[name] = np.asarray(self._dev[name])
+        return self._np[name]
+
+    def latencies_of(self, i: int) -> np.ndarray:
+        """Cluster i's per-event latency sample. The pallas path hands back
+        its fused lane tiles; the jax path computes window stats analytically
+        on device (DESIGN.md §9), so consumers that want raw samples get
+        them drawn here, host-side, from the same per-tick mixture —
+        deterministic per (window ordinal, cluster)."""
+        n_s = self.arr("n_s")
+        t0, t1 = int(self.n_skip[i]), int(self.n_ticks[i])
+        if "lat" in self._dev:
+            lat = self.arr("lat")
+            rows = [lat[t, i, :n_s[t, i]] for t in range(t0, t1)]
+            return np.concatenate(rows) if rows else np.zeros(1)
+        qd, sv = self.arr("qd")[t0:t1, i], self.arr("service")[t0:t1, i]
+        counts = n_s[t0:t1, i].astype(np.int64)
+        rng = np.random.default_rng((self.lane_seed << 20) ^ i)
+        u = rng.random(int(counts.sum()))
+        z = np.abs(rng.standard_normal(int(counts.sum())))
+        base = np.repeat((qd + sv) * 1000.0, counts)
+        a = np.repeat(np.full(t1 - t0, float(self.arr("T_b")[i]) * 1000.0),
+                      counts)
+        c = np.repeat(100.0 * sv, counts)
+        return base + a * u + c * z
+
+
+class DeviceMetricsWindow:
+    """One cluster's window view over a ``_WindowBatch`` — same attributes as
+    ``MetricsWindowData``, but nothing leaves the device until accessed."""
+
+    __slots__ = ("_b", "_i", "_lat")
+
+    def __init__(self, batch: _WindowBatch, i: int):
+        self._b = batch
+        self._i = i
+        self._lat: Optional[np.ndarray] = None
+
+    @property
+    def per_node(self) -> LazyPerNode:
+        return LazyPerNode(self._b.arr("per_node")[self._i], self._b.index)
+
+    @property
+    def node_matrix(self) -> np.ndarray:
+        return self._b.arr("per_node")[self._i]
+
+    @property
+    def latencies_ms(self) -> np.ndarray:
+        if self._lat is None:
+            self._lat = self._b.latencies_of(self._i)
+        return self._lat
+
+    @property
+    def p99_ms(self) -> float:
+        return float(self._b.arr("p99_ms")[self._i])
+
+    @property
+    def mean_ms(self) -> float:
+        return float(self._b.arr("mean_ms")[self._i])
+
+    @property
+    def clock_s(self) -> float:
+        return float(self._b.clock[self._i])
+
+    @property
+    def processed_events(self) -> float:
+        return float(self._b.arr("processed")[self._i])
+
+
+# --------------------------------------------------------------------------
+# the engine
+# --------------------------------------------------------------------------
+
+class DeviceFleetEngine:
+    """Owns the device-resident state and window programs for one
+    ``FleetCore`` (DESIGN.md §9). Host-side concerns — config dicts, the
+    allow-list, stabilisation, the clock shadow — stay on the core."""
+
+    def __init__(self, core, *, pallas: bool = False):
+        self.core = core
+        self.pallas = pallas
+        # per-node metric noise matches the oracle's iid draw at tuning
+        # scales; huge exploration fleets share the draw across nodes (the
+        # tuner mean-reduces the node axis anyway) to keep RNG off the
+        # critical path — DESIGN.md §9 documents the distinction
+        self.node_noise = core.n <= 256
+        self._key = jax.random.PRNGKey(
+            np.uint32(np.bitwise_xor.reduce(
+                np.asarray(core.seeds, np.uint64) * np.uint64(0x9E3779B9)
+                + np.arange(core.n, dtype=np.uint64)) & np.uint64(0x7FFFFFFF)))
+        self._draws = 0
+        #: bulk host RNG for loading-time noise (the oracle's per-cluster
+        #: streams only serve its bitwise contract, already traded away here)
+        self.host_rng = np.random.default_rng(
+            np.asarray(core.seeds, np.uint64))
+        self._backlog = None          # device (N,) f32
+        self._sfree_rel = None        # device (N,) f32, relative to clock
+        self._pending_arrivals = np.zeros(core.n)
+        self._pending_gap = np.zeros(core.n)
+        # high-water marks for the padded scan length / emission slots, per
+        # (summarise,) program kind: shape buckets only ever grow, so a
+        # drifting batch_interval_s walk compiles O(log T) programs instead
+        # of one per (T, E) combination it flickers through
+        self._hw: dict = {}
+        self._cc_dev: Optional[dict] = None
+        self._mc_dev = {k: jnp.asarray(v, jnp.float32) if v.dtype != bool
+                        else jnp.asarray(v)
+                        for k, v in core.mc.items()}
+        emc = _emission_constants()
+        self._emitc = {
+            "W": jnp.asarray(emc["W"], jnp.float32),
+            "bias": jnp.asarray(emc["bias"], jnp.float32),
+            "noise_v": jnp.asarray(emc["noise_v"], jnp.float32),
+            "F": jnp.asarray(core._emit_factor, jnp.float32),
+        }
+        self._lat_cols = tuple(int(c) for c in emc["lat_cols"])
+        self._queue_col = int(emc["queue_col"])
+        self._index = {m: j for j, m in enumerate(core.metric_names)}
+        self._spec_key = tuple(sorted(core.spec.__dict__.items()))
+        self.last_stats: Optional[dict] = None
+
+    # ------------------------------------------------------------- host hooks
+    def reset(self) -> None:
+        self._backlog = None
+        self._sfree_rel = None
+        self._pending_arrivals[:] = 0.0
+        self._pending_gap[:] = 0.0
+        self._cc_dev = None
+        self._hw.clear()   # compiled programs survive in the module cache
+        self.last_stats = None
+        # _key/_draws stay monotonic: a reset fleet draws fresh randomness
+
+    def prewarm(self, window_s: float,
+                t_buckets=(24, 32, 48, 64, 96, 128, 192, 256)) -> None:
+        """Compile the window-program shape ladder up front — ascending
+        fused prerolls stretch the scan length while the observation window
+        (and with it the emission-slot count) stays the real one. The sim is
+        fully restored afterwards (clock, device state, pending buffers AND
+        the draw counter — prewarm is RNG-transparent), so it is safe
+        mid-run; only the compiled-program caches persist."""
+        core = self.core
+        clock0 = core.clock.copy()
+        backlog0 = None if self._backlog is None else np.asarray(self._backlog)
+        sfree0 = None if self._sfree_rel is None else np.asarray(self._sfree_rel)
+        pend_a = self._pending_arrivals.copy()
+        pend_g = self._pending_gap.copy()
+        draws0, stats0 = self._draws, self.last_stats
+        T_b = core.packed()["T_b"]
+        win = np.full(core.n, float(window_s))
+        n_win = np.maximum(1, np.round(win / T_b))
+        for b in t_buckets:
+            pre = np.maximum(b - n_win, 0.0) * T_b
+            self.observe_fleet(win, preroll_s=pre)
+        core.clock[:] = clock0
+        self._backlog = None if backlog0 is None else \
+            jnp.asarray(backlog0, jnp.float32)
+        self._sfree_rel = None if sfree0 is None else \
+            jnp.asarray(sfree0, jnp.float32)
+        self._pending_arrivals[:] = pend_a
+        self._pending_gap[:] = pend_g
+        self._draws, self.last_stats = draws0, stats0
+        self._hw.clear()
+
+    def invalidate_cc(self) -> None:
+        self._cc_dev = None
+
+    def buffer_during_load(self, i: int, load_s: float) -> None:
+        """Kafka buffering while cluster i reconfigures — queued host-side,
+        applied on device at the next observe (no device round-trip)."""
+        core = self.core
+        self._pending_arrivals[i] += core.workloads[i].rate(
+            float(core.clock[i])) * load_s
+        self._pending_gap[i] += load_s
+
+    def buffer_during_load_batch(self, arrivals: np.ndarray,
+                                 gaps: np.ndarray) -> None:
+        self._pending_arrivals += arrivals
+        self._pending_gap += gaps
+
+    def sync_host(self) -> None:
+        """Pull the device state into the core's numpy mirrors (debug/tests;
+        the hot path never calls this)."""
+        if self._backlog is not None:
+            self.core.backlog[:] = np.asarray(self._backlog)
+            self.core.server_free[:] = self.core.clock + np.maximum(
+                np.asarray(self._sfree_rel), 0.0)
+
+    # ----------------------------------------------------------------- RNG/cc
+    def _cc(self) -> dict:
+        if self._cc_dev is None:
+            self._cc_dev = {k: jnp.asarray(v, jnp.float32)
+                            for k, v in self.core.packed().items()}
+        return self._cc_dev
+
+    def _next_key(self):
+        k = jax.random.fold_in(self._key, self._draws)
+        self._draws += 1
+        return k
+
+    # ------------------------------------------------------------ the windows
+    def _rate_grids(self, T: int, T_b: np.ndarray) -> tuple:
+        core = self.core
+        cr = core._const_rates()
+        if cr is not None:  # (1, N): the program broadcasts lazily on device
+            rate, size = cr
+            return rate[None, :], size[None, :]
+        times = core.clock[None, :] + np.arange(T)[:, None] * T_b[None, :]
+        rate = np.empty((T, core.n))
+        size = np.empty((T, core.n))
+        for i, w in enumerate(core.workloads):   # one vectorised call per
+            rate[:, i] = w.rate(times[:, i])     # cluster, not per tick —
+            size[:, i] = w.mean_size(times[:, i])  # the §9 satellite win
+        return rate, size
+
+    def observe_fleet(self, win: np.ndarray, *, summarise: bool = True,
+                      build_windows: bool = True,
+                      preroll_s: Optional[np.ndarray] = None):
+        """Advance every cluster by (optional stabilisation preroll +) its
+        window and summarise the window on device. ``preroll_s`` fuses the
+        paper-§4.2 post-reconfiguration wait into the same device program —
+        those ticks evolve state but emit nothing and are excluded from the
+        window statistics."""
+        core = self.core
+        N = core.n
+        packed = core.packed()
+        T_b = packed["T_b"]
+        ee = packed["emit_every"].astype(np.int64)
+        n_win = np.maximum(1, np.round(win / T_b)).astype(np.int64)
+        if preroll_s is None:
+            n_skip = np.zeros(N, np.int64)
+        else:
+            n_skip = np.maximum(0, np.round(
+                np.asarray(preroll_s, float) / T_b)).astype(np.int64)
+        n_ticks = n_skip + n_win
+        T = max(_bucket(int(n_ticks.max())), self._hw.get(("T", summarise), 0))
+        self._hw[("T", summarise)] = T
+        forced = n_win < ee
+        if summarise:
+            n_emit = n_win // ee + forced
+            E = _bucket(int(n_emit.max()), (1, 2, 4, 6) + _SHAPE_BUCKETS)
+            E = max(E, self._hw.get("E", 0))
+            self._hw["E"] = E
+            etick = n_skip[None, :] + np.where(
+                forced[None, :], n_win[None, :] - 1,
+                (np.arange(E)[:, None] + 1) * ee[None, :] - 1)
+            evalid = np.arange(E)[:, None] < n_emit[None, :]
+            etick = np.clip(etick, 0, T - 1)
+        else:  # emission is dead code on the advance path: one dummy slot
+            E = 1
+            etick = np.zeros((1, core.n))
+            evalid = np.zeros((1, core.n), bool)
+        rate_g, size_g = self._rate_grids(T, T_b)
+        # the jax path computes window stats analytically ((T, N) erf math),
+        # so only the pallas path carries a full lane tensor — throttled by
+        # the lane-budget ladder when batch_interval_s walks low
+        S = lane_budget(T) if self.pallas else _MAX_LAT_SAMPLES
+
+        if self._backlog is None:
+            self._backlog = jnp.asarray(core.backlog, jnp.float32)
+            self._sfree_rel = jnp.asarray(
+                np.maximum(core.server_free - core.clock, 0.0), jnp.float32)
+        backlog, sfree = self._backlog, self._sfree_rel
+        if self._pending_arrivals.any() or self._pending_gap.any():
+            backlog = backlog + jnp.asarray(self._pending_arrivals, jnp.float32)
+            sfree = jnp.maximum(
+                sfree - jnp.asarray(self._pending_gap, jnp.float32), 0.0)
+            self._pending_arrivals[:] = 0.0
+            self._pending_gap[:] = 0.0
+
+        M = len(core.metric_names)
+        p99_k = min(T * S, int(np.ceil(0.01 * (T * S - 1))) + 2)
+        interpret = _pallas_interpret() if self.pallas else False
+        prog = _window_program(
+            T, S, E, core.n_nodes, M, self._spec_key, core.chips,
+            self.pallas, summarise, self.node_noise, p99_k,
+            self._lat_cols, self._queue_col, interpret)
+        res = prog(self._next_key(), backlog, sfree, self._cc(), self._mc_dev,
+                   self._emitc, jnp.asarray(rate_g, jnp.float32),
+                   jnp.asarray(size_g, jnp.float32),
+                   jnp.asarray(n_ticks, jnp.int32),
+                   jnp.asarray(n_skip, jnp.int32),
+                   jnp.asarray(etick, jnp.int32), jnp.asarray(evalid),
+                   jnp.asarray(core.reconfigs, jnp.float32))
+        core.clock += n_ticks * T_b        # exact host shadow
+        self._backlog, self._sfree_rel = res["backlog"], res["sfree"]
+        if not summarise:
+            return None
+        self.last_stats = {
+            "mean_ms": res["mean_ms"], "p99_ms": res["p99_ms"],
+            "processed": res["processed"], "per_node": res["per_node"],
+            "clock_s": core.clock.copy(),
+        }
+        if not build_windows:
+            return None
+        dev = {k: v for k, v in res.items() if k not in ("backlog", "sfree")}
+        dev["T_b"] = T_b.copy()   # incremental applies mutate packed in place
+        batch = _WindowBatch(dev, n_ticks, core.clock.copy(), self._index,
+                             lane_seed=self._draws, n_skip=n_skip)
+        return [DeviceMetricsWindow(batch, i) for i in range(N)]
+
+
+def _pallas_interpret() -> bool:
+    """Pallas interpret-mode gate — same contract as ``kernels/ops.py``."""
+    import os
+
+    if os.environ.get("REPRO_PALLAS_INTERPRET", ""):
+        return True
+    return jax.default_backend() != "tpu"

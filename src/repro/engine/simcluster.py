@@ -33,6 +33,15 @@ per-cluster RNG draws stay on independent ``np.random.Generator`` streams so
 a fleet of N clusters is *bit-for-bit* identical to N serial ``SimCluster``
 runs with matched seeds. ``SimCluster`` itself is the N=1 view over
 ``FleetCore``; ``repro.engine.fleet.FleetEnv`` is the N>1 batched env.
+
+Device-resident form (DESIGN.md §9): ``FleetCore(backend="jax"|"pallas")``
+swaps this module's numpy tick loop for the jitted ``lax.scan`` engine in
+``repro.engine.fleet_jax`` (optionally stepping the fused Pallas tick kernel
+``repro.kernels.fleet_tick``). The numpy path stays the *reference oracle*:
+device backends trade the per-cluster-stream bit-for-bit guarantee for
+threefry counter RNG and *statistical* equivalence (tests/test_fleet_jax.py)
+in exchange for 1000+-cluster fleets. ``service_terms_arrays`` is shared by
+all three backends via its ``xp`` namespace parameter.
 """
 from __future__ import annotations
 
@@ -100,6 +109,9 @@ class MetricsWindowData:
     # of per_node, letting consumers reduce all 90 metrics in one array op
     # instead of 90 dict lookups (None for envs that don't provide it)
     node_matrix: Optional[np.ndarray] = None
+    # events processed during the window (true sim throughput, not the noisy
+    # emitted events_per_s metric); NaN for envs that don't track it
+    processed_events: float = float("nan")
 
     @property
     def mean_ms(self) -> float:
@@ -197,17 +209,20 @@ def model_constants(models: Sequence[ModelConfig]) -> dict[str, np.ndarray]:
 
 def service_terms_arrays(cc: dict[str, np.ndarray], mc: dict[str, np.ndarray],
                          spec: SimSpec, chips: int, rate, ev_size,
-                         batch_events=None) -> dict[str, np.ndarray]:
+                         batch_events=None, xp=np) -> dict[str, np.ndarray]:
     """The per-micro-batch service model, vectorised over the cluster axis.
 
     All inputs are (N,) arrays (or scalars that broadcast); the returned terms
     are (N,) arrays. This is the single implementation both the serial
     ``SimCluster`` (N=1) and the batched ``FleetEnv`` step through, so serial
-    and fleet results agree bit-for-bit.
+    and fleet results agree bit-for-bit. ``xp`` selects the array namespace:
+    numpy (default, float64 oracle) or ``jax.numpy``, in which case the same
+    formulas trace into the device-resident tick program (DESIGN.md §9) —
+    one implementation, three backends.
     """
     T_b = cc["T_b"]
     if batch_events is None:
-        batch_events = np.minimum(rate * T_b, cc["max_batch_events"])
+        batch_events = xp.minimum(rate * T_b, cc["max_batch_events"])
     tokens = batch_events * ev_size * TOKENS_PER_MB
 
     # --- efficiency factors (kernel / precision / padding levers) -------
@@ -216,35 +231,35 @@ def service_terms_arrays(cc: dict[str, np.ndarray], mc: dict[str, np.ndarray],
 
     # --- memory pressure (kv block / batch size / hbm budget) -----------
     kv_gb = tokens * mc["kv_per_tok"] / 1e9
-    mem_frac = np.minimum(kv_gb / (chips * spec.hbm_gb_per_chip) + cc["kv_pressure"], 1.5)
-    t_mem_penalty = 1.0 + np.maximum(mem_frac - 1.0, 0.0) * 2.0  # spill cliff
+    mem_frac = xp.minimum(kv_gb / (chips * spec.hbm_gb_per_chip) + cc["kv_pressure"], 1.5)
+    t_mem_penalty = 1.0 + xp.maximum(mem_frac - 1.0, 0.0) * 2.0  # spill cliff
 
     # --- collective term (tp size / compression / microbatch overlap) ----
     coll = spec.collective_frac * t_compute * (cc["tp"] / 16.0) ** 0.5
     coll = coll * cc["compression"]
     coll = coll / (1.0 + 0.45 * (cc["mb"] - 1.0))            # overlap with compute
-    moe = mc["is_moe"] & cc["expert_parallel"]
-    t_compute = np.where(moe, t_compute * 0.92, t_compute)   # no replicated expert FFN
-    coll = np.where(moe, coll * 1.15, coll)                  # but adds all-to-all
+    moe = mc["is_moe"] & (cc["expert_parallel"] != 0)
+    t_compute = xp.where(moe, t_compute * 0.92, t_compute)   # no replicated expert FFN
+    coll = xp.where(moe, coll * 1.15, coll)                  # but adds all-to-all
     # tp also trades compute efficiency (smaller per-chip matmuls)
     t_compute = t_compute * cc["tp_compute"]
 
     # --- overhead (dispatch / driver stalls / sink / prefetch) -----------
     ovh = spec.dispatch_overhead_s * (1.0 + 0.12 * (cc["mb"] - 1.0))
-    ovh = ovh + spec.driver_gc_coeff / np.maximum(cc["driver_memory_gb"], 1.0) * 0.1
-    ovh = ovh + 0.12 * np.maximum(
-        np.log2(512.0 / np.maximum(cc["allocator_arena_mb"], 32.0)), 0.0)
+    ovh = ovh + spec.driver_gc_coeff / xp.maximum(cc["driver_memory_gb"], 1.0) * 0.1
+    ovh = ovh + 0.12 * xp.maximum(
+        xp.log2(512.0 / xp.maximum(cc["allocator_arena_mb"], 32.0)), 0.0)
     sink = cc["sink_partitions"]
-    ovh = ovh + 0.25 / np.maximum(sink, 1.0) + 0.004 * sink
+    ovh = ovh + 0.25 / xp.maximum(sink, 1.0) + 0.004 * sink
     ovh = ovh * (0.45 + 0.55 / (1.0 + cc["prefetch_depth"]))
 
     service = ovh + t_compute * t_mem_penalty + coll
-    zeros = np.zeros_like(service)
+    zeros = xp.zeros_like(service)
     return {
         "service": service, "t_compute": t_compute * t_mem_penalty,
         "t_overhead": ovh, "t_collective": coll,
-        "mem_frac": np.minimum(mem_frac, 1.0), "eff": eff + zeros,
-        "tokens": tokens + zeros, "straggler": zeros, "failure": zeros.copy(),
+        "mem_frac": xp.minimum(mem_frac, 1.0), "eff": eff + zeros,
+        "tokens": tokens + zeros, "straggler": zeros, "failure": zeros + 0.0,
     }
 
 
@@ -305,13 +320,22 @@ class FleetCore:
     at once. Heterogeneity is free: each cluster has its own workload, model,
     config dict and RNG stream. ``SimCluster`` wraps an N=1 instance;
     ``FleetEnv`` exposes the N>1 batched environment (DESIGN.md §2a).
+
+    ``backend`` selects the tick engine (DESIGN.md §9): ``"numpy"`` is this
+    module's reference oracle; ``"jax"`` / ``"pallas"`` delegate the hot loop
+    to the device-resident ``repro.engine.fleet_jax.DeviceFleetEngine``
+    (jitted ``lax.scan``, threefry counter RNG; the pallas variant steps the
+    fused ``repro.kernels.fleet_tick`` kernel). Config management, the
+    allow-list guard and stabilisation stay host-side in this class.
     """
 
     def __init__(self, workloads: Sequence[Workload], models: Sequence[ModelConfig],
                  spec: SimSpec, lever_specs: Sequence[LeverSpec],
-                 seeds: Sequence[int]):
+                 seeds: Sequence[int], backend: str = "numpy"):
         assert len(workloads) == len(models) == len(seeds)
+        assert backend in ("numpy", "jax", "pallas"), backend
         self.n = len(workloads)
+        self.backend = backend
         self.workloads = list(workloads)
         self.models = list(models)
         self.spec = spec
@@ -323,6 +347,7 @@ class FleetCore:
         self.mc = model_constants(self.models)
         # SFC64: ~25 % faster bulk normal generation than PCG64 on this hot
         # path; one independent stream per cluster, seeded per cluster.
+        self.seeds = [int(s) for s in seeds]
         self.rngs = [np.random.Generator(np.random.SFC64(s)) for s in seeds]
         self.node_speed = np.stack(
             [1.0 + 0.03 * rng.standard_normal(self.n_nodes) for rng in self.rngs])
@@ -333,7 +358,11 @@ class FleetCore:
         self.last_service = np.full(self.n, np.nan)
         self.last_load_s = np.zeros(self.n)
         self.configs = [self._default_config() for _ in range(self.n)]
-        self.store = FleetSeriesStore(self.metric_names, self.n, self.n_nodes)
+        # device backends summarise windows on device and never read the ring
+        # buffer — skip the (capacity, N, nodes, metrics) allocation entirely
+        # (~1.9 GB at N=1024)
+        self.store = (FleetSeriesStore(self.metric_names, self.n, self.n_nodes)
+                      if backend == "numpy" else None)
         self._packed: Optional[dict] = None
         self._crate: Optional[np.ndarray] = None
         # (N, nodes, metrics) emission factor: metric scale × per-node speed
@@ -342,6 +371,11 @@ class FleetCore:
         emc = _emission_constants()
         self._emit_factor = self.node_speed[:, :, None] * emc["scale"][None, None, :]
         self._emit_factor[:, :, emc["is_driver"]] = emc["scale"][emc["is_driver"]]
+        self._dev = None
+        if backend != "numpy":
+            from repro.engine.fleet_jax import DeviceFleetEngine
+
+            self._dev = DeviceFleetEngine(self, pallas=backend == "pallas")
 
     # ------------------------------------------------------------- config
     def _default_config(self) -> dict:
@@ -354,6 +388,8 @@ class FleetCore:
 
     def invalidate(self) -> None:
         self._packed = None
+        if self._dev is not None:   # device copy of the lever arrays too
+            self._dev.invalidate_cc()
 
     # ---------------------------------------------------------------- env ops
     def reset(self) -> None:
@@ -363,24 +399,59 @@ class FleetCore:
         self.reconfigs[:] = 0
         self.last_service[:] = np.nan
         self.configs = [self._default_config() for _ in range(self.n)]
-        self.store.clear()
+        if self.store is not None:
+            self.store.clear()
+        if self._dev is not None:
+            self._dev.reset()
         self.invalidate()
 
+    def _const_rates(self) -> Optional[tuple]:
+        """(rate, size) (N,) arrays when every workload is time-invariant —
+        hoists the 2N python ``rate()`` calls out of every guard /
+        stabilisation / window call on constant fleets."""
+        if not all(getattr(w, "constant", False) for w in self.workloads):
+            return None
+        if not hasattr(self, "_const_rs"):
+            self._const_rs = (
+                np.array([w.rate(0.0) for w in self.workloads]),
+                np.array([w.mean_size(0.0) for w in self.workloads]))
+        return self._const_rs
+
+    def _rates_now(self) -> tuple[np.ndarray, np.ndarray]:
+        cr = self._const_rates()
+        if cr is not None:
+            return cr
+        return (np.array([w.rate(t) for w, t in zip(self.workloads, self.clock)]),
+                np.array([w.mean_size(t) for w, t in zip(self.workloads,
+                                                         self.clock)]))
+
     def apply_configs(self, configs: Sequence[dict],
-                      changed_levers: Optional[Sequence] = None) -> list[dict]:
+                      changed_levers: Optional[Sequence] = None,
+                      copy: bool = True) -> list[dict]:
         """Install one config per cluster. Reconfiguration costs loading time
         while Kafka buffers arrivals (paper §4.2); per-cluster RNG keeps the
         fleet bit-compatible with serial runs.
 
         ``changed_levers`` (per-cluster iterables of lever names) lets callers
         that know exactly which levers moved skip the 109-key config diff AND
-        keeps the packed lever arrays updated in place instead of repacked."""
+        keeps the packed lever arrays updated in place instead of repacked.
+        ``copy=False`` additionally trusts the caller to hand over ownership
+        of the config dicts (no defensive copy) — the exploration hot loop's
+        contract on device backends (DESIGN.md §9)."""
+        if (self._dev is not None and changed_levers is not None
+                and self._packed is not None):
+            return self._apply_configs_device(configs, changed_levers, copy)
         reports = []
         incremental = changed_levers is not None and self._packed is not None
         for i, cfg in enumerate(configs):
             old = self.configs[i]
             if changed_levers is None:
                 changed = [k for k, v in cfg.items() if old.get(k) != v]
+            elif not copy:
+                # caller owns the dicts and may have mutated them in place
+                # (old IS cfg), so the no-op filter would diff a dict
+                # against itself — the hint is authoritative here
+                changed = list(changed_levers[i])
             else:
                 changed = [k for k in changed_levers[i] if old.get(k) != cfg.get(k)]
             reboot = any(self.specs_by_name[k].reboot for k in changed)
@@ -389,9 +460,9 @@ class FleetCore:
             load_s = 10.0 + (60.0 if reboot else 0.0) + (8.0 if rejit else 0.0)
             load_s *= 1.0 + self.spec.noise * abs(self.rngs[i].standard_normal())
             # Kafka buffers arrivals during the reconfiguration (paper §4.2)
-            self.backlog[i] += self.workloads[i].rate(self.clock[i]) * load_s
+            self._buffer_during_load(i, load_s)
             self.clock[i] += load_s
-            self.configs[i] = dict(cfg)
+            self.configs[i] = dict(cfg) if copy else cfg
             self.reconfigs[i] += 1
             self.last_load_s[i] = load_s
             reports.append({"load_s": float(load_s), "rebooted": reboot})
@@ -401,13 +472,71 @@ class FleetCore:
                         self._packed[key][i] = _PACKERS[key](cfg)
         if not incremental:
             self.invalidate()
+        elif self._dev is not None:
+            self._dev.invalidate_cc()  # packed arrays were mutated in place
         return reports
+
+    def _buffer_during_load(self, i: int, load_s: float) -> None:
+        """Kafka buffering during cluster i's reconfiguration. The numpy
+        oracle mutates ``backlog`` directly; the device engine overrides the
+        hook to queue the arrivals for device-side application so the
+        authoritative backlog never leaves the device (DESIGN.md §9)."""
+        if self._dev is not None:
+            self._dev.buffer_during_load(i, load_s)
+        else:
+            self.backlog[i] += self.workloads[i].rate(self.clock[i]) * load_s
+
+    def _apply_configs_device(self, configs: Sequence[dict],
+                              changed_levers: Sequence,
+                              copy: bool) -> list[dict]:
+        """Vectorised ``apply_configs`` for device backends: one bulk host-RNG
+        draw for the loading noise and batched pending-arrival buffering
+        instead of N python round-trips. The per-cluster-stream accounting
+        only exists for the numpy oracle's bit-for-bit contract, which device
+        backends already trade away (DESIGN.md §9)."""
+        n = self.n
+        load_s = np.full(n, 10.0)
+        reboot = np.zeros(n, bool)
+        for i, ch in enumerate(changed_levers):
+            cfg = configs[i]
+            rb = rj = False
+            for k in ch:
+                s = self.specs_by_name[k]
+                rb |= s.reboot
+                rj |= s.group in ("kernel", "memory", "parallel")
+                for key in _LEVER_TO_PACKED.get(k, ()):
+                    self._packed[key][i] = _PACKERS[key](cfg)
+            load_s[i] += (60.0 if rb else 0.0) + (8.0 if rj else 0.0)
+            reboot[i] = rb
+            self.configs[i] = dict(cfg) if copy else cfg
+        load_s *= 1.0 + self.spec.noise * np.abs(
+            self._dev.host_rng.standard_normal(n))
+        rate, _ = self._rates_now()
+        self._dev.buffer_during_load_batch(rate * load_s, load_s)
+        self.clock += load_s
+        self.reconfigs += 1
+        self.last_load_s = load_s
+        self._dev.invalidate_cc()
+        return [{"load_s": float(l), "rebooted": bool(r)}
+                for l, r in zip(load_s, reboot)]
+
+    def runnable_delta(self, proposals: Sequence[dict],
+                       changed_levers: Sequence) -> np.ndarray:
+        """``runnable`` for single-lever proposals: patches a copy of the
+        packed lever arrays instead of re-packing all 21 × N extractor
+        lambdas — the §2.1 guard at 1024-cluster fleet scale."""
+        cc = {k: v.copy() for k, v in self.packed().items()}
+        for i, (cfg, ch) in enumerate(zip(proposals, changed_levers)):
+            for k in ch:
+                for key in _LEVER_TO_PACKED.get(k, ()):
+                    cc[key][i] = _PACKERS[key](cfg)
+        rate, size = self._rates_now()
+        return self._allowlist(cc, rate, size)
 
     def stabilisation_times(self) -> np.ndarray:
         """Paper §4.2: stabilisation detected from latency-variance trends,
         '<3 min 99 % of the time'. Modelled as base + term ∝ service change."""
-        rate = np.array([w.rate(t) for w, t in zip(self.workloads, self.clock)])
-        size = np.array([w.mean_size(t) for w, t in zip(self.workloads, self.clock)])
+        rate, size = self._rates_now()
         s_new = service_terms_arrays(self.packed(), self.mc, self.spec,
                                      self.chips, rate, size)["service"]
         prev = np.where(np.isnan(self.last_service), s_new, self.last_service)
@@ -415,18 +544,23 @@ class FleetCore:
         self.last_service = s_new
         return np.clip(30.0 + 240.0 * rel, 30.0, 180.0)
 
-    def runnable(self, configs: Sequence[dict]) -> np.ndarray:
-        """Paper's allow-list, vectorised: keep only configs the engine could
-        schedule (service within 2.5 batch intervals, ≥70 % throughput)."""
-        rate = np.array([w.rate(t) for w, t in zip(self.workloads, self.clock)])
-        size = np.array([w.mean_size(t) for w, t in zip(self.workloads, self.clock)])
-        cc = pack_configs(configs)
+    def _allowlist(self, cc: dict, rate: np.ndarray,
+                   size: np.ndarray) -> np.ndarray:
+        """The paper's allow-list rule over packed lever arrays: service
+        within 2.5 batch intervals and ≥70 % throughput — the ONE place the
+        thresholds live (``runnable`` and ``runnable_delta`` both call it)."""
         service = service_terms_arrays(cc, self.mc, self.spec, self.chips,
                                        rate, size)["service"]
         T_b = cc["T_b"]
         batch = np.minimum(rate * T_b, cc["max_batch_events"])
         throughput = batch / np.maximum(service, T_b)
         return (service <= 2.5 * T_b) & (throughput >= 0.7 * rate)
+
+    def runnable(self, configs: Sequence[dict]) -> np.ndarray:
+        """Paper's allow-list, vectorised: keep only configs the engine could
+        schedule."""
+        rate, size = self._rates_now()
+        return self._allowlist(pack_configs(configs), rate, size)
 
     # ---------------------------------------------------------- bulk RNG draws
     def _buffers(self) -> dict:
@@ -476,8 +610,8 @@ class FleetCore:
                 rng.standard_normal(out=mnoise[i, :n_emit])
         return buf
 
-    def observe_fleet(self, window_s, *,
-                      summarise: bool = True) -> Optional[list[MetricsWindowData]]:
+    def observe_fleet(self, window_s, *, summarise: bool = True,
+                      preroll_s=None) -> Optional[list[MetricsWindowData]]:
         """Advance every cluster by its window and emit per-cluster metrics.
 
         ``window_s`` may be a scalar (same window for all) or an (N,) array
@@ -485,10 +619,18 @@ class FleetCore:
         ``batch_interval_s``, so tick counts differ; each tick advances the
         still-active subset in one vectorised pass. ``summarise=False`` skips
         the window-summary construction (see ``advance_fleet``).
+        ``preroll_s`` prepends a stabilisation wait excluded from the window
+        (== ``advance_fleet(preroll_s)`` first; device backends fuse both
+        into one program, DESIGN.md §9).
         """
         win = np.asarray(window_s, float)
         if win.ndim == 0:
             win = np.full(self.n, float(win))
+        if self._dev is not None:
+            return self._dev.observe_fleet(win, summarise=summarise,
+                                           preroll_s=preroll_s)
+        if preroll_s is not None:
+            self.advance_fleet(np.asarray(preroll_s, float))
         cc = self.packed()
         n_ticks = np.maximum(1, np.round(win / cc["T_b"]).astype(np.int64))
         self.server_free = np.maximum(self.server_free, self.clock)
@@ -502,6 +644,7 @@ class FleetCore:
         else:
             self._crate = None
         lat_acc: list[list[np.ndarray]] = [[] for _ in range(self.n)]
+        proc_acc = np.zeros(self.n)
         emc = _emission_constants()
         # windows shorter than one emission period would otherwise emit no
         # metric sample at all: force one on the final tick instead
@@ -515,10 +658,11 @@ class FleetCore:
             for dt in range(min(_CHUNK_TICKS, max_t - t0)):
                 live = n_ticks > t0 + dt
                 act = all_ids if live.all() else np.nonzero(live)[0]
-                self._tick(act, cc, lat_acc, emc, buf, dt, t0, forced, n_ticks)
+                self._tick(act, cc, lat_acc, emc, buf, dt, t0, forced, n_ticks,
+                           proc_acc)
         if not summarise:
             return None
-        return self._window_results(win, lat_acc)
+        return self._window_results(win, lat_acc, proc_acc)
 
     def advance_fleet(self, window_s) -> None:
         """``observe_fleet`` without the window summaries — for stabilisation
@@ -527,8 +671,35 @@ class FleetCore:
         observe of the same span."""
         self.observe_fleet(window_s, summarise=False)
 
-    def _window_results(self, win: np.ndarray,
-                        lat_acc: list) -> list[MetricsWindowData]:
+    def observe_fleet_stats(self, window_s, preroll_s=None) -> dict:
+        """``observe_fleet`` returning fleet-shaped window arrays instead of N
+        per-cluster objects: ``{"mean_ms", "p99_ms", "processed", "per_node",
+        "clock_s"}`` with leading cluster axis. On device backends the arrays
+        stay on device until read, so an exploration loop can queue many
+        windows asynchronously (DESIGN.md §9) — the per-object API would
+        force a host sync per window. ``preroll_s`` prepends a stabilisation
+        wait (paper §4.2) excluded from the stats; device backends fuse it
+        into the same program."""
+        win = np.asarray(window_s, float)
+        if win.ndim == 0:
+            win = np.full(self.n, float(win))
+        if self._dev is not None:
+            self._dev.observe_fleet(win, summarise=True, build_windows=False,
+                                    preroll_s=preroll_s)
+            return self._dev.last_stats
+        if preroll_s is not None:
+            self.advance_fleet(np.asarray(preroll_s, float))
+        windows = self.observe_fleet(win)
+        return {
+            "mean_ms": np.array([w.mean_ms for w in windows]),
+            "p99_ms": np.array([w.p99_ms for w in windows]),
+            "processed": np.array([w.processed_events for w in windows]),
+            "per_node": np.stack([w.node_matrix for w in windows]),
+            "clock_s": self.clock.copy(),
+        }
+
+    def _window_results(self, win: np.ndarray, lat_acc: list,
+                        proc_acc: np.ndarray) -> list[MetricsWindowData]:
         """Window-end summaries, with equal-shape clusters sharing one
         vectorised stats pass (bitwise identical to per-cluster reduction)."""
         zero = np.zeros((self.n_nodes, len(self.metric_names)))
@@ -555,6 +726,7 @@ class FleetCore:
                 p99_ms=float(p99[i]),
                 clock_s=float(self.clock[i]),
                 node_matrix=avgs[i],
+                processed_events=float(proc_acc[i]),
             )
             for i in range(self.n)
         ]
@@ -562,7 +734,7 @@ class FleetCore:
     # ------------------------------------------------------------- tick
     def _tick(self, act: np.ndarray, cc: dict, lat_acc: list, emc: dict,
               buf: dict, dt: int, t0: int, forced: np.ndarray,
-              n_ticks: np.ndarray) -> None:
+              n_ticks: np.ndarray, proc_acc: np.ndarray) -> None:
         """One micro-batch tick for the active cluster subset ``act``."""
         spec = self.spec
         wls, clock = self.workloads, self.clock
@@ -614,6 +786,7 @@ class FleetCore:
         self.server_free[act] = np.minimum(done, batch_close + inflight_cap)
         processed = np.where(service <= T_b, batch, batch * (T_b / service))
         self.backlog[act] = np.maximum(backlog - processed, 0.0)
+        proc_acc[act] += processed
         rho = service / T_b
         queue_delay = (start - batch_close) + backlog_age
         # per-event latency sample: padded (m, 64) math, rows sliced to their

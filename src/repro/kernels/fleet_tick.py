@@ -1,0 +1,193 @@
+"""Pallas fused fleet-tick kernel: one window of the queueing recurrence on
+the (clusters × latency-lane) grid (DESIGN.md §9).
+
+The jax backend of the device fleet engine steps ``service_terms_arrays``
+inside a ``lax.scan``; this kernel is the TPU-shaped alternative the
+``backend="pallas"`` path uses: the *whole window* — T sequential micro-batch
+ticks, their queueing state updates AND the per-event latency-lane tiles —
+runs as a single fused kernel, VMEM-resident, with clusters on the lane axis
+(128-wide vectors) and the ``_MAX_LAT_SAMPLES`` event lanes ("operators" of
+the simulated pipeline) on the sublane axis.
+
+Grid = (cluster blocks, lane blocks). The tick recurrence is cheap (a few
+dozen VPU ops on a (BLOCK_N,) vector), so every lane block recomputes it in
+registers rather than staging per-tick scalars through scratch — writes to
+the state/terms outputs are identical across lane blocks and land on the
+same output block (the index map drops ``j``).
+
+The service model is algebraically identical to
+``repro.engine.simcluster.service_terms_arrays`` but pre-folded into
+per-cluster coefficients (``pack_tick_consts``): service = ovh + tokens·A·pen
++ tokens·C with tokens = batch·size·16 — the lever-to-factor tables all
+collapse into A/B/C/ovh at config-pack time, so the per-tick hot loop does
+no table lookups. ``tests/test_fleet_jax.py`` diffs the kernel against the
+jnp scan tick.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.engine.simcluster import TOKENS_PER_MB, PEAK_FLOPS
+
+DEFAULT_BLOCK_N = 128   # clusters per block (TPU lane width)
+DEFAULT_BLOCK_S = 64    # latency lanes per block (= _MAX_LAT_SAMPLES)
+
+#: consts channel layout (rows of the (CONSTS_ROWS, N) array)
+_C_TB, _C_MAXB, _C_ACOMP, _C_CCOLL, _C_BMEM, _C_KVP, _C_OVH, _C_SLOWCAP, \
+    _C_BACKUP, _C_FAIL, _C_INFLIGHT = range(11)
+CONSTS_ROWS = 16  # padded to a sublane multiple
+
+
+def pack_tick_consts(cc: dict, mc: dict, spec, chips: int, xp=jnp):
+    """Fold the packed lever arrays + model constants into the per-cluster
+    coefficient rows the kernel consumes. Same algebra as
+    ``service_terms_arrays``, factored by what varies per tick:
+
+        tokens   = batch · size · TOKENS_PER_MB
+        service  = ovh + tokens·A·mem_penalty(tokens·B + kvp) + tokens·C
+    """
+    eff = spec.base_mfu * cc["eff_block_q"] * cc["eff_block_k"] * cc["eff_dtype"]
+    a0 = mc["flops_per_tok"] * cc["remat"] / (chips * PEAK_FLOPS * eff)
+    moe = (mc["is_moe"] != 0) & (cc["expert_parallel"] != 0)
+    a_comp = xp.where(moe, a0 * 0.92, a0) * cc["tp_compute"]
+    c_coll = (a0 * spec.collective_frac * (cc["tp"] / 16.0) ** 0.5
+              * cc["compression"] / (1.0 + 0.45 * (cc["mb"] - 1.0)))
+    c_coll = xp.where(moe, c_coll * 1.15, c_coll)
+    b_mem = mc["kv_per_tok"] / 1e9 / (chips * spec.hbm_gb_per_chip)
+    ovh = spec.dispatch_overhead_s * (1.0 + 0.12 * (cc["mb"] - 1.0))
+    ovh = ovh + spec.driver_gc_coeff / xp.maximum(cc["driver_memory_gb"], 1.0) * 0.1
+    ovh = ovh + 0.12 * xp.maximum(
+        xp.log2(512.0 / xp.maximum(cc["allocator_arena_mb"], 32.0)), 0.0)
+    sink = cc["sink_partitions"]
+    ovh = ovh + 0.25 / xp.maximum(sink, 1.0) + 0.004 * sink
+    ovh = ovh * (0.45 + 0.55 / (1.0 + cc["prefetch_depth"]))
+    T_b = cc["T_b"]
+    slow_cap = xp.maximum(1.2, 1.0 + cc["straggler_timeout_s"]
+                          / xp.maximum(T_b, 1e-3))
+    rows = [T_b, cc["max_batch_events"], a_comp, c_coll, b_mem,
+            cc["kv_pressure"], ovh, slow_cap,
+            (cc["backup_tasks"] != 0).astype(a0.dtype),
+            cc["failure_inject_frac"],
+            xp.maximum(cc["max_inflight_batches"], 1.0) * T_b]
+    zeros = xp.zeros_like(T_b)
+    rows += [zeros] * (CONSTS_ROWS - len(rows))
+    return xp.stack(rows).astype(jnp.float32)
+
+
+def _tick_window_kernel(state_ref, c_ref, rate_ref, size_ref, z_ref, us_ref,
+                        ur_ref, uf_ref, act_ref, uw_ref, z2_ref,
+                        state_out_ref, ys_ref, lat_ref,
+                        *, T: int, noise: float, retention_s: float,
+                        straggler_prob: float, slo: float, shi: float):
+    """One exploration window for a (BLOCK_N,) cluster block: the T-tick
+    queueing recurrence in registers + this grid cell's latency-lane tiles."""
+    T_b = c_ref[_C_TB]
+    max_b = c_ref[_C_MAXB]
+    a_comp = c_ref[_C_ACOMP]
+    c_coll = c_ref[_C_CCOLL]
+    b_mem = c_ref[_C_BMEM]
+    kvp = c_ref[_C_KVP]
+    ovh = c_ref[_C_OVH]
+    slow_cap = c_ref[_C_SLOWCAP]
+    backup = c_ref[_C_BACKUP]
+    fail_frac = c_ref[_C_FAIL]
+    inflight = c_ref[_C_INFLIGHT]
+
+    def tick(t, carry):
+        backlog, sfree = carry
+        rate = rate_ref[t]
+        active = act_ref[t] != 0
+        arrivals = rate * T_b * (1.0 + noise * z_ref[t])
+        age = backlog / jnp.maximum(rate, 1.0)
+        blg = backlog + jnp.maximum(arrivals, 0.0)
+        blg = jnp.minimum(blg, rate * retention_s)         # Kafka retention
+        batch = jnp.minimum(blg, max_b)
+        tokens = batch * size_ref[t] * TOKENS_PER_MB
+        mem_frac = jnp.minimum(tokens * b_mem + kvp, 1.5)
+        pen = 1.0 + 2.0 * jnp.maximum(mem_frac - 1.0, 0.0)  # spill cliff
+        service = ovh + tokens * a_comp * pen + tokens * c_coll
+        smask = us_ref[t] < straggler_prob
+        raw = slo + (shi - slo) * ur_ref[t]
+        slow = jnp.where(smask, jnp.where(backup != 0, 1.1,
+                                          jnp.minimum(raw, slow_cap)), 1.0)
+        fmask = uf_ref[t] < fail_frac
+        slow = jnp.where(fmask, slow * 2.0, slow)
+        service = service * slow
+        start_rel = jnp.maximum(T_b, sfree)
+        sfree_new = jnp.minimum(start_rel + service, T_b + inflight) - T_b
+        processed = jnp.where(service <= T_b, batch, batch * (T_b / service))
+        blg_after = jnp.maximum(blg - processed, 0.0)
+        qd = (start_rel - T_b) + age
+
+        lat_ref[t] = (uw_ref[t] * T_b[None, :] + qd[None, :]
+                      + service[None, :] * (1.0 + 0.1 * z2_ref[t]))
+        ys_ref[0, t] = service
+        ys_ref[1, t] = qd
+        ys_ref[2, t] = batch
+        ys_ref[3, t] = jnp.where(active, processed, 0.0)
+        ys_ref[4, t] = smask.astype(jnp.float32)
+        ys_ref[5, t] = fmask.astype(jnp.float32)
+        ys_ref[6, t] = blg_after
+        return (jnp.where(active, blg_after, backlog),
+                jnp.where(active, sfree_new, sfree))
+
+    backlog, sfree = jax.lax.fori_loop(
+        0, T, tick, (state_ref[0], state_ref[1]))
+    state_out_ref[0] = backlog
+    state_out_ref[1] = sfree
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("noise", "retention_s", "straggler_prob", "slo", "shi",
+                     "block_n", "block_s", "interpret"))
+def fleet_tick_window(state, consts, rate, size, z, u_strag, u_raw, u_fail,
+                      active, u_wait, z2a, *, noise, retention_s,
+                      straggler_prob, slo, shi, block_n=DEFAULT_BLOCK_N,
+                      block_s=DEFAULT_BLOCK_S, interpret=False):
+    """Run one window's fused tick recurrence on the clusters × lanes grid.
+
+    state (2, N) [backlog, server_free_rel]; consts (CONSTS_ROWS, N) from
+    ``pack_tick_consts``; rate/size/z/u_* / active (T, N); u_wait/z2a
+    (T, S, N). Returns (state' (2, N), ys (7, T, N), lat (T, S, N) seconds):
+    ys rows = service, queue_delay, batch, processed, straggler, failure,
+    backlog_after.
+    """
+    T, S, N = u_wait.shape
+    bn = min(block_n, N)
+    bs = min(block_s, S)
+    grid = (pl.cdiv(N, bn), pl.cdiv(S, bs))
+    vm = pltpu.VMEM
+    tn = lambda i, j: (0, i)        # (rows, cluster-block) tiles
+    lane = lambda i, j: (0, j, i)   # (ticks, lane-block, cluster-block)
+    kernel = functools.partial(
+        _tick_window_kernel, T=T, noise=noise, retention_s=retention_s,
+        straggler_prob=straggler_prob, slo=slo, shi=shi)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2, bn), tn, memory_space=vm),
+            pl.BlockSpec((CONSTS_ROWS, bn), tn, memory_space=vm),
+        ] + [pl.BlockSpec((T, bn), tn, memory_space=vm)] * 7 + [
+            pl.BlockSpec((T, bs, bn), lane, memory_space=vm),
+            pl.BlockSpec((T, bs, bn), lane, memory_space=vm),
+        ],
+        out_specs=[
+            pl.BlockSpec((2, bn), tn, memory_space=vm),
+            pl.BlockSpec((7, T, bn), lambda i, j: (0, 0, i), memory_space=vm),
+            pl.BlockSpec((T, bs, bn), lane, memory_space=vm),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((2, N), jnp.float32),
+            jax.ShapeDtypeStruct((7, T, N), jnp.float32),
+            jax.ShapeDtypeStruct((T, S, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(state, consts, rate, size, z, u_strag, u_raw, u_fail, active,
+      u_wait, z2a)

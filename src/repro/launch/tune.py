@@ -29,6 +29,11 @@ def main(argv=None):
     ap.add_argument("--fleet-mix", action="store_true",
                     help="heterogeneous fleet over the FLEET_MIX workload "
                          "roster instead of N copies of --workload")
+    ap.add_argument("--backend", choices=["numpy", "jax", "pallas"],
+                    default="numpy",
+                    help="fleet tick engine (DESIGN.md §9): numpy reference "
+                         "oracle, or the device-resident jax/pallas engine "
+                         "(1000+-cluster fleets; statistical equivalence)")
     ap.add_argument("--collect", type=int, default=1200)
     ap.add_argument("--updates", type=int, default=8)
     ap.add_argument("--steps-per-episode", type=int, default=5)
@@ -44,13 +49,19 @@ def main(argv=None):
     from repro.engine import FleetEnv, LocalEngine, SimCluster
 
     wl = get_workload(args.workload)
+    if args.backend != "numpy" and not (args.env == "sim" and args.fleet > 1):
+        raise SystemExit(
+            f"--backend {args.backend} needs --env sim --fleet N>1: the "
+            "device engine is the fleet tick backend (DESIGN.md §9); serial "
+            "SimCluster and LocalEngine are numpy-only")
     if args.env == "sim" and args.fleet > 1:
         wls = (fleet_workloads(args.fleet, seed=args.seed) if args.fleet_mix
                else [get_workload(args.workload) for _ in range(args.fleet)])
-        env = FleetEnv(wls, seed=args.seed)
+        env = FleetEnv(wls, seed=args.seed, backend=args.backend)
         window = args.window
         print(f"[fleet] {args.fleet} clusters "
-              f"({'mixed roster' if args.fleet_mix else args.workload})")
+              f"({'mixed roster' if args.fleet_mix else args.workload}, "
+              f"{args.backend} backend)")
     elif args.env == "sim":
         env = SimCluster(wl, seed=args.seed)
         window = args.window

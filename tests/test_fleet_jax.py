@@ -1,0 +1,301 @@
+"""Device-resident fleet engine (DESIGN.md §9): the jax/pallas backends must
+be *statistically* equivalent to the numpy oracle — same window-level
+latency/throughput behaviour within tolerance — while the jit machinery must
+never retrace on steady-state stepping.
+
+The oracle keeps its bit-for-bit contract (tests/test_fleet.py); device
+backends trade it for threefry counter RNG, so these tests pin distributional
+agreement: deterministic (noise-free) trajectories to ~1e-3, noisy window
+statistics to the sampling tolerance calibrated against the oracle's own
+seed-to-seed spread (~2-3 % on the hardest workload).
+"""
+import numpy as np
+import pytest
+
+from repro.data.workloads import (IoTWorkload, PoissonWorkload,
+                                  SwitchingWorkload, TrapezoidWorkload,
+                                  YahooAdsWorkload)
+from repro.engine import FleetEnv
+from repro.engine.simcluster import SimSpec
+
+WORKLOADS = {
+    "poisson": lambda: PoissonWorkload(10_000, 0.5),
+    "trapezoid": TrapezoidWorkload,
+    "switching": lambda: SwitchingWorkload(period_s=900.0),
+}
+
+
+def _fleet(backend, wl_factory, n=6, seed=0, **kw):
+    return FleetEnv([wl_factory() for _ in range(n)],
+                    seeds=[seed + i for i in range(n)], backend=backend, **kw)
+
+
+def _window_stats(backend, wl_factory, *, windows=3, seed=0):
+    """Fleet-mean window stats over a full §2.1-shaped cycle: one config
+    change + stabilisation preroll, then `windows` observation windows."""
+    env = _fleet(backend, wl_factory, seed=seed)
+    cfgs = env.current_configs()
+    for c in cfgs:
+        c["prefetch_depth"] = 2
+    env.apply_configs(cfgs)
+    stabs = env.stabilisation_times()
+    out = {"mean": [], "p99": [], "processed": []}
+    for _ in range(windows):
+        s = env.observe_stats(240.0, preroll_s=stabs)
+        stabs = None
+        out["mean"].append(float(np.mean(np.asarray(s["mean_ms"]))))
+        out["p99"].append(float(np.mean(np.asarray(s["p99_ms"]))))
+        out["processed"].append(float(np.mean(np.asarray(s["processed"]))))
+    return {k: float(np.mean(v)) for k, v in out.items()}
+
+
+@pytest.mark.parametrize("wl", sorted(WORKLOADS))
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+def test_statistical_equivalence_vs_oracle(backend, wl):
+    """Window-level mean/p99 latency and true processed throughput must
+    match the numpy oracle within tolerance (oracle seed-to-seed spread is
+    ~2-3 % on the congested trapezoid; bounds sit well above that but far
+    below any real modelling divergence)."""
+    ref = _window_stats("numpy", WORKLOADS[wl])
+    got = _window_stats(backend, WORKLOADS[wl])
+    assert abs(got["mean"] - ref["mean"]) / ref["mean"] < 0.10, (got, ref)
+    assert abs(got["p99"] - ref["p99"]) / ref["p99"] < 0.15, (got, ref)
+    assert abs(got["processed"] - ref["processed"]) / ref["processed"] < 0.05
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+def test_deterministic_trajectory_matches_oracle(backend):
+    """With noise/stragglers off the queueing recurrence is deterministic:
+    backlog and processed-event trajectories must track the oracle to f32
+    accuracy even through an overload ramp, and the exact host clock shadow
+    must match to the float."""
+    spec = SimSpec(noise=0.0, straggler_prob=0.0)
+    ref = FleetEnv([TrapezoidWorkload()], seeds=[0], spec=spec)
+    dev = FleetEnv([TrapezoidWorkload()], seeds=[0], spec=spec,
+                   backend=backend)
+    for _ in range(3):
+        w = ref.observe(240.0)[0]
+        s = dev.observe_stats(240.0)
+        assert np.allclose(float(s["processed"][0]), w.processed_events,
+                           rtol=1e-4)
+        assert np.allclose(float(s["mean_ms"][0]), w.mean_ms, rtol=0.02)
+        dev._dev.sync_host()
+        assert np.allclose(dev.backlog, ref.backlog, rtol=1e-4, atol=1.0)
+        assert dev.clocks()[0] == ref.clocks()[0]
+
+
+def test_jit_cache_no_retrace_on_restep():
+    """Re-stepping the same fleet geometry must reuse the compiled window
+    program — the trace counter may not grow after the first window of each
+    (shape, kind)."""
+    from repro.engine.fleet_jax import TRACE_COUNTS
+
+    env = _fleet("jax", WORKLOADS["poisson"], n=4)
+
+    def cycle(v: float):
+        cfgs = env.current_configs()
+        for c in cfgs:
+            c["driver_memory_gb"] = v
+        env.apply_configs(cfgs, changed_levers=[("driver_memory_gb",)] * 4)
+        env.observe(240.0, preroll_s=env.stabilisation_times())
+        env.observe(240.0)
+
+    cycle(24.0)                    # warm: compiles this fleet's programs
+    before = dict(TRACE_COUNTS)
+    for v in (28.0, 24.0, 32.0):   # re-stepping must hit the jit cache
+        cycle(v)
+    assert TRACE_COUNTS == before, (before, TRACE_COUNTS)
+
+
+def test_pallas_kernel_matches_jnp_tick():
+    """The fused fleet_tick kernel must agree with the lean scan body on the
+    same inputs — same recurrence, same ys channels, same lane tiles."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.engine.simcluster import TOKENS_PER_MB
+    from repro.engine.fleet_jax import _tick_body
+    from repro.kernels.fleet_tick import fleet_tick_window, pack_tick_consts
+
+    env = _fleet("jax", WORKLOADS["poisson"], n=8)
+    spec = env.spec
+    cc = {k: jnp.asarray(v, jnp.float32) for k, v in env.packed().items()}
+    mc = {k: jnp.asarray(np.asarray(v, np.float32))
+          for k, v in env.mc.items()}
+    consts = pack_tick_consts(cc, mc, spec, env.chips, xp=jnp)
+    T, N, S = 12, 8, 16
+    rng = np.random.default_rng(0)
+    rate = jnp.asarray(rng.uniform(5e3, 2e4, (T, N)), jnp.float32)
+    size = jnp.asarray(rng.uniform(0.2, 1.0, (T, N)), jnp.float32)
+    z = jnp.asarray(rng.standard_normal((T, N)), jnp.float32)
+    us, ur, uf = (jnp.asarray(rng.random((T, N)), jnp.float32)
+                  for _ in range(3))
+    active = jnp.ones((T, N), jnp.float32)
+    u_wait = jnp.asarray(rng.random((T, S, N)), jnp.float32)
+    z2a = jnp.asarray(np.abs(rng.standard_normal((T, S, N))), jnp.float32)
+
+    state_out, ys, lat = fleet_tick_window(
+        jnp.zeros((2, N)), consts, rate, size, z, us, ur, uf, active,
+        u_wait, z2a, noise=spec.noise, retention_s=spec.retention_s,
+        straggler_prob=spec.straggler_prob, slo=spec.straggler_slow[0],
+        shi=spec.straggler_slow[1], block_n=8, block_s=8, interpret=True)
+
+    # reference: precomputed state-independent terms + the lean scan body
+    (T_b, max_b, a_comp, c_coll, b_mem, kvp, ovh, slow_cap, backup,
+     fail_frac, inflight) = tuple(consts[i] for i in range(11))
+    smask = us < spec.straggler_prob
+    slo, shi = spec.straggler_slow
+    raw = slo + (shi - slo) * ur
+    slow = jnp.where(smask, jnp.where(backup != 0, 1.1,
+                                      jnp.minimum(raw, slow_cap)), 1.0)
+    slow = jnp.where(uf < fail_frac, slow * 2.0, slow)
+    arr = jnp.maximum(rate * T_b * (1.0 + spec.noise * z), 0.0)
+    xs = (arr, rate * spec.retention_s, slow, size * TOKENS_PER_MB,
+          1.0 / jnp.maximum(rate, 1.0), jnp.ones((T, N), bool))
+    body = functools.partial(_tick_body, T_b=T_b, max_b=max_b,
+                             a_comp=a_comp, c_coll=c_coll, b_mem=b_mem,
+                             kvp=kvp, ovh=ovh, inflight=inflight)
+    (blg, sfree), ys_ref = jax.lax.scan(body, (jnp.zeros(N), jnp.zeros(N)),
+                                        xs)
+    assert np.allclose(state_out[0], blg, rtol=1e-4, atol=1e-2)
+    assert np.allclose(state_out[1], sfree, rtol=1e-4, atol=1e-3)
+    service, qd = ys_ref[0], ys_ref[1]
+    assert np.allclose(ys[0], service, rtol=1e-4, atol=1e-3)
+    assert np.allclose(ys[1], qd, rtol=1e-4, atol=1e-3)
+    assert np.allclose(ys[2], ys_ref[2], rtol=1e-4, atol=1e-2)   # batch
+    lat_ref = (u_wait * T_b[None, :] + qd[:, None, :]
+               + service[:, None, :] * (1.0 + 0.1 * z2a))
+    assert np.allclose(lat, lat_ref, rtol=1e-4, atol=1e-3)
+
+
+def test_device_windows_protocol_and_lazy_lanes():
+    """Device window views speak the MetricsWindow protocol: per-node
+    metrics, node_matrix, p99, clock and a positive per-event latency
+    sample (host-drawn from the same mixture on the jax path)."""
+    env = _fleet("jax", WORKLOADS["poisson"], n=3)
+    w = env.observe(120.0)
+    assert len(w) == 3
+    for v in w:
+        assert v.node_matrix.shape == (env.n_nodes, len(env.metric_names))
+        lat = v.latencies_ms
+        assert lat.ndim == 1 and lat.size > 0 and (lat > 0).all()
+        assert np.isfinite(v.p99_ms) and np.isfinite(v.mean_ms)
+        assert v.processed_events > 0
+        assert set(v.per_node) == set(env.metric_names)
+        # sampled lanes and the analytic window stats describe one mixture
+        assert abs(np.mean(lat) - v.mean_ms) / v.mean_ms < 0.05
+
+
+def test_apply_without_changed_levers_reaches_device():
+    """The documented diff-based apply_configs (no changed_levers hint) must
+    invalidate the device engine's cached lever arrays — a config change
+    that silently keeps simulating the old levers is the worst failure mode
+    a tuner env can have."""
+    env = _fleet("jax", WORKLOADS["poisson"], n=3)
+    base = float(np.mean(np.asarray(env.observe_stats(240.0)["mean_ms"])))
+    cfgs = env.current_configs()
+    for c in cfgs:
+        c["batch_interval_s"] = 30.0   # hopeless interval: latency must jump
+    env.apply_configs(cfgs)            # no changed_levers: full-diff path
+    got = float(np.mean(np.asarray(env.observe_stats(240.0)["mean_ms"])))
+    assert got > 2.0 * base, (base, got)
+
+
+def test_prewarm_is_state_transparent():
+    """prewarm compiles the shape ladder but must leave the sim exactly
+    where it was: clock, device state and the RNG draw counter restored, so
+    windows after a mid-run prewarm equal windows without it."""
+    env_a = _fleet("jax", WORKLOADS["poisson"], n=3)
+    env_b = _fleet("jax", WORKLOADS["poisson"], n=3)
+    for e in (env_a, env_b):
+        e.observe(120.0)
+    env_b._dev.prewarm(240.0, t_buckets=(24, 32))
+    assert np.array_equal(env_a.clocks(), env_b.clocks())
+    sa = env_a.observe_stats(240.0)
+    sb = env_b.observe_stats(240.0)
+    assert np.allclose(np.asarray(sa["mean_ms"]), np.asarray(sb["mean_ms"]))
+    assert np.allclose(np.asarray(sa["p99_ms"]), np.asarray(sb["p99_ms"]))
+
+
+def test_apply_copy_false_applies_aliased_in_place_changes():
+    """copy=False hands dict ownership to the env, so callers mutate the
+    SAME dicts in place between rounds (the explore hot loop). The env must
+    treat changed_levers as authoritative — the diff filter would compare a
+    dict against itself and silently drop every change — on EVERY backend."""
+    for backend in ("numpy", "jax"):
+        env = _fleet(backend, WORKLOADS["poisson"], n=3)
+        cfgs = env.current_configs()
+        env.apply_configs(cfgs, changed_levers=[()] * 3, copy=False)
+        for c in cfgs:                      # in-place: old IS cfg inside env
+            c["batch_interval_s"] = 30.0
+        env.apply_configs(cfgs, changed_levers=[("batch_interval_s",)] * 3,
+                          copy=False)
+        assert np.all(env.packed()["T_b"] == 30.0), backend
+
+
+def test_runnable_delta_matches_full_repack():
+    env = _fleet("jax", WORKLOADS["poisson"], n=5)
+    cfgs = env.current_configs()
+    changed = []
+    for i, c in enumerate(cfgs):
+        c["batch_interval_s"] = [10.0, 30.0, 2.0, 10.0, 0.5][i]
+        c["max_batch_events"] = [3e5, 100.0, 3e5, 3e5, 3e5][i]
+        changed.append(("batch_interval_s", "max_batch_events"))
+    assert np.array_equal(env.runnable_delta(cfgs, changed),
+                          env.runnable_mask(cfgs))
+
+
+def test_collect_and_episodes_on_device_backend():
+    """The full tuner pipeline runs over a jax fleet: §2.1 collect rows,
+    analysis, and one N-parallel REINFORCE update with device-side action
+    sampling."""
+    from repro.core import AutoTuner
+
+    env = _fleet("jax", WORKLOADS["poisson"], n=4)
+    tuner = AutoTuner(env, seed=0, window_s=240.0)
+    tuner.collect(8, windows_per_cluster=0)
+    assert len(tuner.matrix.metric_rows) == 8
+    assert all(np.isfinite(t) for t in tuner.matrix.target)
+    tuner.analyse()
+    cfgr = tuner.build_configurator(steps_per_episode=2, window_s=240.0)
+    stats = cfgr.run_update()
+    assert stats["episodes"] == 4
+    assert stats["steps"] == 8
+    assert np.isfinite(stats["p99_ms"])
+
+
+# ---------------------------------------------------------------- workloads
+
+ALL_WORKLOADS = [PoissonWorkload(), TrapezoidWorkload(), YahooAdsWorkload(),
+                 IoTWorkload(), SwitchingWorkload()]
+
+
+@pytest.mark.parametrize("wl", ALL_WORKLOADS, ids=lambda w: w.name)
+def test_workload_rate_vectorised_matches_scalar(wl):
+    """Batched rate()/mean_size() over a time array == per-scalar calls,
+    for every workload class; scalar in -> float out is preserved."""
+    ts = np.linspace(0.0, 7200.0, 211)
+    r = wl.rate(ts)
+    s = wl.mean_size(ts)
+    assert isinstance(r, np.ndarray) and r.shape == ts.shape
+    assert isinstance(s, np.ndarray) and s.shape == ts.shape
+    assert np.allclose(r, [wl.rate(float(t)) for t in ts], rtol=1e-12)
+    assert np.allclose(s, [wl.mean_size(float(t)) for t in ts], rtol=1e-12)
+    assert isinstance(wl.rate(123.0), float)
+    assert isinstance(wl.mean_size(123.0), float)
+
+
+@pytest.mark.parametrize("wl", ALL_WORKLOADS, ids=lambda w: w.name)
+def test_workload_rate_traces_under_jit(wl):
+    """rate()/mean_size() accept jnp arrays and trace under jax.jit — the
+    device engine evaluates whole (ticks,) grids in one call."""
+    import jax
+    import jax.numpy as jnp
+
+    ts = np.linspace(0.0, 7200.0, 64)
+    rj = np.asarray(jax.jit(wl.rate)(jnp.asarray(ts, jnp.float32)))
+    sj = np.asarray(jax.jit(wl.mean_size)(jnp.asarray(ts, jnp.float32)))
+    assert np.allclose(rj, [wl.rate(float(t)) for t in ts], rtol=2e-4)
+    assert np.allclose(sj, [wl.mean_size(float(t)) for t in ts], rtol=2e-4)
