@@ -1,31 +1,53 @@
 """Fleet quickstart: the paper's 80-cluster offline sweep + N-parallel
 REINFORCE episodes, batched in a single FleetEnv.
 
-    PYTHONPATH=src python examples/fleet_quickstart.py
+    PYTHONPATH=src python examples/fleet_quickstart.py              # numpy, 16
+    PYTHONPATH=src python examples/fleet_quickstart.py jax 256      # device
 
-1. Build a 16-cluster fleet over the heterogeneous workload roster
-   (steady Poisson, diurnal ads, bursty IoT, regime-switching — paper §4.4).
-2. Collect training windows fleet-wide: every cluster perturbs its own
-   random lever per window, all clusters advance in one batched call (§2.1).
+1. Build an N-cluster fleet (default 16) over the heterogeneous workload
+   roster — or, on a device backend, a Poisson fleet so the whole training
+   loop is device-resident (DESIGN.md §10 gates the fused loop to
+   constant-rate fleets).
+2. Collect training windows fleet-wide through the integerised §2.1 sweep:
+   every cluster perturbs its own random lever per window, all clusters
+   advance in one batched call.
 3. Select metrics (FA + k-means, §2.2) and rank levers (Lasso path, §2.3).
-4. Run the configurator with 16 parallel REINFORCE episodes per update —
-   Algorithm 1's episode batch, one episode per cluster (§2.4).
+4. Run the configurator with N parallel REINFORCE episodes per update —
+   Algorithm 1's episode batch, one episode per cluster (§2.4). On
+   ``backend="jax"`` each outer iteration executes as TWO jitted device
+   programs (the fused episode scan + the REINFORCE update) and the example
+   reports the training-loop windows/s that buys.
 """
+import sys
+import time
+
 import numpy as np
 
 from repro.core import AutoTuner
 from repro.engine import FleetEnv
 
-N = 16
-# mixed arrival processes with comparable rate scales: pooled Lasso treats
-# cluster identity as unmodelled variance, so wildly different rates (e.g.
-# the paper's λ2=100k ev/s next to 1k ev/s ads) would swamp the lever signal
-env = FleetEnv.heterogeneous(
-    N, seed=0, mix=("poisson_low", "trapezoid", "yahoo_ads", "iot", "switching"))
+backend = sys.argv[1] if len(sys.argv) > 1 else "numpy"
+N = int(sys.argv[2]) if len(sys.argv) > 2 else (256 if backend != "numpy" else 16)
+
+if backend == "numpy":
+    # mixed arrival processes with comparable rate scales: pooled Lasso
+    # treats cluster identity as unmodelled variance, so wildly different
+    # rates (e.g. the paper's λ2=100k ev/s next to 1k ev/s ads) would swamp
+    # the lever signal
+    env = FleetEnv.heterogeneous(
+        N, seed=0,
+        mix=("poisson_low", "trapezoid", "yahoo_ads", "iot", "switching"))
+else:
+    # constant-rate fleet: the §10 fused training loop needs device-constant
+    # arrival grids (time-varying fleets fall back to the per-step host loop)
+    from repro.data.workloads import PoissonWorkload
+
+    env = FleetEnv([PoissonWorkload(10_000 + 500 * (i % 7), 0.5)
+                    for i in range(N)], seeds=list(range(N)), backend=backend)
 tuner = AutoTuner(env, seed=0, window_s=240.0, top_levers=8)
 
-print(f"collecting training windows across {N} clusters ...")
-tuner.collect(1200, windows_per_cluster=6)  # 75 fleet rounds
+print(f"collecting training windows across {N} clusters ({backend}) ...")
+tuner.collect(1200, windows_per_cluster=6)  # integerised §2.1 sweep
 metrics, levers = tuner.analyse()
 print(f"selected metrics ({tuner.selection.reduction:.0%} reduction): {metrics}")
 print(f"ranked levers: {levers}")
@@ -36,12 +58,17 @@ print(f"\ndefault config p99 (fleet mean) = {np.mean(base):.0f} ms")
 
 cfgr = tuner.build_configurator(steps_per_episode=5, window_s=240.0,
                                 f_exploit=0.8)
+reason = cfgr.device_loop_reason()
+print("fused device loop (§10): "
+      + ("ACTIVE" if reason is None else f"off ({reason})"))
 for update in range(6):
+    t0 = time.perf_counter()
     stats = cfgr.run_update()  # N parallel episodes -> one policy update
+    dt = time.perf_counter() - t0
     recent = [r.p99_ms for r in cfgr.history[-5 * N:]]
     print(f"update {update}: p99 mean {np.mean(recent):.0f} ms, "
           f"min {np.min(recent):.0f} ms ({stats['episodes']} episodes, "
-          f"{stats['steps']} steps)")
+          f"{stats['steps']} steps, {stats['steps'] / dt:.0f} win/s)")
 
 best = min(cfgr.history, key=lambda r: r.p99_ms)
 print(f"\nbest p99 {best.p99_ms:.0f} ms "

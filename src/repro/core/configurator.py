@@ -17,6 +17,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Optional, Protocol, Sequence
 
+import jax
 import numpy as np
 
 from repro.core.discretize import LeverDiscretiser, LeverSpec
@@ -106,13 +107,18 @@ class EpisodeResult:
 def reward_from_latency(latencies_ms: np.ndarray, mode: str = "neg_mean") -> float:
     """Paper's delay-dependent reward. The text writes sum(-1/T_e) but states
     the cumulative reward equals negative summed latency (gamma=1); we default
-    to -mean(T) and keep the literal form as an option (DESIGN.md §1)."""
+    to -mean(T) and keep the literal form as an option (DESIGN.md §1).
+    ``neg_p99`` targets the tail SLO directly; on device backends both it and
+    ``neg_mean`` read the window's device-computed statistic instead of
+    materialising the latency sample on host."""
     lat = np.asarray(latencies_ms, float)
     lat = lat[np.isfinite(lat) & (lat > 0)]
     if lat.size == 0:
         return -1e4  # failed window: strongly negative
     if mode == "neg_mean":
         return float(-lat.mean() / 1000.0)
+    if mode == "neg_p99":
+        return float(-np.percentile(lat, 99.0) / 1000.0)
     if mode == "neg_sum":
         return float(-lat.sum() / 1000.0)
     if mode == "neg_inv":  # the literal Σ -1/T form from the paper text
@@ -121,7 +127,12 @@ def reward_from_latency(latencies_ms: np.ndarray, mode: str = "neg_mean") -> flo
 
 
 class Configurator:
-    """Paper §3: runs tuning phases made of episodes of N configuration steps."""
+    """Paper §3: runs tuning phases made of episodes of N configuration steps.
+
+    ``device_loop`` selects the §10 fused training loop over a device-backed
+    fleet: ``"auto"`` (default) uses it whenever ``device_loop_reason()``
+    is None, ``"on"`` fails loudly when it can't, ``"off"`` always runs the
+    per-step host loop."""
 
     def __init__(
         self,
@@ -138,9 +149,13 @@ class Configurator:
         reward_mode: str = "neg_mean",
         seed: int = 0,
         bin_kw: Optional[dict] = None,
+        device_loop: str = "auto",
     ):
+        assert device_loop in ("auto", "on", "off"), device_loop
         self.env = env
         self.fleet = is_fleet_env(env)
+        self.device_loop = device_loop
+        self._runner = None            # lazy DeviceEpisodeRunner (§10)
         self.levers = [l for l in ranked_levers if l in {s.name for s in env.lever_specs}]
         assert self.levers, "no ranked lever matches the environment's lever set"
         self.disc = LeverDiscretiser(list(env.lever_specs), seed=seed,
@@ -158,6 +173,11 @@ class Configurator:
         self.history: list[StepRecord] = []
         self._last_window: Optional[MetricsWindow] = None
         self._last_fleet_windows: Optional[list] = None
+        try:  # selected-metric columns in registry order (dense encodes)
+            self._sel_cols = [list(env.metric_names).index(m)
+                              for m in self.hspec.metric_names]
+        except ValueError:
+            self._sel_cols = None
 
     # -- state encoding -------------------------------------------------------
     def _lever_fracs(self, config: dict) -> dict[str, float]:
@@ -175,6 +195,21 @@ class Configurator:
 
     def _encode(self, window: MetricsWindow, config: dict) -> np.ndarray:
         return self.encoder.encode(window.per_node, self._lever_fracs(config))
+
+    def _encode_fleet(self, windows, configs) -> np.ndarray:
+        """(N, state_dim) fleet state batch with ONE running-range update for
+        the whole fleet (``HeatmapEncoder.encode_fleet``) — the normalisation
+        the fused device program uses, so host-loop and device-loop policies
+        see identical states. Falls back to the per-cluster path when a
+        window lacks the dense node matrix."""
+        mats = [getattr(w, "node_matrix", None) for w in windows]
+        if self._sel_cols is None or any(m is None for m in mats):
+            return np.stack([self._encode(w, c)
+                             for w, c in zip(windows, configs)])
+        raw = np.stack(mats)[:, :, self._sel_cols]       # (N, nodes, M_sel)
+        fracs = np.array([[self._lever_fracs(c)[l] for l in self.levers]
+                          for c in configs])
+        return self.encoder.encode_fleet(raw, fracs)
 
     # -- the loop ---------------------------------------------------------------
     def run_episode(self, *, explore: bool = True) -> tuple[Trajectory, list[StepRecord]]:
@@ -232,15 +267,19 @@ class Configurator:
         configs = env.current_configs()
         windows = self._last_fleet_windows or env.observe(self.window_s)
         for _ in range(self.steps_per_episode):
-            states = np.stack([self._encode(w, c)
-                               for w, c in zip(windows, configs)])
+            states = self._encode_fleet(windows, configs)
             t0 = time.perf_counter()
             if device:
-                actions = np.asarray(self.agent.act_batch_device(
+                # block before reading the clock: jax dispatch is async, so
+                # an unsynchronised stop would under-report generation time
+                # in the Fig-6 phase breakdown
+                acts = jax.block_until_ready(self.agent.act_batch_device(
                     states, explore=explore))
+                gen_s = (time.perf_counter() - t0) / N
+                actions = np.asarray(acts)
             else:
                 actions = self.agent.act_batch(states, explore=explore)
-            gen_s = (time.perf_counter() - t0) / N
+                gen_s = (time.perf_counter() - t0) / N
             decoded = [self.agent.action_decode(int(a)) for a in actions]
             new_configs = [self.disc.apply(c, lever, direction)
                            for c, (lever, direction) in zip(configs, decoded)]
@@ -249,8 +288,13 @@ class Configurator:
             stabs = env.stabilisation_times()
             # paper §4.2: reward measured on the window after stabilisation
             windows = env.observe(self.window_s, preroll_s=stabs)
-            if device and self.reward_mode == "neg_mean":
-                rewards = [-w.mean_ms / 1000.0 for w in windows]
+            if device and self.reward_mode in ("neg_mean", "neg_p99"):
+                # the window's device-computed statistic — no per-cluster
+                # latency sample ever materialises on host
+                if self.reward_mode == "neg_mean":
+                    rewards = [-w.mean_ms / 1000.0 for w in windows]
+                else:
+                    rewards = [-w.p99_ms / 1000.0 for w in windows]
             else:
                 rewards = [reward_from_latency(w.latencies_ms,
                                                self.reward_mode)
@@ -272,10 +316,53 @@ class Configurator:
         self._last_fleet_windows = windows
         return trajs, [r for cluster in records for r in cluster]
 
+    # -- the fused device loop (DESIGN.md §10) ----------------------------------
+    def _device_runner(self):
+        if self._runner is None:
+            from repro.core.device_loop import DeviceEpisodeRunner
+
+            self._runner = DeviceEpisodeRunner(self)
+        return self._runner
+
+    def device_loop_reason(self) -> Optional[str]:
+        """None when the fused device training loop will run; otherwise why
+        the per-step host loop is used instead."""
+        if self.device_loop == "off":
+            return "device_loop='off'"
+        if not self.fleet:
+            return "serial TuningEnv (the fused loop is fleet-shaped)"
+        return self._device_runner().supported()
+
+    def run_fleet_episodes_device(self, *, explore: bool = True,
+                                  greedy: bool = False):
+        """The whole Algorithm-1 episode batch as ONE jitted device program
+        (repro.core.device_loop): encode → act → integerised lever-apply →
+        loading/stabilisation → fused observation window → reward, scanned
+        over the episode steps with the queueing state carried through the
+        recurrence. Returns ``(batch, records)``: ``batch`` holds the
+        device-resident (N, S) states/actions/rewards ready for
+        ``ReinforceAgent.update_batch`` (the outer iteration's only other
+        device program); ``records`` are host ``StepRecord``s materialised
+        once per batch. ``explore=False`` (or ``greedy=True``) takes the
+        deterministic argmax action — exactly replayable against the host
+        oracle (tests/test_device_loop.py)."""
+        reason = self.device_loop_reason()
+        if reason is not None:
+            raise RuntimeError(f"fused device loop unavailable: {reason}")
+        return self._device_runner().run(explore=explore, greedy=greedy)
+
     def run_update(self) -> dict:
         """One Algorithm-1 outer iteration: N episodes then a policy update.
         Against a FleetTuningEnv the N episodes run in parallel, one per
-        cluster; serially otherwise."""
+        cluster (as ≤2 fused device programs per pass when the §10 loop is
+        available); serially otherwise."""
+        device = self.fleet and self.device_loop != "off" \
+            and self.device_loop_reason() is None
+        if self.device_loop == "on" and not device:
+            raise RuntimeError(
+                f"device_loop='on' but: {self.device_loop_reason()}")
+        if device:
+            return self._run_update_device()
         if self.fleet:
             # small fleets still need a real episode batch: Algorithm 1's
             # per-step baseline is the across-episode mean, which degenerates
@@ -296,6 +383,32 @@ class Configurator:
         t0 = time.perf_counter()
         stats = self.agent.update(trajs)
         upd_s = time.perf_counter() - t0
+        return self._finish_update(stats, all_records, upd_s)
+
+    def _run_update_device(self) -> dict:
+        """§10 outer iteration: one fused episode program per pass + ONE
+        jitted update — the (N, T) episode batch never bounces to host."""
+        import jax.numpy as jnp
+
+        passes = max(1, -(-self.episodes_per_update // self.env.n_clusters))
+        batches, all_records = [], []
+        for _ in range(passes):
+            b, r = self.run_fleet_episodes_device()
+            batches.append(b)
+            all_records.extend(r)
+        t0 = time.perf_counter()
+        if len(batches) == 1:
+            b = batches[0]
+        else:  # stack passes along the episode axis, still on device
+            b = {k: jnp.concatenate([x[k] for x in batches], axis=0)
+                 for k in batches[0]}
+        stats = self.agent.update_batch(b["states"], b["actions"],
+                                        b["rewards"])
+        upd_s = time.perf_counter() - t0
+        return self._finish_update(stats, all_records, upd_s)
+
+    def _finish_update(self, stats: dict, all_records: list,
+                       upd_s: float) -> dict:
         if all_records:
             all_records[-1].phases["update_s"] = upd_s
         self.history.extend(all_records)

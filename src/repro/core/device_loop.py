@@ -1,0 +1,414 @@
+"""Device-resident Algorithm 1: the fused episode batch (DESIGN.md §10).
+
+PR 2 put the *simulator* on device; the online loop still ran as a per-step
+Python loop — encode states cluster-by-cluster on host, decode actions in
+Python, apply levers through the dict-based discretiser, ship ``(N, T)``
+arrays back for the REINFORCE update. At N=1024 that control loop, not the
+engine, is the bottleneck. This module fuses ONE full Algorithm-1 episode
+batch (S steps × N parallel episodes) into a single jitted device program:
+
+    for each step (lax.scan over S):
+      encode    heat-map states from the carried per-node window metrics +
+                integerised lever fractions (fleet-batch running-range
+                normalisation carried through the scan)
+      act       ``repro.core.policy._sample_actions`` (f-gated sampling, or
+                argmax when greedy) — same params, no host round-trip
+      apply     integerised lever move (``DeviceLeverTable`` index
+                arithmetic) + packed-coefficient gather, loading-time
+                buffering, reconfiguration accounting
+      stabilise paper-§4.2 wait from the on-device service-term delta
+      observe   ``repro.engine.fleet_jax.build_step_window`` — the
+                scan-composable window program (preroll + window + selected
+                metric emission) carrying backlog/server-occupancy/clock
+      reward    the window's device-computed mean (``neg_mean``) or p99
+                (``neg_p99``); no latency sample ever materialises
+
+The program returns the full ``(N, S)`` states/actions/rewards batch (for
+``ReinforceAgent.update_batch`` — the second and last device program of an
+outer iteration) plus the per-step bookkeeping (lever, bin, load, stab, p99)
+from which ``StepRecord``s are materialised ONCE per episode batch.
+
+Division of labour with the host oracle (DESIGN.md §10): the dict-based
+``LeverDiscretiser`` stays authoritative for §2.4.1 *adaptation* — after
+each fused batch the chosen (lever, bin) assignments are replayed into its
+``DynamicBins`` host-side, and the next batch re-packs the table from the
+adapted binning. Inside a batch the binning is frozen.
+
+Hard gates (``DeviceEpisodeRunner.supported``): jax backend (the pallas
+window kernel is not scan-composable), constant-rate workloads (arrival
+grids must be device constants — time-varying fleets fall back to the
+per-step host loop), reward modes with a device-computed statistic.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.discretize import DeviceLeverTable
+from repro.core.heatmap import node_grid_shape
+from repro.core.policy import _sample_actions
+from repro.engine.simcluster import (_LEVER_TO_PACKED, _PACKERS,
+                                     service_terms_arrays)
+
+#: static-bundle -> times the episode program was traced; the §10 no-retrace
+#: test pins that re-running outer iterations never grows these.
+TRACE_COUNTS: dict = {}
+
+#: padded tick budget when ``batch_interval_s`` is in the action set (the
+#: episode can walk it low, shrinking the tick length mid-batch); clusters
+#: that walk it below (window+stab)/TICK_BUDGET see a truncated window —
+#: the documented §10 deviation.
+TICK_BUDGET = 192
+
+
+#: padded bin-table ladder: §2.4.1 splits double a lever's bin count between
+#: episode batches, which would change the packed-table shapes (and recompile
+#: the episode program) every batch — tables are padded up this ladder
+#: instead, so adaptation only recompiles on a ladder crossing. Indices are
+#: clipped to ``n_valid`` so padded slots are unreachable.
+_BIN_BUCKETS = (16, 32, 64, 128, 256, 512)
+
+
+def build_packed_tables(table: DeviceLeverTable,
+                        pad_to: int = 0) -> list[tuple]:
+    """Compile the service-model lever extractors (``_PACKERS``) into per-bin
+    coefficient tables: entry ``tab[b]`` is the packed value of the source
+    lever's bin b, so the device config -> ``cc`` arrays is one gather per
+    packed key. Each packed key reads exactly one lever (the
+    ``_LEVER_TO_PACKED`` contract), which is what makes this table-izable.
+    ``pad_to`` edge-pads every table to one shape (see ``_BIN_BUCKETS``)."""
+    out = []
+    for lever, keys in _LEVER_TO_PACKED.items():
+        li = table.index_of[lever]
+        vals = [table.value_of(li, b) for b in range(int(table.n_valid[li]))]
+        for key in keys:
+            tab = np.array([_PACKERS[key]({lever: v}) for v in vals],
+                           np.float32)
+            if pad_to > len(tab):
+                tab = np.pad(tab, (0, pad_to - len(tab)), mode="edge")
+            out.append((key, li, tab))
+    return out
+
+
+class DeviceEpisodeRunner:
+    """Owns the fused episode program for one ``Configurator`` (lazy-built,
+    cached per static shape bundle) and the host-side handoff around it."""
+
+    def __init__(self, cfgr):
+        self.cfgr = cfgr
+        self.env = cfgr.env
+        self._programs: dict = {}
+        self._per_node = None          # device (N, nodes, M_sel) carry
+        self._clock_mark: Optional[np.ndarray] = None
+        self._config_idx: Optional[np.ndarray] = None
+        self._table: Optional[DeviceLeverTable] = None
+        self._bins_sig = None
+        self._hw_T = 0
+        self._hw_B = 0
+        self.last_wall_s = 0.0
+
+    # ------------------------------------------------------------------ gates
+    def supported(self) -> Optional[str]:
+        """None when the fused loop can run; otherwise the reason for the
+        per-step host-loop fallback."""
+        env = self.env
+        if getattr(env, "backend", "numpy") != "jax":
+            return f"backend={getattr(env, 'backend', 'numpy')} (needs jax)"
+        if not all(getattr(w, "constant", False) for w in env.workloads):
+            return "time-varying workloads (arrival grids must be device consts)"
+        if self.cfgr.reward_mode not in ("neg_mean", "neg_p99"):
+            return f"reward_mode={self.cfgr.reward_mode} has no device statistic"
+        return None
+
+    # -------------------------------------------------------------- geometry
+    def _tick_budget(self) -> tuple[int, int]:
+        env, cfgr = self.env, self.cfgr
+        packed = env.packed()
+        T_b = packed["T_b"]
+        need = int(np.max(np.round(cfgr.window_s / T_b)
+                          + np.ceil(180.0 / T_b))) + 1
+        from repro.engine.fleet_jax import _bucket
+        if "batch_interval_s" in cfgr.levers:
+            # the policy can walk the tick length mid-batch: CLAMP the scan
+            # to TICK_BUDGET (clusters past it see truncated windows, §10)
+            # instead of chasing ever-smaller T_b with ever-longer programs
+            need = TICK_BUDGET
+        T = max(_bucket(need), self._hw_T)
+        self._hw_T = T
+        E = _bucket(int(np.ceil(cfgr.window_s / 60.0)) + 1,
+                    (1, 2, 4, 6, 8, 12, 16, 24, 32))
+        return T, E
+
+    # -------------------------------------------------------------- programs
+    def _program(self, skey: tuple, consts: dict):
+        if skey in self._programs:
+            return self._programs[skey]
+        (S, T, E, sel_cols, exploit, greedy, reward_mode, win_s) = skey
+        from repro.engine.fleet_jax import build_step_window
+
+        env = self.env
+        spec = env.spec
+        step_window = build_step_window(env, sel_cols, T, E)
+        mc_dev = env._dev._mc_dev
+        nodes = env.n_nodes
+        r, c = node_grid_shape(nodes)
+        rc = r * c
+        M_sel = len(sel_cols)
+        cc_pairs = consts["cc_pairs"]            # [(key, lever_idx)] static
+        ranked_g = consts["ranked_g"]            # (n_ranked,) global lever idx
+
+        def program(params, key, config_idx, backlog, sfree, clock,
+                    last_service, reconfigs, lo, hi, per_node, rate, size, f,
+                    tabs, kind_code, n_valid, reboot_f, rejit_f):
+            TRACE_COUNTS[skey] = TRACE_COUNTS.get(skey, 0) + 1
+            N = config_idx.shape[0]
+            rows = jnp.arange(N)
+            ranked = jnp.asarray(ranked_g, jnp.int32)
+            frac_den = jnp.maximum(n_valid[ranked].astype(jnp.float32) - 1.0,
+                                   1.0)
+
+            def step(carry, t):
+                (config_idx, backlog, sfree, clock, last_service, reconfigs,
+                 lo, hi, per_node) = carry
+                k = jax.random.fold_in(key, t)
+                k_act, k_load, k_win = jax.random.split(k, 3)
+
+                # ---- encode: fleet-batch running range + heat-map grids ----
+                raw = jnp.transpose(per_node, (0, 2, 1))   # (N, M_sel, nodes)
+                lo = jnp.minimum(lo, raw.min(axis=(0, 2)))
+                hi = jnp.maximum(hi, raw.max(axis=(0, 2)))
+                span = jnp.where(hi > lo, hi - lo, 1.0)
+                lo_eff = jnp.where(jnp.isfinite(lo), lo, 0.0)
+                normed = jnp.clip(
+                    jnp.nan_to_num((raw - lo_eff[None, :, None])
+                                   / span[None, :, None]), 0.0, 1.0)
+                grids = jnp.pad(normed, ((0, 0), (0, 0), (0, rc - nodes)))
+                fracs = config_idx[:, ranked].astype(jnp.float32) / frac_den
+                states = jnp.concatenate(
+                    [grids.reshape(N, M_sel * rc), fracs],
+                    axis=1).astype(jnp.float32)
+
+                # ---- act (policy forward + f-gated sampling / argmax) ----
+                a = _sample_actions(params, states, k_act, f, exploit, greedy)
+                direction = 1 - 2 * (a % 2).astype(jnp.int32)
+                l_idx = ranked[a // 2]
+
+                # ---- integerised lever apply: the ONE implementation the
+                # host sweep uses and test_device_table pins, traced with
+                # the device copies of the kind/validity arrays ----
+                cur = config_idx[rows, l_idx]
+                new_bin = self._table.step_index(
+                    cur, l_idx, direction, xp=jnp, n_valid=n_valid,
+                    kind_code=kind_code)
+                config_idx = config_idx.at[rows, l_idx].set(new_bin)
+                cc = {kk: tabs[kk][config_idx[:, li]] for kk, li in cc_pairs}
+
+                # ---- loading (Kafka buffers arrivals, paper §4.2) ----
+                z = jax.random.normal(k_load, (N,))
+                load_s = (10.0 + 60.0 * reboot_f[l_idx]
+                          + 8.0 * rejit_f[l_idx]) \
+                    * (1.0 + spec.noise * jnp.abs(z))
+                backlog = backlog + rate * load_s
+                clock = clock + load_s
+                sfree = jnp.maximum(sfree - load_s, 0.0)
+                reconfigs = reconfigs + 1.0
+
+                # ---- stabilisation wait from the service-term delta ----
+                s_new = service_terms_arrays(cc, mc_dev, spec, env.chips,
+                                             rate, size, xp=jnp)["service"]
+                prev = jnp.where(last_service < 0.0, s_new, last_service)
+                rel = jnp.abs(s_new - prev) / jnp.maximum(prev, 1e-6)
+                stab = jnp.clip(30.0 + 240.0 * rel, 30.0, 180.0)
+                last_service = s_new
+
+                # ---- fused preroll + observation window + reward ----
+                (backlog, sfree, clock), stats = step_window(
+                    k_win, backlog, sfree, clock, cc, rate, size, stab,
+                    reconfigs, win_s)
+                per_node = stats["per_node"]
+                if reward_mode == "neg_p99":
+                    reward = -stats["p99_ms"] / 1000.0
+                else:
+                    reward = -stats["mean_ms"] / 1000.0
+
+                out = {"states": states, "actions": a, "rewards": reward,
+                       "p99_ms": stats["p99_ms"], "clock_s": clock,
+                       "load_s": load_s, "stab_s": stab,
+                       "lever": l_idx, "bin": new_bin}
+                carry = (config_idx, backlog, sfree, clock, last_service,
+                         reconfigs, lo, hi, per_node)
+                return carry, out
+
+            carry0 = (config_idx, backlog, sfree, clock, last_service,
+                      reconfigs, lo, hi, per_node)
+            carry, outs = jax.lax.scan(step, carry0, jnp.arange(S))
+            # (S, N) -> (N, S): the episode axis leads, ready for the update
+            outs = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), outs)
+            return carry, outs
+
+        prog = jax.jit(program)
+        self._programs[skey] = prog
+        return prog
+
+    # ------------------------------------------------------------------- run
+    def run(self, *, explore: bool = True, greedy: bool = False):
+        """One fused episode batch. Returns ``(batch, records)`` where
+        ``batch`` holds the device-resident (N, S) states/actions/rewards
+        for ``ReinforceAgent.update_batch`` and ``records`` are the
+        host-materialised ``StepRecord``s (cluster-major, matching the
+        per-step host loop's ordering)."""
+        from repro.core.configurator import StepRecord
+
+        cfgr, env = self.cfgr, self.env
+        dev = env._dev
+        N = env.n_clusters
+        S = cfgr.steps_per_episode
+
+        # re-pack the integerised table from the (possibly adapted) oracle,
+        # padded up the bin ladder so between-batch splits keep the shapes
+        # (and the compiled program) stable
+        table = DeviceLeverTable.from_discretiser(cfgr.disc)
+        self._table = table
+        from repro.engine.fleet_jax import _bucket
+        B_pad = max(_bucket(table.max_bins, _BIN_BUCKETS), self._hw_B)
+        self._hw_B = B_pad
+        packed_tabs = build_packed_tables(table, pad_to=B_pad)
+        cc_pairs = tuple((k, li) for k, li, _ in packed_tabs)
+        tabs = {k: jnp.asarray(tab) for k, li, tab in packed_tabs}
+        kind_code = jnp.asarray(table.kind_code)
+        n_valid = jnp.asarray(table.n_valid)
+        reboot_f = jnp.asarray([1.0 if s.reboot else 0.0
+                                for s in table.specs], jnp.float32)
+        rejit_f = jnp.asarray(
+            [1.0 if s.group in ("kernel", "memory", "parallel") else 0.0
+             for s in table.specs], jnp.float32)
+        ranked_g = tuple(table.index_of[n] for n in cfgr.levers)
+
+        configs = env.current_configs()
+        # re-indexing N configs through 109 levers costs ~0.1 s at N=1024;
+        # between consecutive fused batches the configs are exactly what the
+        # previous batch wrote, so reuse its final index array unless the
+        # binning adapted (exact edge-array signature — counts or summary
+        # stats could alias after net-zero split+merge sequences) or someone
+        # else stepped the env (clock)
+        sig = tuple(e.tobytes() if e is not None else b""
+                    for e in table._edges)
+        if (self._config_idx is not None and sig == self._bins_sig
+                and self._clock_mark is not None
+                and np.array_equal(self._clock_mark, env.clock)):
+            config_idx = jnp.asarray(self._config_idx)
+        else:
+            config_idx = jnp.asarray(table.index_configs(configs))
+        self._bins_sig = sig
+
+        sel_cols = tuple(env.metric_names.index(m)
+                         for m in cfgr.hspec.metric_names)
+        # carried per-node metrics: reuse the previous batch's final window
+        # unless someone stepped the env in between (clock moved)
+        if (self._per_node is None or self._clock_mark is None
+                or not np.array_equal(self._clock_mark, env.clock)):
+            stats = env.observe_stats(cfgr.window_s)
+            self._per_node = stats["per_node"][:, :, np.asarray(sel_cols)]
+        per_node = self._per_node
+
+        backlog, sfree, clock = dev.loop_state()
+        last_service = np.where(np.isnan(env.last_service), -1.0,
+                                env.last_service)
+        rate_np, size_np = env._rates_now()
+        rng_range = cfgr.encoder._range
+
+        T, E = self._tick_budget()
+        exploit = cfgr.agent.exploit_ready(explore=explore)
+        greedy = bool(greedy or not explore)
+        skey = (S, T, E, sel_cols, exploit, greedy, cfgr.reward_mode,
+                float(cfgr.window_s))
+        prog = self._program(skey, {"cc_pairs": cc_pairs,
+                                    "ranked_g": ranked_g})
+
+        t0 = time.perf_counter()
+        carry, outs = prog(
+            cfgr.agent.params, dev._next_key(), config_idx,
+            backlog, sfree, clock,
+            jnp.asarray(last_service, jnp.float32),
+            jnp.asarray(env.reconfigs, jnp.float32),
+            jnp.asarray(rng_range.lo, jnp.float32),
+            jnp.asarray(rng_range.hi, jnp.float32),
+            per_node, jnp.asarray(rate_np, jnp.float32),
+            jnp.asarray(size_np, jnp.float32), jnp.float32(cfgr.agent.f),
+            tabs, kind_code, n_valid, reboot_f, rejit_f)
+        outs = jax.block_until_ready(outs)
+        self.last_wall_s = time.perf_counter() - t0
+
+        # ---- hand the queueing state back to the engine -------------------
+        (config_idx_f, backlog_f, sfree_f, clock_f, last_service_f,
+         reconfigs_f, lo_f, hi_f, per_node_f) = carry
+        dev.adopt_loop_state(backlog_f, sfree_f, clock_f)
+        env.reconfigs[:] = np.asarray(reconfigs_f, np.int64)
+        env.last_service[:] = np.asarray(last_service_f, np.float64)
+        rng_range.lo = np.asarray(lo_f, np.float64)
+        rng_range.hi = np.asarray(hi_f, np.float64)
+        self._per_node = per_node_f
+        self._clock_mark = env.clock.copy()
+
+        # ---- materialise StepRecords ONCE per episode batch ---------------
+        lever = np.asarray(outs["lever"])            # (N, S)
+        new_bin = np.asarray(outs["bin"])
+        rewards = np.asarray(outs["rewards"])
+        p99 = np.asarray(outs["p99_ms"])
+        clock_s = np.asarray(outs["clock_s"])
+        load_s = np.asarray(outs["load_s"])
+        stab_s = np.asarray(outs["stab_s"])
+        actions = np.asarray(outs["actions"])
+        gen_s = self.last_wall_s / max(S * N, 1)
+        # the action set only reaches a few levers × bins: memoise the decode
+        # instead of 5k+ value_of calls per batch
+        val_cache: dict = {}
+        names = table.names
+        directions = 1 - 2 * (actions % 2)
+        records = []
+        final_configs = []
+        for i in range(N):
+            cfg = configs[i]
+            for t in range(S):
+                li = int(lever[i, t])
+                b = int(new_bin[i, t])
+                val = val_cache.get((li, b))
+                if val is None:
+                    val = val_cache[(li, b)] = table.value_of(li, b)
+                cfg = dict(cfg)
+                cfg[names[li]] = val
+                records.append(StepRecord(
+                    lever=names[li], direction=int(directions[i, t]),
+                    config=cfg, reward=float(rewards[i, t]),
+                    p99_ms=float(p99[i, t]), clock_s=float(clock_s[i, t]),
+                    phases={"generation_s": gen_s,
+                            "loading_s": float(load_s[i, t]),
+                            "stabilisation_s": float(stab_s[i, t]),
+                            "update_s": 0.0}))
+            final_configs.append(dict(cfg))
+        env.configs = final_configs
+        env.invalidate()
+        self._config_idx = np.asarray(config_idx_f)
+        cfgr._last_fleet_windows = None   # host-loop cache is stale now
+
+        # ---- replay the chosen bins into the adaptive oracle ---------------
+        # (paper-§2.4.1 split/extend/merge runs host-side BETWEEN batches;
+        # the next run() re-packs the table from the adapted binning).
+        # Step-major, like the host loop visits assignments.
+        bins = cfgr.disc.bins
+        dyn_of = [bins.get(nm) for nm in names]
+        lever_sm, bin_sm = lever.T, new_bin.T          # (S, N)
+        for t in range(S):
+            lt, bt = lever_sm[t], bin_sm[t]
+            for i in range(N):
+                dyn = dyn_of[lt[i]]
+                if dyn is not None:
+                    dyn.record(bt[i])
+
+        batch = {"states": outs["states"], "actions": outs["actions"],
+                 "rewards": outs["rewards"]}
+        return batch, records

@@ -15,6 +15,15 @@ configurator uses it:
   environments'; the value is clamped to the bin.
 
 Integer and categorical levers pass through with rounding / identity.
+
+``DeviceLeverTable`` (DESIGN.md §10) is the integerised, array-over-clusters
+compilation of a ``LeverDiscretiser``: a fleet's configs become one
+``(N, n_levers)`` int array of bin / category indices, and moving a lever is
+pure index arithmetic — host-vectorised (``apply_host``) for the §2.1 random
+sweep, or traced into the fused device training loop
+(``repro.core.device_loop``). The dict-based ``LeverDiscretiser`` stays the
+adaptive oracle; dynamic split/merge happens host-side between episode
+batches, after which the table is re-packed (``from_discretiser``).
 """
 from __future__ import annotations
 
@@ -122,7 +131,7 @@ class DynamicBins:
 
     def value(self, b: int, *, jitter: bool = True) -> float:
         """Bin centre + ridge jitter, clamped to the bin; int levers round."""
-        b = int(np.clip(b, 0, self.n_bins - 1))
+        b = min(max(int(b), 0), self.n_bins - 1)
         lo_e, hi_e = self._edges[b], self._edges[b + 1]
         mid = 0.5 * (lo_e + hi_e)
         if jitter and self.ridge_frac:
@@ -136,7 +145,9 @@ class DynamicBins:
     # -- adaptation ----------------------------------------------------------
     def record(self, b: int) -> None:
         """Account one assignment of bin b and adapt (paper's three rules)."""
-        b = int(np.clip(b, 0, self.n_bins - 1))
+        # plain-int clamp: this runs once per fleet step in the §10 replay
+        # (N·S calls per episode batch), where np.clip dominates the profile
+        b = min(max(int(b), 0), self.n_bins - 1)
         self._hits[b] += 1
         self._since_used += 1
         self._since_used[b] = 0
@@ -241,4 +252,169 @@ class LeverDiscretiser:
         dyn.record(b2)
         b2 = min(b2, dyn.n_bins - 1)  # bins may have split/merged in record()
         new[name] = dyn.value(b2, jitter=jitter)
+        return new
+
+
+# --------------------------------------------------------------------------
+# Integerised lever table (DESIGN.md §10)
+# --------------------------------------------------------------------------
+
+#: kind codes for the index-arithmetic apply: continuous levers CLIP at their
+#: current bin range (hard bounds are baked into the bins themselves), choice
+#: levers WRAP through their category cycle, bools TOGGLE regardless of
+#: direction — exactly LeverDiscretiser.apply's three branches.
+KIND_CLIP, KIND_WRAP, KIND_TOGGLE = 0, 1, 2
+
+
+class DeviceLeverTable:
+    """A ``LeverDiscretiser`` compiled to flat arrays over (lever, bin).
+
+    Configs are ``(N, L)`` int arrays: entry ``[n, l]`` is cluster n's bin /
+    category index for lever l (levers in ``self.names`` order — the
+    discretiser's spec order). The table is a *frozen snapshot* of the
+    discretiser's current binning: within one episode batch apply is pure
+    index arithmetic; the paper's §2.4.1 split/extend/merge adaptation runs
+    host-side on the oracle between batches, after which callers re-pack
+    (``from_discretiser`` again) and re-index their configs.
+
+    Values decoded from the table are jitter-free bin centres by default;
+    pass ``jitter_rng`` to add the ridge term (uniform in ±ridge_frac·width,
+    clamped to the bin) the oracle applies — the §2.1 sweep wants it, the
+    device training loop doesn't (its equivalence tests pin bin centres).
+    """
+
+    def __init__(self, specs: Sequence[LeverSpec],
+                 bins: Optional[dict] = None):
+        bins = bins or {}
+        self.specs = list(specs)
+        self.names = [s.name for s in self.specs]
+        self.index_of = {n: i for i, n in enumerate(self.names)}
+        L = len(self.specs)
+        n_valid = np.zeros(L, np.int32)
+        kind_code = np.zeros(L, np.int32)
+        ridge = np.zeros(L)
+        self._edges: list[Optional[np.ndarray]] = [None] * L  # lin space
+        self._choices: list[Optional[dict]] = [None] * L      # value -> idx
+        for i, s in enumerate(self.specs):
+            if s.kind == "bool":
+                kind_code[i] = KIND_TOGGLE
+                n_valid[i] = 2
+            elif s.kind == "choice":
+                kind_code[i] = KIND_WRAP
+                n_valid[i] = len(s.choices)
+                self._choices[i] = {v: j for j, v in enumerate(s.choices)}
+            else:
+                dyn = bins.get(s.name)
+                if dyn is None:
+                    dyn = DynamicBins(s)    # fresh 10-bin grid
+                kind_code[i] = KIND_CLIP
+                n_valid[i] = dyn.n_bins
+                ridge[i] = dyn.ridge_frac
+                self._edges[i] = dyn._edges.copy()
+        B = int(n_valid.max())
+        self.n_levers = L
+        self.max_bins = B
+        self.n_valid = n_valid
+        self.kind_code = kind_code
+        self.ridge_frac = ridge
+        #: (L, B) jitter-free decoded value per bin (continuous levers only;
+        #: choice/bool rows hold the category index itself). Padded slots
+        #: repeat the last valid bin so a clipped gather can never read junk.
+        centres = np.zeros((L, B))
+        for i, s in enumerate(self.specs):
+            n = int(n_valid[i])
+            if self._edges[i] is not None:
+                e = self._edges[i]
+                mid = 0.5 * (e[:-1] + e[1:])
+                v = np.exp(mid) if s.kind == "log" else mid
+                if s.kind == "int":
+                    v = np.round(v)
+                centres[i, :n] = v
+            else:
+                centres[i, :n] = np.arange(n)
+            centres[i, n:] = centres[i, n - 1]
+        self.centres = centres
+
+    # ------------------------------------------------------------ construction
+    @classmethod
+    def from_discretiser(cls, disc: LeverDiscretiser) -> "DeviceLeverTable":
+        """Snapshot ``disc``'s current adaptive binning (the re-pack hook the
+        device training loop calls between episode batches)."""
+        return cls(list(disc.specs.values()), disc.bins)
+
+    # --------------------------------------------------------------- indexing
+    def index_configs(self, configs: Sequence[dict]) -> np.ndarray:
+        """(N, L) int32 bin/category indices of N config dicts, vectorised
+        per lever (matches ``DynamicBins.bin_of`` bin-for-bin)."""
+        N = len(configs)
+        out = np.zeros((N, self.n_levers), np.int32)
+        for i, s in enumerate(self.specs):
+            vals = [c[s.name] for c in configs]
+            if s.kind == "bool":
+                out[:, i] = np.fromiter((int(bool(v)) for v in vals), np.int32,
+                                        N)
+            elif s.kind == "choice":
+                ch = self._choices[i]
+                out[:, i] = np.fromiter((ch[v] for v in vals), np.int32, N)
+            else:
+                e = self._edges[i]
+                v = np.asarray(vals, float)
+                if s.kind == "log":
+                    v = np.log(np.clip(v, np.exp(e[0]), np.exp(e[-1])))
+                else:
+                    v = np.clip(v, e[0], e[-1])
+                out[:, i] = np.clip(np.searchsorted(e, v, "right") - 1,
+                                    0, self.n_valid[i] - 1)
+        return out
+
+    def value_of(self, lever: int, b: int, rng=None):
+        """Decode one (lever, bin) to the config value the oracle would emit
+        (jitter-free bin centre unless ``rng`` adds the ridge term)."""
+        s = self.specs[lever]
+        b = min(max(int(b), 0), int(self.n_valid[lever]) - 1)
+        if s.kind == "bool":
+            return bool(b)
+        if s.kind == "choice":
+            return s.choices[b]
+        e = self._edges[lever]
+        mid = 0.5 * (e[b] + e[b + 1])
+        if rng is not None and self.ridge_frac[lever]:
+            mid += rng.uniform(-1, 1) * self.ridge_frac[lever] * (e[b + 1] - e[b])
+            mid = float(np.clip(mid, e[b], e[b + 1]))
+        v = float(np.exp(mid)) if s.kind == "log" else float(mid)
+        return int(round(v)) if s.kind == "int" else v
+
+    def decode_configs(self, idx: np.ndarray, rng=None) -> list[dict]:
+        """(N, L) indices -> N config dicts (see ``value_of``)."""
+        return [{s.name: self.value_of(l, int(row[l]), rng)
+                 for l, s in enumerate(self.specs)}
+                for row in np.asarray(idx)]
+
+    # ------------------------------------------------------------------ apply
+    def step_index(self, cur, lever_idx, direction, *, xp=np,
+                   n_valid=None, kind_code=None):
+        """New bin index for ``cur`` bins of ``lever_idx`` moved by
+        ``direction`` (±1) — the pure index arithmetic shared by the host
+        sweep and the traced device apply (same three branches as
+        ``LeverDiscretiser.apply``). ``xp`` selects the array namespace
+        (the §10 episode program traces this with ``xp=jnp``, passing its
+        device copies of ``n_valid``/``kind_code`` — host numpy arrays
+        can't be fancy-indexed by tracers)."""
+        nv = (self.n_valid if n_valid is None else n_valid)[lever_idx]
+        code = (self.kind_code if kind_code is None else kind_code)[lever_idx]
+        stepped = xp.clip(cur + direction, 0, nv - 1)
+        wrapped = (cur + direction) % nv
+        return xp.where(code == KIND_TOGGLE, 1 - cur,
+                        xp.where(code == KIND_WRAP, wrapped, stepped))
+
+    def apply_host(self, idx: np.ndarray, lever_idx: np.ndarray,
+                   direction: np.ndarray) -> np.ndarray:
+        """Vectorised fleet apply: move cluster n's lever ``lever_idx[n]`` by
+        ``direction[n]``. Returns a new (N, L) index array."""
+        idx = np.asarray(idx)
+        rows = np.arange(idx.shape[0])
+        new = idx.copy()
+        new[rows, lever_idx] = self.step_index(idx[rows, lever_idx],
+                                               np.asarray(lever_idx),
+                                               np.asarray(direction))
         return new

@@ -90,3 +90,27 @@ class HeatmapEncoder:
         levers = np.array([float(np.clip(lever_fracs.get(l, 0.0), 0, 1))
                            for l in self.spec.lever_names])
         return np.concatenate([np.concatenate(mats) if mats else np.zeros(0), levers])
+
+    def encode_fleet(self, node_matrices: np.ndarray,
+                     lever_fracs: np.ndarray) -> np.ndarray:
+        """Batched fleet encode: (N, nodes, M) selected-metric windows +
+        (N, L) lever fractions -> (N, state_dim), with ONE running-range
+        update for the whole fleet batch (then every cluster normalised by
+        the updated range). This is the fleet-consistent normalisation the
+        fused device program (repro.core.device_loop) computes on device —
+        unlike the serial ``encode`` path, cluster 0's state no longer
+        depends on its position in the encode order."""
+        raw = np.transpose(np.asarray(node_matrices, float), (0, 2, 1))
+        self._range.lo = np.minimum(self._range.lo, np.nanmin(raw, axis=(0, 2)))
+        self._range.hi = np.maximum(self._range.hi, np.nanmax(raw, axis=(0, 2)))
+        lo, hi = self._range.lo, self._range.hi
+        span = np.where(hi > lo, hi - lo, 1.0)
+        lo_eff = np.where(np.isfinite(lo), lo, 0.0)
+        normed = (raw - lo_eff[None, :, None]) / span[None, :, None]
+        normed = np.clip(np.nan_to_num(normed, nan=0.0), 0.0, 1.0)
+        N, M, nodes = normed.shape
+        r, c = self.spec.grid
+        grids = np.zeros((N, M, r * c))
+        grids[:, :, :nodes] = normed
+        fracs = np.clip(np.asarray(lever_fracs, float), 0.0, 1.0)
+        return np.concatenate([grids.reshape(N, M * r * c), fracs], axis=1)

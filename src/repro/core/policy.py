@@ -53,15 +53,18 @@ def policy_probs(params: PyTree, state: jnp.ndarray) -> jnp.ndarray:
 policy_probs_batch = jax.jit(jax.vmap(policy_probs, in_axes=(None, 0)))
 
 
-@partial(jax.jit, static_argnames=("exploit",))
-def sample_actions_device(params: PyTree, states: jnp.ndarray, key: jax.Array,
-                          f: jnp.ndarray, exploit: bool) -> jnp.ndarray:
-    """Policy forward pass + f-gated categorical sampling fused into ONE
-    device program (DESIGN.md §9): logits for all N cluster states, a
-    Gumbel-max draw over the full action space, a renormalised draw over the
-    top lever's two directions, and the per-row exploitation gate — no host
-    round-trip between acting and env stepping."""
+def _sample_actions(params: PyTree, states: jnp.ndarray, key: jax.Array,
+                    f: jnp.ndarray, exploit: bool,
+                    greedy: bool = False) -> jnp.ndarray:
+    """Traceable core of ``sample_actions_device`` — also composed un-jitted
+    into the fused episode program (repro.core.device_loop), where it is one
+    stage of the per-step scan body rather than its own dispatch.
+    ``greedy`` short-circuits to the argmax action (explore=False contract of
+    the device training loop: deterministic, RNG-free, exactly replayable
+    against the host oracle)."""
     logits = jax.vmap(lambda s: policy_logits(params, s))(states)
+    if greedy:
+        return jnp.argmax(logits, axis=-1)
     k_full, k_sub, k_gate = jax.random.split(key, 3)
     full_a = jax.random.categorical(k_full, logits, axis=-1)
     if not exploit:
@@ -69,6 +72,16 @@ def sample_actions_device(params: PyTree, states: jnp.ndarray, key: jax.Array,
     sub_a = jax.random.categorical(k_sub, logits[:, :2], axis=-1)
     gate = jax.random.uniform(k_gate, (states.shape[0],)) < f
     return jnp.where(gate, sub_a, full_a)
+
+
+#: Policy forward pass + f-gated categorical sampling fused into ONE device
+#: program (DESIGN.md §9): logits for all N cluster states, a Gumbel-max draw
+#: over the full action space, a renormalised draw over the top lever's two
+#: directions, and the per-row exploitation gate — no host round-trip between
+#: acting and env stepping.
+sample_actions_device = partial(jax.jit,
+                                static_argnames=("exploit", "greedy"))(
+                                    _sample_actions)
 
 
 @jax.jit
@@ -110,6 +123,60 @@ def discounted_returns(rewards: Sequence[float], gamma: float) -> np.ndarray:
     return out
 
 
+def discounted_returns_device(rewards: jnp.ndarray, gamma: float) -> jnp.ndarray:
+    """``discounted_returns`` over a padded (N, T) batch as a reverse
+    ``lax.scan`` — padded (reward 0) tail steps contribute nothing, so the
+    masked result equals per-episode host discounting."""
+
+    def step(acc, r):
+        acc = r + gamma * acc
+        return acc, acc
+
+    _, out = jax.lax.scan(step, jnp.zeros(rewards.shape[0], rewards.dtype),
+                          rewards.T[::-1])
+    return out[::-1].T
+
+
+#: number of times the whole-update program was traced (all agents); the §10
+#: no-retrace test pins that steady-state training never grows this.
+UPDATE_TRACE_COUNT = [0]
+
+
+def _update_step(params: PyTree, opt_state: PyTree, states: jnp.ndarray,
+                 actions: jnp.ndarray, rewards: jnp.ndarray,
+                 mask: jnp.ndarray, *, opt, gamma: float,
+                 entropy_beta: float):
+    """One whole Algorithm-1 policy update as a single traced program:
+    returns-discounting, the across-episode per-step baseline, masked
+    advantage scale-normalisation, the policy gradient and the rmsprop step
+    — nothing leaves the device (DESIGN.md §10). Jitted per agent (opt/gamma
+    close over the trace)."""
+    UPDATE_TRACE_COUNT[0] += 1          # side effect at trace time only
+    returns = discounted_returns_device(rewards, gamma)
+    # baseline b_t = mean over episodes of v_t at the same step
+    denom = jnp.maximum(mask.sum(axis=0), 1.0)
+    baseline = (returns * mask).sum(axis=0) / denom
+    adv = (returns - baseline[None, :]) * mask
+    # scale-normalise advantages, but floor the divisor at a fraction of
+    # the reward magnitude: when rewards plateau (std -> 0) a bare /std
+    # would amplify pure noise into full-strength updates.
+    msum = jnp.maximum(mask.sum(), 1.0)
+    mean_adv = adv.sum() / msum
+    std = jnp.sqrt(jnp.maximum(
+        (((adv - mean_adv) ** 2) * mask).sum() / msum, 0.0))
+    ret_mean = (returns * mask).sum() / msum
+    scale = jnp.maximum(jnp.maximum(std, 0.05 * jnp.abs(ret_mean)),
+                        jnp.float32(1e-8))
+    adv = adv / scale
+    beta = jnp.asarray(entropy_beta, jnp.float32)
+    grads = jax.grad(_batch_pg_loss)(params, states, actions, adv, mask, beta)
+    params, opt_state = opt.update(grads, opt_state, params)
+    loss = _batch_pg_loss(params, states, actions, adv, mask, beta)
+    first = (returns[:, 0] * mask[:, 0]).sum() \
+        / jnp.maximum(mask[:, 0].sum(), 1.0)
+    return params, opt_state, loss, first
+
+
 class ReinforceAgent:
     """The paper's configurator: acts on a state, learns from episode batches."""
 
@@ -142,6 +209,11 @@ class ReinforceAgent:
         self.opt = rmsprop(lr=lr)
         self.opt_state = self.opt.init(self.params)
         self._grad = jax.jit(jax.grad(_batch_pg_loss))
+        #: the whole-update device program; one jit cache per agent (the
+        #: optimiser and hyper-parameters close over the trace)
+        self._update_jit = jax.jit(partial(
+            _update_step, opt=self.opt, gamma=gamma,
+            entropy_beta=entropy_beta))
 
     # -- acting --------------------------------------------------------------
     def action_decode(self, a: int) -> tuple[str, int]:
@@ -159,13 +231,13 @@ class ReinforceAgent:
         learning signal; with 1-f the full softmax is sampled."""
         probs = np.asarray(policy_probs(self.params, jnp.asarray(state, jnp.float32)))
         probs = probs / probs.sum()
-        exploit_ready = self.n_updates >= self.f_warmup_updates
-        if explore and exploit_ready and self._rng.uniform() < self.f:
+        if self.exploit_ready(explore=explore) and self._rng.uniform() < self.f:
             sub = probs[:2] + 1e-9  # actions 0/1 = top lever's +/- directions
             return int(self._rng.choice(2, p=sub / sub.sum()))
         return int(self._rng.choice(self.n_actions, p=probs))
 
-    def act_batch(self, states: np.ndarray, *, explore: bool = True) -> np.ndarray:
+    def act_batch(self, states: np.ndarray, *, explore: bool = True,
+                  greedy: bool = False) -> np.ndarray:
         """Sample one action per fleet cluster from (N, state_dim) states.
 
         The policy forward pass is a single vmapped dispatch
@@ -176,13 +248,14 @@ class ReinforceAgent:
         states = np.asarray(states, np.float32)
         probs = np.asarray(policy_probs_batch(self.params, jnp.asarray(states)))
         probs = probs / probs.sum(axis=1, keepdims=True)
+        if greedy:  # deterministic argmax (device-loop replay contract)
+            return np.argmax(probs, axis=1).astype(np.int64)
         N = probs.shape[0]
         # inverse-CDF categorical sampling over the full action space
         u = self._rng.uniform(size=N)
         full_a = (np.cumsum(probs, axis=1) < u[:, None]).sum(axis=1)
         full_a = np.minimum(full_a, self.n_actions - 1)
-        exploit_ready = self.n_updates >= self.f_warmup_updates
-        if not (explore and exploit_ready):
+        if not self.exploit_ready(explore=explore):
             return full_a.astype(np.int64)
         # exploitation: restrict to the top lever's two directions per row
         sub = probs[:, :2] + 1e-9
@@ -193,22 +266,53 @@ class ReinforceAgent:
         gate = self._rng.uniform(size=N) < self.f
         return np.where(gate, sub_a, full_a).astype(np.int64)
 
-    def act_batch_device(self, states, *, explore: bool = True) -> jnp.ndarray:
+    def act_batch_device(self, states, *, explore: bool = True,
+                         greedy: bool = False) -> jnp.ndarray:
         """``act_batch`` as one fused device program (threefry counter key):
         forward pass, f-exploitation gate and categorical draws never leave
         the device — the acting half of the device-resident episode step
         (Configurator.run_fleet_episodes over a jax/pallas FleetEnv)."""
         key = jax.random.fold_in(self._act_key, self._act_draws)
         self._act_draws += 1
-        exploit = bool(explore and self.n_updates >= self.f_warmup_updates)
+        exploit = self.exploit_ready(explore=explore)
         return sample_actions_device(self.params,
                                      jnp.asarray(states, jnp.float32), key,
-                                     jnp.float32(self.f), exploit)
+                                     jnp.float32(self.f), exploit,
+                                     greedy=greedy)
+
+    def exploit_ready(self, *, explore: bool = True) -> bool:
+        """The f-gate warm-up state the fused episode program bakes in as a
+        static: exploitation only after ``f_warmup_updates`` policy updates."""
+        return bool(explore and self.n_updates >= self.f_warmup_updates)
 
     # -- learning (Algorithm 1) -----------------------------------------------
+    def update_batch(self, states, actions, rewards, mask=None) -> dict:
+        """One REINFORCE batch update from device-resident (N, T) episode
+        arrays — returns-discounting, per-step baseline, advantage
+        normalisation and the rmsprop gradient step all run as ONE jitted
+        program (``_update_step``); only the reported stats scalars are
+        pulled to host. ``mask`` marks valid steps of ragged episode batches
+        (defaults to all-valid, the fused device loop's shape)."""
+        states = jnp.asarray(states, jnp.float32)
+        actions = jnp.asarray(actions, jnp.int32)
+        rewards = jnp.asarray(rewards, jnp.float32)
+        if mask is None:
+            mask = jnp.ones(actions.shape, jnp.float32)
+        else:
+            mask = jnp.asarray(mask, jnp.float32)
+        self.params, self.opt_state, loss, first = self._update_jit(
+            self.params, self.opt_state, states, actions, rewards, mask)
+        self.n_updates += 1
+        return {"pg_loss": float(loss), "mean_return": float(first),
+                "episodes": int(actions.shape[0]),
+                "steps": int(np.asarray(mask).sum())}
+
     def update(self, episodes: Sequence[Trajectory]) -> dict:
-        """One REINFORCE batch update from N episodes; per-step baseline is the
-        across-episode mean return at that step (Algorithm 1)."""
+        """One REINFORCE batch update from N episodes; per-step baseline is
+        the across-episode mean return at that step (Algorithm 1). Pads the
+        host trajectories and steps through the SAME jitted update program
+        the device-resident loop uses (``update_batch``) — one math path,
+        two front-ends."""
         eps = [e for e in episodes if len(e)]
         if not eps:
             return {"pg_loss": 0.0, "mean_return": 0.0}
@@ -216,32 +320,12 @@ class ReinforceAgent:
         T = max(len(e) for e in eps)
         states = np.zeros((N, T, self.state_dim), np.float32)
         actions = np.zeros((N, T), np.int32)
-        returns = np.zeros((N, T), np.float32)
+        rewards = np.zeros((N, T), np.float32)
         mask = np.zeros((N, T), np.float32)
         for i, e in enumerate(eps):
             L = len(e)
             states[i, :L] = np.stack(e.states)
             actions[i, :L] = e.actions
-            returns[i, :L] = discounted_returns(e.rewards, self.gamma)
+            rewards[i, :L] = e.rewards
             mask[i, :L] = 1.0
-        # baseline b_t = mean over episodes of v_t at the same step
-        denom = np.maximum(mask.sum(axis=0), 1.0)
-        baseline = (returns * mask).sum(axis=0) / denom
-        adv = (returns - baseline[None, :]) * mask
-        # scale-normalise advantages, but floor the divisor at a fraction of
-        # the reward magnitude: when rewards plateau (std -> 0) a bare /std
-        # would amplify pure noise into full-strength updates.
-        std = adv[mask > 0].std()
-        scale = max(std, 0.05 * abs(float(np.mean(returns[mask > 0]))), 1e-8)
-        adv = adv / scale
-
-        beta = jnp.asarray(self.entropy_beta, jnp.float32)
-        grads = self._grad(self.params, jnp.asarray(states), jnp.asarray(actions),
-                           jnp.asarray(adv), jnp.asarray(mask), beta)
-        self.params, self.opt_state = self.opt.update(grads, self.opt_state, self.params)
-        self.n_updates += 1
-        mean_ret = float((returns[:, 0] * mask[:, 0]).sum() / max(mask[:, 0].sum(), 1))
-        loss = float(_batch_pg_loss(self.params, jnp.asarray(states),
-                                    jnp.asarray(actions), jnp.asarray(adv),
-                                    jnp.asarray(mask), beta))
-        return {"pg_loss": loss, "mean_return": mean_ret, "episodes": N, "steps": int(mask.sum())}
+        return self.update_batch(states, actions, rewards, mask)

@@ -21,7 +21,7 @@ from repro.core import lasso as lasso_mod
 from repro.core import metrics_selection as msel
 from repro.core.configurator import (Configurator, TuningEnv, is_fleet_env,
                                      reward_from_latency)
-from repro.core.discretize import LeverDiscretiser
+from repro.core.discretize import DeviceLeverTable, LeverDiscretiser
 
 
 @dataclass
@@ -32,6 +32,8 @@ class TrainingMatrix:
     lever_rows: list = field(default_factory=list)    # per window: dict name->value
     target: list = field(default_factory=list)        # per window: p99 latency ms
     target_mean: list = field(default_factory=list)   # per window: mean latency ms
+    cluster: list = field(default_factory=list)       # per window: source cluster id
+    #                                                   (fleet sweeps; -1 serial)
 
     def metrics_array(self, names: Sequence[str]) -> np.ndarray:
         return np.array([[row.get(n, np.nan) for n in names]
@@ -123,6 +125,7 @@ class AutoTuner:
             self.matrix.target_mean.append(
                 float(np.mean(window.latencies_ms)) if window.latencies_ms.size
                 else np.nan)
+            self.matrix.cluster.append(-1)
         return self.matrix
 
     def _collect_fleet(self, n_windows: int, *, perturb_every: int = 1,
@@ -130,47 +133,83 @@ class AutoTuner:
                        guard: bool = True) -> TrainingMatrix:
         """§2.1 over a FleetTuningEnv: the paper's 80-cluster sweep, batched.
 
-        Each round every cluster proposes its own random single-lever change
-        (independent per-cluster discretisers), the guard rejects non-runnable
-        configs fleet-wide in one vectorised call, and the whole fleet is
-        applied/stabilised/observed together — n_clusters matrix rows per
-        round. Clusters reset to defaults every ``windows_per_cluster`` rounds
+        The sweep walks the same *integerised* lever representation as the
+        fused device training loop (``DeviceLeverTable``, DESIGN.md §10): the
+        fleet's configs are one (N, L) int index array, a round proposes one
+        random (lever, direction) per cluster via pure index arithmetic and
+        decodes only the moved lever (bin centre + ridge jitter), the guard
+        rejects non-runnable configs fleet-wide in one vectorised call, and
+        the whole fleet is applied/stabilised/observed together — n_clusters
+        matrix rows per round. The §2.4.1 bin adaptation stays live: every
+        proposal is recorded into a fleet-shared ``LeverDiscretiser`` oracle
+        (the same sharing the online Configurator uses) and the table is
+        re-packed from the adapted binning whenever it changes, so the walk
+        keeps WIDENING (extend) and coarsening (merge) like the dict-based
+        sweep did. The split rule is off here: a fleet-shared oracle sees
+        every cluster's proposals, and the periodic resets-to-default make
+        same-bin streaks common, so splitting would keep halving the bins
+        around the defaults and shrink the very lever deltas the Lasso needs
+        (per-cluster oracles never hit this — their streaks were rare).
+        Clusters reset to defaults every ``windows_per_cluster`` rounds
         exactly like the serial emulation."""
         env = self.env
         N = env.n_clusters
         specs = list(env.lever_specs)
-        discs = [LeverDiscretiser(specs, seed=self.seed + 101 * i)
-                 for i in range(N)]
+        disc = LeverDiscretiser(specs, seed=self.seed, split_after=10**9)
+        table = DeviceLeverTable.from_discretiser(disc)
+
+        def bins_sig():
+            return tuple(d._edges.tobytes() for d in disc.bins.values())
+
+        sig = bins_sig()
+        L = table.n_levers
         rounds = -(-n_windows // N)  # ceil
         rows_added = 0
         configs = env.current_configs()
+        idx = table.index_configs(configs)
         for w in range(rounds):
             if windows_per_cluster and w % windows_per_cluster == 0:
                 env.reset()
                 configs = env.current_configs()
+                idx = table.index_configs(configs)
             if w % perturb_every == 0:
-                proposals = list(configs)
+                cand = list(configs)
                 changed: list = [()] * N
-                pending = set(range(N))
+                pending = list(range(N))
                 for _ in range(8):  # retry guard-rejected proposals
                     if not pending:
                         break
-                    cand = list(proposals)
-                    cand_lever = {}
-                    for i in pending:
-                        s = specs[self._rng.integers(len(specs))]
-                        direction = int(self._rng.choice([-1, 1]))
-                        cand[i] = discs[i].apply(configs[i], s.name, direction)
-                        cand_lever[i] = s.name
+                    p = np.asarray(pending)
+                    li = self._rng.integers(L, size=p.size)
+                    dirs = self._rng.choice([-1, 1], size=p.size)
+                    bins = table.step_index(idx[p, li], li, dirs)
+                    for j, i in enumerate(p):
+                        name = table.names[li[j]]
+                        dyn = disc.bins.get(name)
+                        if dyn is not None:  # adapt on proposal, like apply()
+                            dyn.record(int(bins[j]))
+                        c = dict(configs[i])
+                        c[name] = table.value_of(int(li[j]), int(bins[j]),
+                                                 self._rng)
+                        cand[i] = c
                     ok = (env.runnable_mask(cand) if guard
                           else np.ones(N, bool))
-                    for i in list(pending):
+                    still = []
+                    for j, i in enumerate(p):
                         if ok[i]:
-                            proposals[i] = cand[i]
-                            changed[i] = (cand_lever[i],)
-                            pending.discard(i)
-                configs = proposals
+                            configs[i] = cand[i]
+                            idx[i, li[j]] = bins[j]
+                            changed[i] = (table.names[li[j]],)
+                        else:
+                            cand[i] = configs[i]
+                            still.append(i)
+                    pending = still
                 env.apply_configs(configs, changed_levers=changed)
+                new_sig = bins_sig()
+                if new_sig != sig:  # split/extend/merge happened: re-pack
+                    table = DeviceLeverTable.from_discretiser(disc)
+                    idx = table.index_configs(configs)
+                    sig = new_sig
                 stabs = env.stabilisation_times()
                 env.advance(stabs)  # paper §2.2: sample average taken after
                 #                     the change stabilises
@@ -189,6 +228,7 @@ class AutoTuner:
                 self.matrix.target_mean.append(
                     float(np.mean(window.latencies_ms))
                     if window.latencies_ms.size else np.nan)
+                self.matrix.cluster.append(i)
                 rows_added += 1
         return self.matrix
 
@@ -225,10 +265,19 @@ class AutoTuner:
     # -- §2.2 + §2.3 analysis ---------------------------------------------------
     def analyse(self, *, k: Optional[int] = None, lasso_degree: int = 2,
                 interactions: bool = False, log_target: bool = True,
-                target: str = "mean") -> tuple[list[str], list[str]]:
+                target: str = "mean",
+                demean_clusters: bool = False) -> tuple[list[str], list[str]]:
         """§2.2 + §2.3. ``target`` is the Lasso objective: the windowed 'mean'
         latency (default — far lower variance across 4-min windows) or 'p99'
-        (the SLO the RL reward tracks; both move together in this engine)."""
+        (the SLO the RL reward tracks; both move together in this engine).
+
+        ``demean_clusters`` subtracts each source cluster's mean (log-)target
+        before the Lasso fit: on heterogeneous fleets the per-cluster arrival
+        rate is an unmodelled covariate whose between-cluster offsets dwarf
+        the within-cluster lever signal, so the pooled regression can rank
+        inert levers first (the §4.4/§4.5 mixed-fleet confound). Demeaning
+        is the fixed-effects estimator for exactly that structure; it is a
+        no-op on single-cluster matrices."""
         names = list(self.env.metric_names)
         X = self.matrix.metrics_array(names)
         self.selection = msel.select_metrics(X, names, seed=self.seed, k=k)
@@ -241,6 +290,11 @@ class AutoTuner:
             y = np.asarray(self.matrix.target, float)
         keep = np.isfinite(y)
         yk = np.log(np.maximum(y[keep], 1e-3)) if log_target else y[keep]
+        if demean_clusters and len(self.matrix.cluster) == len(y):
+            cid = np.asarray(self.matrix.cluster)[keep]
+            for c in np.unique(cid):
+                rows = cid == c
+                yk = np.where(rows, yk - yk[rows].mean(), yk)
         self.ranked_levers = lasso_mod.rank_levers(
             R[keep], yk, lever_names, degree=lasso_degree,
             interactions=interactions, top=self.top_levers)

@@ -613,6 +613,34 @@ class DeviceFleetEngine:
             self.core.server_free[:] = self.core.clock + np.maximum(
                 np.asarray(self._sfree_rel), 0.0)
 
+    # -------------------------------------------------- fused-loop state handoff
+    def loop_state(self) -> tuple:
+        """(backlog, sfree_rel, clock) device f32 arrays for the fused
+        training loop (DESIGN.md §10), with any pending loading-time buffers
+        folded in — the loop owns the queueing state until
+        ``adopt_loop_state`` hands it back."""
+        core = self.core
+        if self._backlog is None:
+            self._backlog = jnp.asarray(core.backlog, jnp.float32)
+            self._sfree_rel = jnp.asarray(
+                np.maximum(core.server_free - core.clock, 0.0), jnp.float32)
+        backlog, sfree = self._backlog, self._sfree_rel
+        if self._pending_arrivals.any() or self._pending_gap.any():
+            backlog = backlog + jnp.asarray(self._pending_arrivals, jnp.float32)
+            sfree = jnp.maximum(
+                sfree - jnp.asarray(self._pending_gap, jnp.float32), 0.0)
+            self._pending_arrivals[:] = 0.0
+            self._pending_gap[:] = 0.0
+        return backlog, sfree, jnp.asarray(core.clock, jnp.float32)
+
+    def adopt_loop_state(self, backlog, sfree_rel, clock) -> None:
+        """Re-adopt the queueing state after a fused episode batch. The host
+        clock shadow continues from the device f32 clock (the §9 exact-shadow
+        contract is relaxed to f32 across fused batches — §10)."""
+        self._backlog = backlog
+        self._sfree_rel = sfree_rel
+        self.core.clock[:] = np.asarray(clock, np.float64)
+
     # ----------------------------------------------------------------- RNG/cc
     def _cc(self) -> dict:
         if self._cc_dev is None:
@@ -725,6 +753,183 @@ class DeviceFleetEngine:
         batch = _WindowBatch(dev, n_ticks, core.clock.copy(), self._index,
                              lane_seed=self._draws, n_skip=n_skip)
         return [DeviceMetricsWindow(batch, i) for i in range(N)]
+
+
+# --------------------------------------------------------------------------
+# scan-composable window step (DESIGN.md §10)
+# --------------------------------------------------------------------------
+
+def build_step_window(core, sel_cols: tuple, T: int, E: int):
+    """Build the *scan-composable* window step for the fused training loop.
+
+    Unlike ``_window_program`` (one jitted dispatch per observe call, tick
+    geometry resolved host-side from the packed lever arrays), the returned
+    ``step_window`` is a PURE traced function meant to run *inside* the
+    episode ``lax.scan`` of ``repro.core.device_loop``: it carries the
+    queueing state through the recurrence, derives its tick geometry from the
+    device-resident per-cluster lever values (``cc``), and summarises only
+    the ``sel_cols`` metric columns the heat-map encoder actually reads.
+
+    Static geometry: ``T`` is the padded tick budget (stabilisation preroll +
+    observation window are CLIPPED to it — a cluster that walks
+    ``batch_interval_s`` below ``(window+stab)/T`` sees a truncated window,
+    the documented §10 deviation), ``E`` the emission-slot budget.
+
+        step_window(key, backlog, sfree_rel, clock, cc, rate, size,
+                    stab_s, reconfigs, win_s)
+            -> (backlog', sfree_rel', clock'), stats
+
+    with ``stats = {"mean_ms", "p99_ms", "processed", "per_node"}`` where
+    ``per_node`` is (N, nodes, len(sel_cols)). All latency/queue columns in
+    ``sel_cols`` are grounded in the simulated mixture exactly like the §9
+    window program.
+    """
+    from repro.kernels.fleet_tick import pack_tick_consts
+
+    spec, chips, nodes = core.spec, core.chips, core.n_nodes
+    emc = _emission_constants()
+    sel = np.asarray(sel_cols, np.int64)
+    M_sel = len(sel)
+    W_sel = jnp.asarray(emc["W"][:, sel], jnp.float32)        # (8, M_sel)
+    bias_sel = jnp.asarray(emc["bias"][sel], jnp.float32)
+    noise_sel = jnp.asarray(emc["noise_v"][sel], jnp.float32)
+    F_sel = jnp.asarray(core._emit_factor[:, :, sel], jnp.float32)
+    #: selected columns that the oracle grounds in the simulated latency
+    #: mixture / queue depth instead of the factor model
+    lat_overwrite = [(j, int(np.nonzero(emc["lat_cols"] == c)[0][0]))
+                     for j, c in enumerate(sel) if c in emc["lat_cols"]]
+    queue_overwrite = [j for j, c in enumerate(sel) if c == emc["queue_col"]]
+    mc_dev = core._dev._mc_dev
+    node_noise = core._dev.node_noise
+    Sp = p99_lanes(T)
+    kq = min(T * Sp, int(np.ceil(0.01 * (T * Sp - 1))) + 2)
+    t_ax = jnp.arange(T)[:, None]
+    e_ax = jnp.arange(E)[:, None]
+    M_pad = M_sel + (M_sel % 2)      # normals_16bit wants an even last dim
+
+    def step_window(key, backlog, sfree_rel, clock, cc, rate, size,
+                    stab_s, reconfigs, win_s):
+        N = backlog.shape[0]
+        T_b = cc["T_b"]
+        ee = jnp.maximum(cc["emit_every"].astype(jnp.int32), 1)
+        n_win = jnp.clip(jnp.round(win_s / T_b).astype(jnp.int32), 1, T)
+        n_skip = jnp.clip(jnp.round(stab_s / T_b).astype(jnp.int32),
+                          0, T - n_win)
+        n_ticks = n_skip + n_win
+        tmask = t_ax < n_ticks[None, :]
+        wmask = tmask & (t_ax >= n_skip[None, :])
+        consts = pack_tick_consts(cc, mc_dev, spec, chips, xp=jnp)
+        (T_b_c, max_b, a_comp, c_coll, b_mem, kvp, ovh, slow_cap, backup,
+         fail_frac, inflight) = tuple(consts[i] for i in range(11))
+
+        sfree_rel = jnp.maximum(sfree_rel, 0.0)
+        k_tick, k_lane, k_emit = jax.random.split(key, 3)
+        u16, l16 = split16(jax.random.bits(k_tick, (T, 2, N), jnp.uint32))
+        z = norm16(u16[:, 0])
+        u_strag, u_raw, u_fail = l16[:, 0], u16[:, 1], l16[:, 1]
+        slo, shi = spec.straggler_slow
+        smask = u_strag < spec.straggler_prob
+        raw = slo + (shi - slo) * u_raw
+        slow = jnp.where(smask, jnp.where(backup != 0, 1.1,
+                                          jnp.minimum(raw, slow_cap)), 1.0)
+        fmask = u_fail < fail_frac
+        slow = jnp.where(fmask, slow * 2.0, slow)
+
+        rg = jnp.broadcast_to(rate[None, :], (T, N))
+        arr = jnp.maximum(rg * T_b * (1.0 + spec.noise * z), 0.0)
+        xs = (arr, rg * spec.retention_s, slow,
+              jnp.broadcast_to(size[None, :] * TOKENS_PER_MB, (T, N)),
+              1.0 / jnp.maximum(rg, 1.0), tmask)
+        body = functools.partial(
+            _tick_body, T_b=T_b, max_b=max_b, a_comp=a_comp, c_coll=c_coll,
+            b_mem=b_mem, kvp=kvp, ovh=ovh, inflight=inflight)
+        (backlog, sfree_rel), ys = jax.lax.scan(
+            body, (backlog, sfree_rel), xs)
+        service, qd, batch, processed, blg_e = ys
+
+        processed_sum = (processed * wmask).sum(axis=0)
+        base_ms = (qd + service) * 1000.0
+        a_ms = (T_b * 1000.0)[None, :]
+        c_ms = 100.0 * service
+        # analytic window mean + lane-sampled p99 (the §9 jax path, inlined)
+        n_s = jnp.clip(batch.astype(jnp.int32), 1, _MAX_LAT_SAMPLES)
+        w_t = n_s.astype(jnp.float32) * wmask
+        mean_ms = (w_t * (base_ms + 0.5 * a_ms + _R2PI * c_ms)) \
+            .sum(axis=0) / jnp.maximum(w_t.sum(axis=0), 1e-9)
+        u_p, z_p = split_lane_bits(
+            jax.random.bits(k_lane, (T, N, Sp), jnp.uint32))
+        lat_p = base_ms[:, :, None] + a_ms[:, :, None] * u_p \
+            + c_ms[:, :, None] * z_p
+        n_sp = jnp.minimum(n_s, Sp)
+        lv = (jnp.arange(Sp)[None, None, :] < n_sp[:, :, None]) \
+            & wmask[:, :, None]
+        cnt = lv.sum(axis=(0, 2))
+        flat = jnp.where(lv, lat_p, -jnp.inf)
+        flat = jnp.transpose(flat, (1, 0, 2)).reshape(N, T * Sp)
+        top = jax.lax.top_k(flat, kq)[0]
+        p99 = _lerp_quantile(top, cnt, 99.0, descending=True)
+
+        # ---- metric emission, selected columns only (device etick) ----
+        forced = n_win < ee
+        n_emit = n_win // ee + forced
+        etick = jnp.where(forced[None, :], n_skip[None, :] + n_win[None, :] - 1,
+                          n_skip[None, :] + (e_ax + 1) * ee[None, :] - 1)
+        etick = jnp.clip(etick, 0, T - 1)
+        evalid = e_ax < n_emit[None, :]
+        g = lambda a: jnp.take_along_axis(a, etick, axis=0)      # (E, N)
+        srv_e, qd_e, batch_e = g(service), g(qd), g(batch)
+        rho_e = srv_e / T_b
+        rate_e = jnp.broadcast_to(rate[None, :], (E, N))
+        size_e = jnp.broadcast_to(size[None, :], (E, N))
+        terms_e = service_terms_arrays(cc, mc_dev, spec, chips,
+                                       rate_e, size_e, batch_e, xp=jnp)
+        s_safe = jnp.maximum(srv_e, 1e-6)
+        smask_f = smask.astype(jnp.float32)
+        fmask_f = fmask.astype(jnp.float32)
+        lvec = jnp.stack([
+            jnp.minimum(rho_e, 3.0) + 0.2 * jnp.log1p(qd_e),
+            jnp.minimum(terms_e["t_compute"] / s_safe, 1.0)
+            * jnp.minimum(rho_e, 1.0),
+            terms_e["mem_frac"],
+            terms_e["t_collective"] / s_safe,
+            terms_e["t_overhead"] / s_safe,
+            terms_e["eff"] / spec.base_mfu,
+            g(smask_f) + g(fmask_f) + 0.1 * reconfigs[None, :],
+            0.6 * jnp.minimum(rho_e, 1.0) + 0.4 * terms_e["eff"],
+        ], axis=-1)                                              # (E, N, 8)
+        base = jnp.einsum("enf,fk->enk", lvec, W_sel) + bias_sel
+        noise_shape = (E, N, nodes, M_pad) if node_noise else (E, N, 1, M_pad)
+        noise = normals_16bit(k_emit, noise_shape)[..., :M_sel]
+        noisy = base[:, :, None, :] * (1.0 + noise * noise_sel)
+        ecnt = jnp.maximum(evalid.sum(axis=0), 1)                # (N,)
+        emean = jnp.where(evalid[:, :, None, None], noisy, 0.0).sum(axis=0) \
+            / ecnt[:, None, None]                                # (N, nodes, M_sel)
+        per_node = F_sel * emean
+        if lat_overwrite or queue_overwrite:
+            n_s_e = g(n_s)
+            base_e, c_e = g(base_ms), g(c_ms)
+            a_e = T_b[None, :] * 1000.0
+            q = lambda al: base_e + al * a_e + _R2PI * c_e
+            n_f = n_s_e.astype(jnp.float32)
+            mx = base_e + a_e * n_f / (n_f + 1.0) \
+                + c_e * jnp.sqrt(2.0 * jnp.log(jnp.maximum(n_f, 2.0)))
+            stats5 = jnp.stack([q(0.5), q(0.5), q(0.95), q(0.99), mx],
+                               axis=-1)                          # (E, N, 5)
+            ew = jnp.where(evalid[:, :, None], stats5, 0.0).sum(axis=0) \
+                / ecnt[:, None]                                  # (N, 5)
+            for j, stat_i in lat_overwrite:
+                per_node = per_node.at[:, :, j].set(ew[:, stat_i][:, None])
+            if queue_overwrite:
+                qmean = jnp.where(evalid, g(blg_e), 0.0).sum(axis=0) / ecnt
+                for j in queue_overwrite:
+                    per_node = per_node.at[:, :, j].set(qmean[:, None])
+
+        clock = clock + n_ticks.astype(jnp.float32) * T_b
+        stats = {"mean_ms": mean_ms, "p99_ms": p99,
+                 "processed": processed_sum, "per_node": per_node}
+        return (backlog, sfree_rel, clock), stats
+
+    return step_window
 
 
 def _pallas_interpret() -> bool:

@@ -34,6 +34,13 @@ def main(argv=None):
                     help="fleet tick engine (DESIGN.md §9): numpy reference "
                          "oracle, or the device-resident jax/pallas engine "
                          "(1000+-cluster fleets; statistical equivalence)")
+    ap.add_argument("--device-loop", choices=["auto", "on", "off"],
+                    default="auto",
+                    help="fused Algorithm-1 training loop (DESIGN.md §10): "
+                         "one jitted episode program + one jitted update per "
+                         "outer iteration. 'auto' uses it whenever the env "
+                         "supports it (jax backend, constant-rate "
+                         "workloads); 'on' fails loudly if it can't")
     ap.add_argument("--collect", type=int, default=1200)
     ap.add_argument("--updates", type=int, default=8)
     ap.add_argument("--steps-per-episode", type=int, default=5)
@@ -92,7 +99,13 @@ def main(argv=None):
     print(f"[tune] default p99 = {base_p99:.0f} ms")
     cfgr = tuner.build_configurator(
         steps_per_episode=args.steps_per_episode,
-        episodes_per_update=args.episodes, window_s=window, f_exploit=args.f)
+        episodes_per_update=args.episodes, window_s=window, f_exploit=args.f,
+        device_loop=args.device_loop)
+    if fleet:
+        reason = cfgr.device_loop_reason()
+        print("[tune] fused device loop (§10): "
+              + ("ACTIVE — one episode program + one update program per "
+                 "outer iteration" if reason is None else f"off ({reason})"))
 
     def cb(i, stats, history):
         last = history[-steps_per_update:]

@@ -1,0 +1,132 @@
+"""DeviceLeverTable (DESIGN.md §10): the integerised lever table must match
+the dict-based LeverDiscretiser oracle bin-for-bin across lever kinds,
+clipping, and post-split/merge re-packing."""
+import numpy as np
+import pytest
+
+from repro.core.discretize import LeverDiscretiser, LeverSpec
+
+# --------------------------------------------------------------------------
+# DeviceLeverTable: integerised apply must match the dict oracle bin-for-bin
+# --------------------------------------------------------------------------
+
+from repro.core.discretize import DeviceLeverTable
+
+_FROZEN = dict(split_after=10**9, extend_after=10**9, merge_after=10**9,
+               ridge_frac=0.0)
+
+_TABLE_SPECS = [
+    LeverSpec("lin", kind="float", lo=0.0, hi=10.0, default=5.0,
+              hard_lo=-20.0, hard_hi=40.0),
+    LeverSpec("logl", kind="log", lo=0.25, hi=20.0, default=10.0,
+              hard_lo=0.05, hard_hi=30.0),
+    LeverSpec("ints", kind="int", lo=1, hi=64, default=8),
+    LeverSpec("cat", kind="choice", choices=("a", "b", "z")),
+    LeverSpec("flag", kind="bool", default=False),
+]
+
+
+@pytest.mark.parametrize("lever", [s.name for s in _TABLE_SPECS])
+@pytest.mark.parametrize("direction", [-1, +1])
+def test_table_apply_matches_oracle_bin_for_bin(lever, direction):
+    """From EVERY starting bin, one integerised step decodes to exactly the
+    value the (adaptation-frozen, jitter-free) LeverDiscretiser emits —
+    including clipping at the range ends and choice/bool cycling."""
+    disc = LeverDiscretiser(_TABLE_SPECS, seed=0, **_FROZEN)
+    table = DeviceLeverTable.from_discretiser(disc)
+    li = table.index_of[lever]
+    for b in range(int(table.n_valid[li])):
+        cfg = disc.default_config()
+        cfg[lever] = table.value_of(li, b)
+        ref = disc.apply(cfg, lever, direction, jitter=False)[lever]
+        idx = table.index_configs([cfg])
+        assert idx[0, li] == b  # decode -> index round-trip is stable
+        new = table.apply_host(idx, np.array([li]), np.array([direction]))
+        got = table.value_of(li, int(new[0, li]))
+        if isinstance(ref, float):
+            assert got == pytest.approx(ref, rel=1e-12), (lever, b)
+        else:
+            assert got == ref, (lever, b)
+
+
+def test_table_repack_after_split_and_merge():
+    """Drive the oracle's §2.4.1 adaptation (split, then merge), re-pack the
+    table, and check the integerised apply tracks the NEW binning."""
+    spec = LeverSpec("x", kind="float", lo=0.0, hi=10.0, default=5.0)
+    disc = LeverDiscretiser([spec], seed=0, split_after=5, extend_after=10**9,
+                            merge_after=20, ridge_frac=0.0)
+    t0 = DeviceLeverTable.from_discretiser(disc)
+    assert t0.n_valid[0] == 10
+    for _ in range(5):                      # same-bin streak -> global split
+        disc.bins["x"].record(4)
+    t1 = DeviceLeverTable.from_discretiser(disc)
+    assert t1.n_valid[0] == 20
+    for k in range(60):                     # bins >=2 idle -> merges
+        disc.bins["x"].record(k % 2)        # alternating: no same-bin streak
+    t2 = DeviceLeverTable.from_discretiser(disc)
+    assert t2.n_valid[0] < 20
+    for table in (t1, t2):
+        for b in range(int(table.n_valid[0])):
+            cfg = {"x": table.value_of(0, b)}
+            ref = disc.apply(cfg, "x", +1, jitter=False)["x"]
+            # the oracle keeps adapting inside apply(); freeze by comparing
+            # against a fresh frozen twin over the same edges
+            frozen = LeverDiscretiser([spec], seed=0, **_FROZEN)
+            frozen.bins["x"]._edges = table._edges[0].copy()
+            frozen.bins["x"]._hits = np.zeros(int(table.n_valid[0]), np.int64)
+            frozen.bins["x"]._since_used = np.zeros(int(table.n_valid[0]),
+                                                    np.int64)
+            ref = frozen.apply(cfg, "x", +1, jitter=False)["x"]
+            idx = table.apply_host(table.index_configs([cfg]),
+                                   np.array([0]), np.array([+1]))
+            assert table.value_of(0, int(idx[0, 0])) == pytest.approx(ref)
+
+
+def test_table_extension_respects_hard_bounds():
+    spec = LeverSpec("x", kind="float", lo=0.0, hi=10.0, hard_hi=12.0)
+    disc = LeverDiscretiser([spec], seed=0, extend_after=2,
+                            split_after=10**9, merge_after=10**9,
+                            ridge_frac=0.0)
+    for _ in range(50):
+        disc.bins["x"].record(disc.bins["x"].n_bins - 1)
+    table = DeviceLeverTable.from_discretiser(disc)
+    top = int(table.n_valid[0]) - 1
+    idx = np.full((1, 1), top, np.int32)
+    stepped = table.apply_host(idx, np.array([0]), np.array([+1]))
+    assert stepped[0, 0] == top                      # clips, never escapes
+    assert table.value_of(0, top) <= 12.0 + 1e-9
+
+
+def test_table_ridge_jitter_stays_within_bin():
+    disc = LeverDiscretiser(_TABLE_SPECS, seed=0, split_after=10**9,
+                            extend_after=10**9, merge_after=10**9,
+                            ridge_frac=0.4)
+    table = DeviceLeverTable.from_discretiser(disc)
+    rng = np.random.default_rng(0)
+    li = table.index_of["lin"]
+    e = table._edges[li]
+    for b in range(int(table.n_valid[li])):
+        for _ in range(10):
+            v = table.value_of(li, b, rng)
+            assert e[b] - 1e-9 <= v <= e[b + 1] + 1e-9
+
+
+def test_table_property_walk_matches_frozen_oracle():
+    """Random (lever, direction) walks through the integerised table stay
+    bin-for-bin equal to the frozen dict oracle across every lever kind."""
+    rng = np.random.default_rng(7)
+    disc = LeverDiscretiser(_TABLE_SPECS, seed=0, **_FROZEN)
+    table = DeviceLeverTable.from_discretiser(disc)
+    cfg = disc.default_config()
+    idx = table.index_configs([cfg])
+    for _ in range(200):
+        li = int(rng.integers(table.n_levers))
+        d = int(rng.choice([-1, 1]))
+        cfg = disc.apply(cfg, table.names[li], d, jitter=False)
+        idx = table.apply_host(idx, np.array([li]), np.array([d]))
+        got = table.value_of(li, int(idx[0, li]))
+        ref = cfg[table.names[li]]
+        if isinstance(ref, float):
+            assert got == pytest.approx(ref, rel=1e-12)
+        else:
+            assert got == ref
