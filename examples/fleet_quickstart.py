@@ -5,9 +5,10 @@ REINFORCE episodes, batched in a single FleetEnv.
     PYTHONPATH=src python examples/fleet_quickstart.py jax 256      # device
 
 1. Build an N-cluster fleet (default 16) over the heterogeneous workload
-   roster — or, on a device backend, a Poisson fleet so the whole training
-   loop is device-resident (DESIGN.md §10 gates the fused loop to
-   constant-rate fleets).
+   roster — on a device backend, the device-packable slice of it (every
+   arrival process with a closed-form rate law runs fused since DESIGN.md
+   §11; only the IoT trace, whose burst schedule is a precomputed host
+   array, would fall back to the per-step host loop).
 2. Collect training windows fleet-wide through the integerised §2.1 sweep:
    every cluster perturbs its own random lever per window, all clusters
    advance in one batched call.
@@ -38,12 +39,12 @@ if backend == "numpy":
         N, seed=0,
         mix=("poisson_low", "trapezoid", "yahoo_ads", "iot", "switching"))
 else:
-    # constant-rate fleet: the §10 fused training loop needs device-constant
-    # arrival grids (time-varying fleets fall back to the per-step host loop)
-    from repro.data.workloads import PoissonWorkload
-
-    env = FleetEnv([PoissonWorkload(10_000 + 500 * (i % 7), 0.5)
-                    for i in range(N)], seeds=list(range(N)), backend=backend)
+    # device-packable mixed fleet: steady, ramping and regime-switching
+    # arrival processes all run fused end-to-end (DESIGN.md §11) — only
+    # "iot" (precomputed burst schedule) is left out of the roster here
+    env = FleetEnv.heterogeneous(
+        N, seed=0, backend=backend,
+        mix=("poisson_low", "trapezoid", "yahoo_ads", "switching"))
 tuner = AutoTuner(env, seed=0, window_s=240.0, top_levers=8)
 
 print(f"collecting training windows across {N} clusters ({backend}) ...")

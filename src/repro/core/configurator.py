@@ -132,7 +132,13 @@ class Configurator:
     ``device_loop`` selects the §10 fused training loop over a device-backed
     fleet: ``"auto"`` (default) uses it whenever ``device_loop_reason()``
     is None, ``"on"`` fails loudly when it can't, ``"off"`` always runs the
-    per-step host loop."""
+    per-step host loop.
+
+    ``mesh`` shards the fused loop's cluster axis across devices
+    (DESIGN.md §11): ``"auto"`` (default) uses
+    ``repro.distribution.sharding.fleet_mesh()`` whenever the fleet size
+    divides the visible device count, ``"off"``/None pins single-device,
+    or pass an explicit 1-D ``jax.sharding.Mesh``."""
 
     def __init__(
         self,
@@ -150,11 +156,13 @@ class Configurator:
         seed: int = 0,
         bin_kw: Optional[dict] = None,
         device_loop: str = "auto",
+        mesh="auto",
     ):
         assert device_loop in ("auto", "on", "off"), device_loop
         self.env = env
         self.fleet = is_fleet_env(env)
         self.device_loop = device_loop
+        self.mesh_opt = mesh
         self._runner = None            # lazy DeviceEpisodeRunner (§10)
         self.levers = [l for l in ranked_levers if l in {s.name for s in env.lever_specs}]
         assert self.levers, "no ranked lever matches the environment's lever set"
@@ -387,24 +395,31 @@ class Configurator:
 
     def _run_update_device(self) -> dict:
         """§10 outer iteration: one fused episode program per pass + ONE
-        jitted update — the (N, T) episode batch never bounces to host."""
+        jitted update — the (N, T) episode batch never bounces to host.
+
+        Double-buffered dispatch (§11): the passes chain device-side
+        (``run_async``), the update program is enqueued on their
+        device-resident outputs, and only THEN does the host block and
+        materialise records / replay §2.4.1 bins (``finalize``) — the
+        host-side adaptation work overlaps the device update."""
         import jax.numpy as jnp
 
+        runner = self._device_runner()
         passes = max(1, -(-self.episodes_per_update // self.env.n_clusters))
-        batches, all_records = [], []
-        for _ in range(passes):
-            b, r = self.run_fleet_episodes_device()
-            batches.append(b)
-            all_records.extend(r)
-        t0 = time.perf_counter()
+        batches = [runner.run_async() for _ in range(passes)]
         if len(batches) == 1:
             b = batches[0]
         else:  # stack passes along the episode axis, still on device
             b = {k: jnp.concatenate([x[k] for x in batches], axis=0)
                  for k in batches[0]}
-        stats = self.agent.update_batch(b["states"], b["actions"],
-                                        b["rewards"])
-        upd_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        pending = self.agent.update_batch_async(b["states"], b["actions"],
+                                                b["rewards"])
+        dispatch_s = time.perf_counter() - t0
+        all_records = runner.finalize()   # host work, device update in flight
+        t1 = time.perf_counter()
+        stats = pending()
+        upd_s = dispatch_s + time.perf_counter() - t1
         return self._finish_update(stats, all_records, upd_s)
 
     def _finish_update(self, stats: dict, all_records: list,

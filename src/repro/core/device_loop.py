@@ -1,4 +1,4 @@
-"""Device-resident Algorithm 1: the fused episode batch (DESIGN.md §10).
+"""Device-resident Algorithm 1: the fused episode batch (DESIGN.md §10, §11).
 
 PR 2 put the *simulator* on device; the online loop still ran as a per-step
 Python loop — encode states cluster-by-cluster on host, decode actions in
@@ -10,7 +10,8 @@ batch (S steps × N parallel episodes) into a single jitted device program:
     for each step (lax.scan over S):
       encode    heat-map states from the carried per-node window metrics +
                 integerised lever fractions (fleet-batch running-range
-                normalisation carried through the scan)
+                normalisation carried through the scan; under a mesh the
+                range reduction is a cross-device ``pmin``/``pmax``)
       act       ``repro.core.policy._sample_actions`` (f-gated sampling, or
                 argmax when greedy) — same params, no host round-trip
       apply     integerised lever move (``DeviceLeverTable`` index
@@ -19,7 +20,10 @@ batch (S steps × N parallel episodes) into a single jitted device program:
       stabilise paper-§4.2 wait from the on-device service-term delta
       observe   ``repro.engine.fleet_jax.build_step_window`` — the
                 scan-composable window program (preroll + window + selected
-                metric emission) carrying backlog/server-occupancy/clock
+                metric emission) carrying backlog/server-occupancy/clock;
+                arrival rates are evaluated in-trace from the packed
+                ``DeviceWorkloadTable`` (§11), so Trapezoid ramps and
+                SwitchingWorkload regime flips run fused end-to-end
       reward    the window's device-computed mean (``neg_mean``) or p99
                 (``neg_p99``); no latency sample ever materialises
 
@@ -34,23 +38,48 @@ each fused batch the chosen (lever, bin) assignments are replayed into its
 ``DynamicBins`` host-side, and the next batch re-packs the table from the
 adapted binning. Inside a batch the binning is frozen.
 
-Hard gates (``DeviceEpisodeRunner.supported``): jax backend (the pallas
-window kernel is not scan-composable), constant-rate workloads (arrival
-grids must be device constants — time-varying fleets fall back to the
-per-step host loop), reward modes with a device-computed statistic.
+**Multi-device fleets (§11).** When more than one jax device is visible
+(``repro.distribution.sharding.fleet_mesh``) and N divides the device
+count, the episode program runs under ``shard_map`` with the cluster axis
+sharded ``P("fleet")``: policy params and lever/workload tables replicate,
+every per-cluster array lives shard-local, the per-shard RNG key is
+decorrelated with ``fold_in(key, axis_index)``, and the only cross-cluster
+coupling — the heat-map running range — is a per-step ``pmin``/``pmax``
+of an (M_sel,) vector. Loop-state buffers are donated, so an outer
+iteration runs as per-device programs with no host round-trips inside it.
+
+**Double-buffered dispatch (§11).** ``run_async`` enqueues the episode
+program and returns the device-resident batch immediately; ``finalize``
+blocks, adopts the queueing state and materialises the host bookkeeping
+(StepRecords + the §2.4.1 bin replay). ``Configurator._run_update_device``
+dispatches the policy-update program *between* the two, so the host-side
+adaptation work overlaps the device update. With multiple passes per
+update the passes chain device-side (pass k+1 is dispatched from pass k's
+carried state before pass k's records exist); their bin replay is deferred
+to the iteration boundary — the one-step-stale binning this implies is the
+documented IMPALA-style decoupling trade.
+
+Remaining gates (``DeviceEpisodeRunner.supported``): a device backend
+(jax or pallas — the pallas window kernel is scan-composable since §11),
+device-packable workloads (closed-form rate laws; IoT's precomputed burst
+schedule is the one roster member that falls back to the host loop), and a
+reward mode with a device-computed statistic.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core.discretize import DeviceLeverTable
 from repro.core.heatmap import node_grid_shape
 from repro.core.policy import _sample_actions
+from repro.data.workloads import pack_device_workloads, device_workload_reason
 from repro.engine.simcluster import (_LEVER_TO_PACKED, _PACKERS,
                                      service_terms_arrays)
 
@@ -94,6 +123,23 @@ def build_packed_tables(table: DeviceLeverTable,
     return out
 
 
+def env_device_reason(env) -> Optional[str]:
+    """The environment-level half of ``DeviceEpisodeRunner.supported`` —
+    usable BEFORE a configurator exists, so launchers with
+    ``--device-loop=on`` can fail fast instead of burning the offline
+    collect budget first (the per-configurator half adds the reward-mode
+    check)."""
+    if getattr(env, "n_clusters", 0) < 1:
+        return "serial TuningEnv (the fused loop is fleet-shaped)"
+    if getattr(env, "backend", "numpy") not in ("jax", "pallas"):
+        return (f"backend={getattr(env, 'backend', 'numpy')} "
+                "(needs jax or pallas)")
+    reason = device_workload_reason(env.workloads)
+    if reason is not None:
+        return f"workloads not device-packable ({reason})"
+    return None
+
+
 class DeviceEpisodeRunner:
     """Owns the fused episode program for one ``Configurator`` (lazy-built,
     cached per static shape bundle) and the host-side handoff around it."""
@@ -104,22 +150,47 @@ class DeviceEpisodeRunner:
         self._programs: dict = {}
         self._per_node = None          # device (N, nodes, M_sel) carry
         self._clock_mark: Optional[np.ndarray] = None
-        self._config_idx: Optional[np.ndarray] = None
+        self._config_idx = None        # device (N, n_levers) int carry
         self._table: Optional[DeviceLeverTable] = None
         self._bins_sig = None
         self._hw_T = 0
         self._hw_B = 0
+        self._wl_dev: Optional[dict] = None
+        self._mc_arg: Optional[dict] = None
+        #: double-buffer state: the not-yet-adopted device carry and the
+        #: dispatched-but-not-materialised episode batches of this epoch
+        self._carry = None
+        self._inflight: list[dict] = []
+        self._epoch_configs: Optional[list] = None
+        self._epoch_t0 = 0.0
         self.last_wall_s = 0.0
+        self.mesh = self._resolve_mesh()
+
+    def _resolve_mesh(self):
+        """The cluster-sharding mesh (DESIGN.md §11): an explicit ``Mesh``
+        from the configurator, or (``"auto"``) ``fleet_mesh()`` whenever the
+        fleet size divides the visible device count."""
+        opt = getattr(self.cfgr, "mesh_opt", "auto")
+        if opt in (None, "off"):
+            return None
+        from repro.distribution.sharding import fleet_mesh
+
+        mesh = fleet_mesh() if opt == "auto" else opt
+        if mesh is not None and self.env.n_clusters % mesh.size != 0:
+            if opt != "auto":
+                raise ValueError(
+                    f"fleet N={self.env.n_clusters} does not divide the "
+                    f"{mesh.size}-device mesh")
+            mesh = None
+        return mesh
 
     # ------------------------------------------------------------------ gates
     def supported(self) -> Optional[str]:
         """None when the fused loop can run; otherwise the reason for the
         per-step host-loop fallback."""
-        env = self.env
-        if getattr(env, "backend", "numpy") != "jax":
-            return f"backend={getattr(env, 'backend', 'numpy')} (needs jax)"
-        if not all(getattr(w, "constant", False) for w in env.workloads):
-            return "time-varying workloads (arrival grids must be device consts)"
+        reason = env_device_reason(self.env)
+        if reason is not None:
+            return reason
         if self.cfgr.reward_mode not in ("neg_mean", "neg_p99"):
             return f"reward_mode={self.cfgr.reward_mode} has no device statistic"
         return None
@@ -147,24 +218,32 @@ class DeviceEpisodeRunner:
     def _program(self, skey: tuple, consts: dict):
         if skey in self._programs:
             return self._programs[skey]
-        (S, T, E, sel_cols, exploit, greedy, reward_mode, win_s) = skey
-        from repro.engine.fleet_jax import build_step_window
+        (S, T, E, sel_cols, exploit, greedy, reward_mode, win_s,
+         pallas, ndev) = skey
+        from repro.engine.fleet_jax import (build_step_window,
+                                            workload_rate_grid)
 
         env = self.env
         spec = env.spec
-        step_window = build_step_window(env, sel_cols, T, E)
-        mc_dev = env._dev._mc_dev
+        step_window = build_step_window(env, sel_cols, T, E, pallas=pallas)
         nodes = env.n_nodes
         r, c = node_grid_shape(nodes)
         rc = r * c
         M_sel = len(sel_cols)
         cc_pairs = consts["cc_pairs"]            # [(key, lever_idx)] static
         ranked_g = consts["ranked_g"]            # (n_ranked,) global lever idx
+        mesh = self.mesh if ndev else None
+        ax = mesh.axis_names[0] if mesh is not None else None
 
         def program(params, key, config_idx, backlog, sfree, clock,
-                    last_service, reconfigs, lo, hi, per_node, rate, size, f,
-                    tabs, kind_code, n_valid, reboot_f, rejit_f):
+                    last_service, reconfigs, lo, hi, per_node, wl, f,
+                    tabs, kind_code, n_valid, reboot_f, rejit_f, mc, emitF):
             TRACE_COUNTS[skey] = TRACE_COUNTS.get(skey, 0) + 1
+            # decorrelate the per-shard RNG streams; the unsharded program
+            # folds shard ordinal 0 so a 1-device mesh replays it exactly
+            # (the shard_map-plumbing pin in tests/test_device_loop.py)
+            key = jax.random.fold_in(
+                key, jax.lax.axis_index(ax) if ax is not None else 0)
             N = config_idx.shape[0]
             rows = jnp.arange(N)
             ranked = jnp.asarray(ranked_g, jnp.int32)
@@ -181,6 +260,9 @@ class DeviceEpisodeRunner:
                 raw = jnp.transpose(per_node, (0, 2, 1))   # (N, M_sel, nodes)
                 lo = jnp.minimum(lo, raw.min(axis=(0, 2)))
                 hi = jnp.maximum(hi, raw.max(axis=(0, 2)))
+                if ax is not None:   # fleet-global range across the shards
+                    lo = jax.lax.pmin(lo, ax)
+                    hi = jax.lax.pmax(hi, ax)
                 span = jnp.where(hi > lo, hi - lo, 1.0)
                 lo_eff = jnp.where(jnp.isfinite(lo), lo, 0.0)
                 normed = jnp.clip(
@@ -208,18 +290,23 @@ class DeviceEpisodeRunner:
                 cc = {kk: tabs[kk][config_idx[:, li]] for kk, li in cc_pairs}
 
                 # ---- loading (Kafka buffers arrivals, paper §4.2) ----
+                rate_now, _ = workload_rate_grid(wl, clock)
                 z = jax.random.normal(k_load, (N,))
                 load_s = (10.0 + 60.0 * reboot_f[l_idx]
                           + 8.0 * rejit_f[l_idx]) \
                     * (1.0 + spec.noise * jnp.abs(z))
-                backlog = backlog + rate * load_s
+                backlog = backlog + rate_now * load_s
                 clock = clock + load_s
                 sfree = jnp.maximum(sfree - load_s, 0.0)
                 reconfigs = reconfigs + 1.0
 
-                # ---- stabilisation wait from the service-term delta ----
-                s_new = service_terms_arrays(cc, mc_dev, spec, env.chips,
-                                             rate, size, xp=jnp)["service"]
+                # ---- stabilisation wait from the service-term delta (rates
+                # re-evaluated at the post-load clock, like the host's
+                # stabilisation_times after apply_configs) ----
+                rate_st, size_st = workload_rate_grid(wl, clock)
+                s_new = service_terms_arrays(cc, mc, spec, env.chips,
+                                             rate_st, size_st,
+                                             xp=jnp)["service"]
                 prev = jnp.where(last_service < 0.0, s_new, last_service)
                 rel = jnp.abs(s_new - prev) / jnp.maximum(prev, 1e-6)
                 stab = jnp.clip(30.0 + 240.0 * rel, 30.0, 180.0)
@@ -227,8 +314,8 @@ class DeviceEpisodeRunner:
 
                 # ---- fused preroll + observation window + reward ----
                 (backlog, sfree, clock), stats = step_window(
-                    k_win, backlog, sfree, clock, cc, rate, size, stab,
-                    reconfigs, win_s)
+                    k_win, backlog, sfree, clock, cc, wl, stab,
+                    reconfigs, win_s, mc=mc, F=emitF)
                 per_node = stats["per_node"]
                 if reward_mode == "neg_p99":
                     reward = -stats["p99_ms"] / 1000.0
@@ -250,23 +337,88 @@ class DeviceEpisodeRunner:
             outs = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), outs)
             return carry, outs
 
-        prog = jax.jit(program)
+        donate = tuple(range(2, 11))   # config_idx .. per_node (loop state)
+        if mesh is not None:
+            from jax.experimental.shard_map import shard_map
+
+            pf, pr = P(mesh.axis_names[0]), P()
+            # (params, key) replicated; per-cluster loop state, workload
+            # table, model constants + emission factors sharded; lo/hi +
+            # lever tables + scalars replicated
+            in_specs = (pr, pr) + (pf,) * 6 + (pr, pr) + (pf, pf) \
+                + (pr,) * 6 + (pf, pf)
+            out_specs = ((pf,) * 6 + (pr, pr, pf), pf)
+            prog = jax.jit(shard_map(program, mesh=mesh, in_specs=in_specs,
+                                     out_specs=out_specs, check_rep=False),
+                           donate_argnums=donate)
+        else:
+            prog = jax.jit(program, donate_argnums=donate)
         self._programs[skey] = prog
         return prog
 
     # ------------------------------------------------------------------- run
     def run(self, *, explore: bool = True, greedy: bool = False):
-        """One fused episode batch. Returns ``(batch, records)`` where
-        ``batch`` holds the device-resident (N, S) states/actions/rewards
-        for ``ReinforceAgent.update_batch`` and ``records`` are the
-        host-materialised ``StepRecord``s (cluster-major, matching the
-        per-step host loop's ordering)."""
-        from repro.core.configurator import StepRecord
+        """One fused episode batch, synchronously. Returns ``(batch,
+        records)`` where ``batch`` holds the device-resident (N, S)
+        states/actions/rewards for ``ReinforceAgent.update_batch`` and
+        ``records`` are the host-materialised ``StepRecord``s
+        (cluster-major, matching the per-step host loop's ordering)."""
+        batch = self.run_async(explore=explore, greedy=greedy)
+        return batch, self.finalize()
 
+    def run_async(self, *, explore: bool = True, greedy: bool = False):
+        """Dispatch one fused episode batch WITHOUT blocking on it and
+        return the device-resident (N, S) batch. Consecutive calls before
+        ``finalize`` chain on the device-carried loop state (no host
+        round-trip between passes); ``finalize`` adopts the final state and
+        materialises every pending batch's host bookkeeping."""
         cfgr, env = self.cfgr, self.env
         dev = env._dev
         N = env.n_clusters
         S = cfgr.steps_per_episode
+
+        if self._carry is None:
+            args = self._fresh_inputs()
+            self._epoch_t0 = time.perf_counter()
+        else:
+            # chained pass: everything per-cluster continues from the carry;
+            # tables/workloads are the epoch's (binning frozen until the
+            # finalize replay — the §11 double-buffer contract)
+            (config_idx, backlog, sfree, clock, last_service, reconfigs,
+             lo, hi, per_node) = self._carry
+            args = (config_idx, backlog, sfree, clock, last_service,
+                    reconfigs, lo, hi, per_node)
+
+        T, E = self._tick_budget()
+        exploit = cfgr.agent.exploit_ready(explore=explore)
+        greedy = bool(greedy or not explore)
+        pallas = bool(getattr(dev, "pallas", False))
+        skey = (S, T, E, self._sel_cols, exploit, greedy, cfgr.reward_mode,
+                float(cfgr.window_s), pallas,
+                self.mesh.size if self.mesh is not None else 0)
+        prog = self._program(skey, {"cc_pairs": self._cc_pairs,
+                                    "ranked_g": self._ranked_g})
+
+        with warnings.catch_warnings():
+            # fresh-epoch inputs arrive host-committed; their donation only
+            # becomes effective once the carried buffers chain device-side
+            warnings.filterwarnings("ignore", message="Some donated buffers")
+            carry, outs = prog(
+                cfgr.agent.params, dev._next_key(), *args,
+                self._wl_dev, jnp.float32(cfgr.agent.f), self._tabs,
+                self._kind_code, self._n_valid, self._reboot_f,
+                self._rejit_f, self._mc_arg, self._emitF)
+        self._carry = carry
+        self._inflight.append({"outs": outs, "S": S})
+        return {"states": outs["states"], "actions": outs["actions"],
+                "rewards": outs["rewards"]}
+
+    def _fresh_inputs(self) -> tuple:
+        """Host-side packing for the first batch of an epoch: re-pack the
+        integerised lever table from the (possibly adapted) oracle, pack the
+        workload table, borrow the engine's queueing state."""
+        cfgr, env = self.cfgr, self.env
+        dev = env._dev
 
         # re-pack the integerised table from the (possibly adapted) oracle,
         # padded up the bin ladder so between-batch splits keep the shapes
@@ -277,18 +429,22 @@ class DeviceEpisodeRunner:
         B_pad = max(_bucket(table.max_bins, _BIN_BUCKETS), self._hw_B)
         self._hw_B = B_pad
         packed_tabs = build_packed_tables(table, pad_to=B_pad)
-        cc_pairs = tuple((k, li) for k, li, _ in packed_tabs)
-        tabs = {k: jnp.asarray(tab) for k, li, tab in packed_tabs}
-        kind_code = jnp.asarray(table.kind_code)
-        n_valid = jnp.asarray(table.n_valid)
-        reboot_f = jnp.asarray([1.0 if s.reboot else 0.0
-                                for s in table.specs], jnp.float32)
-        rejit_f = jnp.asarray(
+        self._cc_pairs = tuple((k, li) for k, li, _ in packed_tabs)
+        self._tabs = {k: jnp.asarray(tab) for k, li, tab in packed_tabs}
+        self._kind_code = jnp.asarray(table.kind_code)
+        self._n_valid = jnp.asarray(table.n_valid)
+        self._reboot_f = jnp.asarray([1.0 if s.reboot else 0.0
+                                      for s in table.specs], jnp.float32)
+        self._rejit_f = jnp.asarray(
             [1.0 if s.group in ("kernel", "memory", "parallel") else 0.0
              for s in table.specs], jnp.float32)
-        ranked_g = tuple(table.index_of[n] for n in cfgr.levers)
-
+        self._ranked_g = tuple(table.index_of[n] for n in cfgr.levers)
+        if self._wl_dev is None:
+            tbl = pack_device_workloads(env.workloads)
+            self._wl_dev = {k: jnp.asarray(v)
+                            for k, v in tbl.asdict().items()}
         configs = env.current_configs()
+        self._epoch_configs = configs
         # re-indexing N configs through 109 levers costs ~0.1 s at N=1024;
         # between consecutive fused batches the configs are exactly what the
         # previous batch wrote, so reuse its final index array unless the
@@ -300,115 +456,155 @@ class DeviceEpisodeRunner:
         if (self._config_idx is not None and sig == self._bins_sig
                 and self._clock_mark is not None
                 and np.array_equal(self._clock_mark, env.clock)):
-            config_idx = jnp.asarray(self._config_idx)
+            config_idx = self._config_idx
         else:
             config_idx = jnp.asarray(table.index_configs(configs))
         self._bins_sig = sig
 
-        sel_cols = tuple(env.metric_names.index(m)
-                         for m in cfgr.hspec.metric_names)
+        self._sel_cols = tuple(env.metric_names.index(m)
+                               for m in cfgr.hspec.metric_names)
+        # per-cluster emission factors for the selected columns — a program
+        # ARG (not a closure) so the mesh path can shard its cluster axis
+        self._emitF = jnp.asarray(
+            env._emit_factor[:, :, np.asarray(self._sel_cols)], jnp.float32)
+        if self.mesh is not None:
+            # pre-place the static inputs in their program shardings so the
+            # per-dispatch path never re-broadcasts them (engine-owned model
+            # constants get a sharded shadow copy, made once)
+            from jax.sharding import NamedSharding
+
+            from repro.distribution.sharding import fleet_sharding
+
+            rep = NamedSharding(self.mesh, P())
+            shd = fleet_sharding(self.mesh)
+            self._tabs = jax.device_put(self._tabs, rep)
+            self._kind_code = jax.device_put(self._kind_code, rep)
+            self._n_valid = jax.device_put(self._n_valid, rep)
+            self._reboot_f = jax.device_put(self._reboot_f, rep)
+            self._rejit_f = jax.device_put(self._rejit_f, rep)
+            self._wl_dev = jax.device_put(self._wl_dev, shd)
+            self._emitF = jax.device_put(self._emitF, shd)
+            if self._mc_arg is None:
+                self._mc_arg = jax.device_put(dev._mc_dev, shd)
+        else:
+            self._mc_arg = dev._mc_dev
         # carried per-node metrics: reuse the previous batch's final window
         # unless someone stepped the env in between (clock moved)
         if (self._per_node is None or self._clock_mark is None
                 or not np.array_equal(self._clock_mark, env.clock)):
             stats = env.observe_stats(cfgr.window_s)
-            self._per_node = stats["per_node"][:, :, np.asarray(sel_cols)]
+            self._per_node = jnp.asarray(
+                np.asarray(stats["per_node"])[:, :, np.asarray(self._sel_cols)])
         per_node = self._per_node
 
         backlog, sfree, clock = dev.loop_state()
         last_service = np.where(np.isnan(env.last_service), -1.0,
                                 env.last_service)
-        rate_np, size_np = env._rates_now()
         rng_range = cfgr.encoder._range
+        return (config_idx, backlog, sfree, clock,
+                jnp.asarray(last_service, jnp.float32),
+                jnp.asarray(env.reconfigs, jnp.float32),
+                jnp.asarray(rng_range.lo, jnp.float32),
+                jnp.asarray(rng_range.hi, jnp.float32), per_node)
 
-        T, E = self._tick_budget()
-        exploit = cfgr.agent.exploit_ready(explore=explore)
-        greedy = bool(greedy or not explore)
-        skey = (S, T, E, sel_cols, exploit, greedy, cfgr.reward_mode,
-                float(cfgr.window_s))
-        prog = self._program(skey, {"cc_pairs": cc_pairs,
-                                    "ranked_g": ranked_g})
-
-        t0 = time.perf_counter()
-        carry, outs = prog(
-            cfgr.agent.params, dev._next_key(), config_idx,
-            backlog, sfree, clock,
-            jnp.asarray(last_service, jnp.float32),
-            jnp.asarray(env.reconfigs, jnp.float32),
-            jnp.asarray(rng_range.lo, jnp.float32),
-            jnp.asarray(rng_range.hi, jnp.float32),
-            per_node, jnp.asarray(rate_np, jnp.float32),
-            jnp.asarray(size_np, jnp.float32), jnp.float32(cfgr.agent.f),
-            tabs, kind_code, n_valid, reboot_f, rejit_f)
-        outs = jax.block_until_ready(outs)
-        self.last_wall_s = time.perf_counter() - t0
+    # -------------------------------------------------------------- finalize
+    def finalize(self) -> list:
+        """Block on the epoch's dispatched batches, hand the queueing state
+        back to the engine, materialise every batch's ``StepRecord``s and
+        replay the chosen bins into the adaptive oracle (§2.4.1, batch
+        order). Returns the records, cluster-major per batch."""
+        if not self._inflight:
+            return []
+        cfgr, env = self.cfgr, self.env
+        inflight, self._inflight = self._inflight, []
+        carry, self._carry = self._carry, None
+        jax.block_until_ready(inflight[-1]["outs"])
+        self.last_wall_s = time.perf_counter() - self._epoch_t0
+        total_steps = sum(e["S"] for e in inflight) * env.n_clusters
 
         # ---- hand the queueing state back to the engine -------------------
         (config_idx_f, backlog_f, sfree_f, clock_f, last_service_f,
          reconfigs_f, lo_f, hi_f, per_node_f) = carry
-        dev.adopt_loop_state(backlog_f, sfree_f, clock_f)
+        env._dev.adopt_loop_state(backlog_f, sfree_f, clock_f)
         env.reconfigs[:] = np.asarray(reconfigs_f, np.int64)
         env.last_service[:] = np.asarray(last_service_f, np.float64)
+        rng_range = cfgr.encoder._range
         rng_range.lo = np.asarray(lo_f, np.float64)
         rng_range.hi = np.asarray(hi_f, np.float64)
         self._per_node = per_node_f
+        self._config_idx = config_idx_f
         self._clock_mark = env.clock.copy()
 
-        # ---- materialise StepRecords ONCE per episode batch ---------------
+        configs = self._epoch_configs
+        records: list = []
+        gen_s = self.last_wall_s / max(total_steps, 1)
+        for entry in inflight:
+            configs = self._materialise(entry, configs, records, gen_s)
+        env.configs = configs
+        env.invalidate()
+        cfgr._last_fleet_windows = None   # host-loop cache is stale now
+        return records
+
+    def _materialise(self, entry: dict, configs: list, records: list,
+                     gen_s: float) -> list:
+        """StepRecords + §2.4.1 bin replay for ONE batch; returns the
+        batch's final config dicts (the next chained batch starts there)."""
+        env, table = self.env, self._table
+        outs, S = entry["outs"], entry["S"]
+        N = env.n_clusters
+        # bulk device->host pulls, then C-speed list conversion: the record
+        # loop below touches every element once and python-float access via
+        # tolist() is ~5x cheaper than per-element np scalar indexing
         lever = np.asarray(outs["lever"])            # (N, S)
         new_bin = np.asarray(outs["bin"])
-        rewards = np.asarray(outs["rewards"])
-        p99 = np.asarray(outs["p99_ms"])
-        clock_s = np.asarray(outs["clock_s"])
-        load_s = np.asarray(outs["load_s"])
-        stab_s = np.asarray(outs["stab_s"])
-        actions = np.asarray(outs["actions"])
-        gen_s = self.last_wall_s / max(S * N, 1)
+        lever_l, bin_l = lever.tolist(), new_bin.tolist()
+        rewards = np.asarray(outs["rewards"]).tolist()
+        p99 = np.asarray(outs["p99_ms"]).tolist()
+        clock_s = np.asarray(outs["clock_s"]).tolist()
+        load_s = np.asarray(outs["load_s"]).tolist()
+        stab_s = np.asarray(outs["stab_s"]).tolist()
+        directions = (1 - 2 * (np.asarray(outs["actions"]) % 2)).tolist()
+        from repro.core.configurator import StepRecord
+
         # the action set only reaches a few levers × bins: memoise the decode
         # instead of 5k+ value_of calls per batch
         val_cache: dict = {}
         names = table.names
-        directions = 1 - 2 * (actions % 2)
-        records = []
         final_configs = []
         for i in range(N):
             cfg = configs[i]
+            lv_i, bn_i, dir_i = lever_l[i], bin_l[i], directions[i]
+            rw_i, p_i, ck_i = rewards[i], p99[i], clock_s[i]
+            ld_i, st_i = load_s[i], stab_s[i]
             for t in range(S):
-                li = int(lever[i, t])
-                b = int(new_bin[i, t])
+                li, b = lv_i[t], bn_i[t]
                 val = val_cache.get((li, b))
                 if val is None:
                     val = val_cache[(li, b)] = table.value_of(li, b)
                 cfg = dict(cfg)
                 cfg[names[li]] = val
                 records.append(StepRecord(
-                    lever=names[li], direction=int(directions[i, t]),
-                    config=cfg, reward=float(rewards[i, t]),
-                    p99_ms=float(p99[i, t]), clock_s=float(clock_s[i, t]),
+                    lever=names[li], direction=dir_i[t],
+                    config=cfg, reward=rw_i[t],
+                    p99_ms=p_i[t], clock_s=ck_i[t],
                     phases={"generation_s": gen_s,
-                            "loading_s": float(load_s[i, t]),
-                            "stabilisation_s": float(stab_s[i, t]),
+                            "loading_s": ld_i[t],
+                            "stabilisation_s": st_i[t],
                             "update_s": 0.0}))
             final_configs.append(dict(cfg))
-        env.configs = final_configs
-        env.invalidate()
-        self._config_idx = np.asarray(config_idx_f)
-        cfgr._last_fleet_windows = None   # host-loop cache is stale now
 
         # ---- replay the chosen bins into the adaptive oracle ---------------
         # (paper-§2.4.1 split/extend/merge runs host-side BETWEEN batches;
-        # the next run() re-packs the table from the adapted binning).
-        # Step-major, like the host loop visits assignments.
-        bins = cfgr.disc.bins
-        dyn_of = [bins.get(nm) for nm in names]
-        lever_sm, bin_sm = lever.T, new_bin.T          # (S, N)
-        for t in range(S):
-            lt, bt = lever_sm[t], bin_sm[t]
-            for i in range(N):
-                dyn = dyn_of[lt[i]]
-                if dyn is not None:
-                    dyn.record(bt[i])
-
-        batch = {"states": outs["states"], "actions": outs["actions"],
-                 "rewards": outs["rewards"]}
-        return batch, records
+        # the next epoch re-packs the table from the adapted binning).
+        # Step-major, like the host loop visits assignments; each lever's
+        # subsequence goes through ONE batched record_many (which falls back
+        # to the exact per-assignment loop whenever a rule could fire
+        # mid-batch) instead of N·S python record() calls.
+        bins = self.cfgr.disc.bins
+        lever_sm = lever.T.ravel()        # (S·N,) step-major
+        bin_sm = new_bin.T.ravel()
+        for li in np.unique(lever_sm):
+            dyn = bins.get(names[li])
+            if dyn is not None:
+                dyn.record_many(bin_sm[lever_sm == li])
+        return final_configs

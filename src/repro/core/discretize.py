@@ -74,6 +74,12 @@ class LeverSpec:
         return int(round(d)) if self.kind == "int" else float(d)
 
 
+def _trailing_run(mask: np.ndarray) -> int:
+    """Length of the trailing True run of a boolean sequence."""
+    nz = np.nonzero(~mask)[0]
+    return int(mask.size if nz.size == 0 else mask.size - 1 - nz[-1])
+
+
 class DynamicBins:
     """Adaptive binning state for one continuous lever."""
 
@@ -170,6 +176,68 @@ class DynamicBins:
             self._split()
             self._same_streak = 0
         self._maybe_merge()
+
+    def record_many(self, bins_seq) -> None:
+        """Batched ``record`` for the §10/§11 fused-loop replay: one call per
+        (lever, episode batch) instead of N·S python calls.
+
+        When NO adaptation rule can possibly fire inside the batch (checked
+        conservatively from the current streak/idle counters and the batch
+        length — always true for frozen-bin runs and for any batch shorter
+        than the remaining thresholds), the counter updates collapse to
+        vectorised numpy with an end-state IDENTICAL to the per-assignment
+        loop (``tests/test_device_table.py`` pins this). Otherwise it falls
+        back to that loop, preserving the exact mid-sequence split/extend/
+        merge order."""
+        b = np.asarray(bins_seq, np.int64)
+        K = b.size
+        if K == 0:
+            return
+        # rule feasibility mirrors record(), so saturated-but-unfireable
+        # counters cannot force the per-call fallback on every batch
+        # forever: extension is gated on the hard bounds (a lever pinned at
+        # its bound grows an unbounded streak record() never acts on), and
+        # the merge term asks whether an ADJACENT idle pair could cross the
+        # threshold within this batch (a lone idle bin between two busy
+        # neighbours — or any idle bin at n_bins <= 4 — can never merge,
+        # however large its own counter grows)
+        hard_lo, hard_hi = self.spec.resolved_hard()
+        can_top = self._fromlin(self._edges[-1] + self.delta) <= hard_hi
+        can_bot = self._fromlin(self._edges[0] - self.delta) >= hard_lo
+        su = self._since_used
+        pair_idle = (int(np.minimum(su[:-1], su[1:]).max(initial=0))
+                     if self.n_bins > 4 else -10**18)
+        might_adapt = (
+            (can_top and self._top_streak + K >= self.extend_after)
+            or (can_bot and self._bot_streak + K >= self.extend_after)
+            or self._same_streak + K >= self.split_after
+            or pair_idle + K >= self.merge_after)
+        if might_adapt:
+            for bi in b.tolist():
+                self.record(bi)
+            return
+        b = np.clip(b, 0, self.n_bins - 1)
+        np.add.at(self._hits, b, 1)
+        # since_used: bins hit in the batch reset at their LAST hit position
+        # (numpy fancy assignment keeps the last occurrence), others age K
+        last_pos = np.full(self.n_bins, -1, np.int64)
+        last_pos[b] = np.arange(K)
+        self._since_used = np.where(last_pos >= 0, K - 1 - last_pos,
+                                    self._since_used + K)
+        # streaks: trailing-run arithmetic (a run broken inside the batch
+        # restarts there; an unbroken batch continues the carried streak)
+        top = self.n_bins - 1
+        t_run = _trailing_run(b == top)
+        self._top_streak = self._top_streak + K if t_run == K else t_run
+        b_run = _trailing_run(b == 0)
+        self._bot_streak = self._bot_streak + K if b_run == K else b_run
+        eq_run = _trailing_run(b[1:] == b[:-1])   # internal no-change run
+        if eq_run == K - 1:   # batch is one run: continue or restart at K
+            self._same_streak = (self._same_streak + K
+                                 if b[0] == self._last_bin else K)
+        else:                 # run restarted inside the batch (streak -> 1)
+            self._same_streak = eq_run + 1
+        self._last_bin = int(b[-1])
 
     def _extend(self, top: bool) -> None:
         d = self.delta

@@ -286,13 +286,14 @@ class ReinforceAgent:
         return bool(explore and self.n_updates >= self.f_warmup_updates)
 
     # -- learning (Algorithm 1) -----------------------------------------------
-    def update_batch(self, states, actions, rewards, mask=None) -> dict:
-        """One REINFORCE batch update from device-resident (N, T) episode
-        arrays — returns-discounting, per-step baseline, advantage
-        normalisation and the rmsprop gradient step all run as ONE jitted
-        program (``_update_step``); only the reported stats scalars are
-        pulled to host. ``mask`` marks valid steps of ragged episode batches
-        (defaults to all-valid, the fused device loop's shape)."""
+    def update_batch_async(self, states, actions, rewards, mask=None):
+        """``update_batch`` with the device dispatch decoupled from the host
+        stat pulls: the jitted update program is enqueued immediately
+        (params/opt state become its not-yet-ready device outputs — jax
+        dispatch is async) and the returned thunk blocks on the reported
+        scalars. The §11 double-buffer hook: the fused training loop runs
+        its host-side record materialisation and §2.4.1 bin replay between
+        dispatch and pull, overlapping the device update."""
         states = jnp.asarray(states, jnp.float32)
         actions = jnp.asarray(actions, jnp.int32)
         rewards = jnp.asarray(rewards, jnp.float32)
@@ -303,9 +304,23 @@ class ReinforceAgent:
         self.params, self.opt_state, loss, first = self._update_jit(
             self.params, self.opt_state, states, actions, rewards, mask)
         self.n_updates += 1
-        return {"pg_loss": float(loss), "mean_return": float(first),
-                "episodes": int(actions.shape[0]),
-                "steps": int(np.asarray(mask).sum())}
+        episodes = int(actions.shape[0])
+
+        def stats() -> dict:
+            return {"pg_loss": float(loss), "mean_return": float(first),
+                    "episodes": episodes,
+                    "steps": int(np.asarray(mask).sum())}
+
+        return stats
+
+    def update_batch(self, states, actions, rewards, mask=None) -> dict:
+        """One REINFORCE batch update from device-resident (N, T) episode
+        arrays — returns-discounting, per-step baseline, advantage
+        normalisation and the rmsprop gradient step all run as ONE jitted
+        program (``_update_step``); only the reported stats scalars are
+        pulled to host. ``mask`` marks valid steps of ragged episode batches
+        (defaults to all-valid, the fused device loop's shape)."""
+        return self.update_batch_async(states, actions, rewards, mask)()
 
     def update(self, episodes: Sequence[Trajectory]) -> dict:
         """One REINFORCE batch update from N episodes; per-step baseline is

@@ -23,6 +23,21 @@ real LocalEngine, which needs concrete arrival timestamps.
 out). The device-resident fleet engine (DESIGN.md §9) leans on this to
 evaluate a whole exploration window's (ticks × clusters) rate grid in one
 call per workload instead of one python call per tick.
+
+**Device packing (DESIGN.md §11).** The fused training loop cannot call
+python ``rate()`` per tick, so workloads whose rate law is a closed-form
+function of time expose a *device leaf*: a small integer kind code plus a
+fixed-width parameter row, with the rate law itself a ``device_rate``
+staticmethod shared between the instance ``rate()`` (numpy) and the traced
+device evaluator (``repro.engine.fleet_jax.workload_rate_grid`` dispatches
+on the kind codes with a vmapped ``lax.switch``). ``SwitchingWorkload``
+packs as TWO leaf slots plus its period — the regime flip is evaluated on
+device from the carried clock. ``pack_device_workloads`` compiles an
+N-cluster fleet into one ``DeviceWorkloadTable`` of ``(N,)``/``(N, P)``
+columns, mirroring how ``DeviceLeverTable`` packs the lever space.
+``IoTWorkload`` is not packable (its burst schedule is a 512-entry
+precomputed host array); ``device_workload_reason`` names the offender so
+``DeviceEpisodeRunner.supported`` can report it.
 """
 from __future__ import annotations
 
@@ -31,6 +46,10 @@ from dataclasses import dataclass
 from typing import Iterator, Optional, Sequence
 
 import numpy as np
+
+#: parameter columns per device-leaf row (max over the leaf kinds; unused
+#: trailing columns are zero)
+DEVICE_LEAF_PARAMS = 4
 
 
 def _np_of(t):
@@ -74,11 +93,26 @@ class Event:
 class Workload:
     name = "base"
 
+    #: device-leaf kind code (index into the ``lax.switch`` branch table of
+    #: ``repro.engine.fleet_jax.workload_rate_grid``); None = not packable
+    DEVICE_KIND: Optional[int] = None
+
     def rate(self, t):  # events / second; t scalar or (…,) time array
         raise NotImplementedError
 
     def mean_size(self, t):  # MB; t scalar or (…,) time array
         return _const_like(t, 0.5)
+
+    def device_leaf(self) -> Optional[tuple[int, list, float]]:
+        """(kind_code, params row, mean event size MB) when this workload's
+        rate law is closed-form in time (device-packable); None otherwise."""
+        if self.DEVICE_KIND is None:
+            return None
+        return (self.DEVICE_KIND, self._device_params(),
+                float(self.mean_size(0.0)))
+
+    def _device_params(self) -> list:  # pragma: no cover - leaf override
+        raise NotImplementedError
 
     def sample_events(self, t0: float, t1: float, rng: np.random.Generator,
                       max_events: int = 200_000) -> list[Event]:
@@ -104,6 +138,15 @@ class PoissonWorkload(Workload):
     # time-invariant rate/size: lets the fleet sim hoist rate() out of the
     # per-tick loop (repro.engine.simcluster.FleetCore.observe_fleet)
     constant = True
+    DEVICE_KIND = 0
+
+    @staticmethod
+    def device_rate(p, t, xp=np):
+        """rate(t) from a packed parameter row (shared host/device law)."""
+        return p[..., 0] + 0.0 * t
+
+    def _device_params(self) -> list:
+        return [self.lam]
 
     def rate(self, t):
         return _const_like(t, self.lam)
@@ -121,15 +164,26 @@ class TrapezoidWorkload(Workload):
     event_size_mb: float = 0.5
     name: str = "trapezoid"
 
+    DEVICE_KIND = 1
+
+    @staticmethod
+    def device_rate(p, t, xp=np):
+        """Ramp/plateau/ramp rate law from a packed [base, peak, ramp_s,
+        plateau_s] row — ONE implementation for the numpy oracle and the
+        traced device grid (DESIGN.md §11)."""
+        base, peak, ramp, plateau = (p[..., i] for i in range(4))
+        u = t % (2.0 * ramp + plateau)
+        up = base + (peak - base) * u / ramp
+        down = peak - (peak - base) * (u - ramp - plateau) / ramp
+        return xp.where(u < ramp, up, xp.where(u < ramp + plateau, peak, down))
+
+    def _device_params(self) -> list:
+        return [self.base, self.peak, self.ramp_s, self.plateau_s]
+
     def rate(self, t):
         xp = _np_of(t)
-        period = 2 * self.ramp_s + self.plateau_s
-        u = xp.asarray(t) % period
-        up = self.base + (self.peak - self.base) * u / self.ramp_s
-        down = self.peak - (self.peak - self.base) \
-            * (u - self.ramp_s - self.plateau_s) / self.ramp_s
-        r = xp.where(u < self.ramp_s, up,
-                     xp.where(u < self.ramp_s + self.plateau_s, self.peak, down))
+        r = self.device_rate(np.asarray(self._device_params()),
+                             xp.asarray(t), xp)
         return float(r) if _scalar_in(t) else r
 
     def mean_size(self, t):
@@ -147,10 +201,21 @@ class YahooAdsWorkload(Workload):
     n_campaigns: int = 100
     name: str = "yahoo_ads"
 
+    DEVICE_KIND = 2
+
+    @staticmethod
+    def device_rate(p, t, xp=np):
+        """Diurnal sine law from a packed [base_rate, amp, day_s] row."""
+        return p[..., 0] * (1.0 + p[..., 1]
+                            * xp.sin(2.0 * np.pi * t / p[..., 2]))
+
+    def _device_params(self) -> list:
+        return [self.base_rate, self.diurnal_amp, self.day_s]
+
     def rate(self, t):
         xp = _np_of(t)
-        r = self.base_rate * (1.0 + self.diurnal_amp
-                              * xp.sin(2 * np.pi * xp.asarray(t) / self.day_s))
+        r = self.device_rate(np.asarray(self._device_params()),
+                             xp.asarray(t), xp)
         return float(r) if _scalar_in(t) else r
 
     def mean_size(self, t):
@@ -213,6 +278,109 @@ class SwitchingWorkload(Workload):
             return self.active(float(t)).mean_size(float(t))
         return _np_of(t).where(self._is_a(t), self.a.mean_size(t),
                                self.b.mean_size(t))
+
+    def device_slots(self) -> Optional[tuple]:
+        """(leaf_a, leaf_b, period_s) when both members are device leaves —
+        the regime flip itself runs on device (``(t // period) % 2`` on the
+        carried clock, matching ``_is_a`` exactly)."""
+        la, lb = self.a.device_leaf(), self.b.device_leaf()
+        if la is None or lb is None:
+            return None
+        return la, lb, float(self.period_s)
+
+
+# --------------------------------------------------------------------------
+# device workload tables (DESIGN.md §11)
+# --------------------------------------------------------------------------
+
+#: kind code -> leaf class; ``workload_rate_grid`` builds its ``lax.switch``
+#: branch table from this in code order, so codes must be dense from 0.
+DEVICE_LEAF_CLASSES: dict[int, type] = {
+    PoissonWorkload.DEVICE_KIND: PoissonWorkload,
+    TrapezoidWorkload.DEVICE_KIND: TrapezoidWorkload,
+    YahooAdsWorkload.DEVICE_KIND: YahooAdsWorkload,
+}
+
+
+@dataclass
+class DeviceWorkloadTable:
+    """An N-cluster fleet's workloads packed into per-cluster parameter
+    columns — the arrival-process twin of ``DeviceLeverTable``. Two leaf
+    slots per cluster: non-switching workloads fill slot A and set
+    ``period_s = inf`` (``t // inf == 0`` keeps slot A active forever);
+    ``SwitchingWorkload`` fills both slots. Kind codes index the shared
+    ``device_rate`` branch table (``DEVICE_LEAF_CLASSES``)."""
+
+    kind_a: np.ndarray    # (N,) int32 leaf kind codes
+    params_a: np.ndarray  # (N, DEVICE_LEAF_PARAMS) f32
+    size_a: np.ndarray    # (N,) f32 mean event size, MB
+    kind_b: np.ndarray    # (N,) slot B (== slot A when the cluster never switches)
+    params_b: np.ndarray
+    size_b: np.ndarray
+    period_s: np.ndarray  # (N,) f32; +inf => slot A only
+
+    def asdict(self) -> dict[str, np.ndarray]:
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)}
+
+    def rates(self, t: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Numpy reference evaluation at ``t`` of shape (..., N) — the host
+        twin of ``repro.engine.fleet_jax.workload_rate_grid``, used by the
+        regression tests that pin the table against ``Workload.rate``."""
+        t = np.asarray(t, float)
+        ra = _eval_leaf_np(self.kind_a, self.params_a, t)
+        rb = _eval_leaf_np(self.kind_b, self.params_b, t)
+        use_a = (t // self.period_s) % 2.0 < 0.5
+        return (np.where(use_a, ra, rb),
+                np.where(use_a, self.size_a, self.size_b))
+
+
+def _eval_leaf_np(kind: np.ndarray, params: np.ndarray,
+                  t: np.ndarray) -> np.ndarray:
+    out = np.zeros(np.broadcast_shapes(t.shape, kind.shape), float)
+    for code, cls in DEVICE_LEAF_CLASSES.items():
+        with np.errstate(invalid="ignore", divide="ignore"):
+            r = cls.device_rate(params, t, np)   # rows of other kinds: junk
+        out = np.where(kind == code, r, out)
+    return out
+
+
+def device_workload_reason(workloads: Sequence[Workload]) -> Optional[str]:
+    """None when every workload packs into a ``DeviceWorkloadTable``;
+    otherwise which cluster blocks it and why (the ``supported()`` string)."""
+    for i, w in enumerate(workloads):
+        if isinstance(w, SwitchingWorkload):
+            if w.device_slots() is None:
+                return (f"cluster {i}: switching members "
+                        f"({w.a.name}/{w.b.name}) are not device leaves")
+        elif w.device_leaf() is None:
+            return f"cluster {i}: workload {w.name!r} has no device rate law"
+    return None
+
+
+def pack_device_workloads(workloads: Sequence[Workload]) -> DeviceWorkloadTable:
+    reason = device_workload_reason(workloads)
+    if reason is not None:
+        raise ValueError(reason)
+    n = len(workloads)
+    P = DEVICE_LEAF_PARAMS
+    kind = np.zeros((2, n), np.int32)
+    params = np.zeros((2, n, P), np.float32)
+    size = np.zeros((2, n), np.float32)
+    period = np.full(n, np.inf, np.float32)
+    for i, w in enumerate(workloads):
+        if isinstance(w, SwitchingWorkload):
+            (ka, pa, sa), (kb, pb, sb), period[i] = w.device_slots()
+            slots = ((ka, pa, sa), (kb, pb, sb))
+        else:
+            leaf = w.device_leaf()
+            slots = (leaf, leaf)
+        for s, (k, p, sz) in enumerate(slots):
+            kind[s, i] = k
+            params[s, i, :len(p)] = p
+            size[s, i] = sz
+    return DeviceWorkloadTable(kind[0], params[0], size[0],
+                               kind[1], params[1], size[1], period)
 
 
 #: Default roster used to build heterogeneous fleets: a spread of steady,

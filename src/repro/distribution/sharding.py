@@ -15,6 +15,12 @@ Design (DESIGN.md §4):
   *sequence* dim instead; GSPMD turns the masked softmax over the sharded dim
   into partial reductions + a tiny all-reduce — flash-decoding/split-K for
   free, no shard_map needed.
+* The fused fleet training loop (DESIGN.md §11) shards its *cluster* axis
+  over a 1-D ``fleet_mesh``: every per-cluster array carries
+  ``P("fleet")``, the policy/lever tables replicate, and the only
+  cross-cluster coupling (the heat-map running range) becomes a
+  ``pmin``/``pmax`` inside ``shard_map`` — see
+  ``repro.core.device_loop.DeviceEpisodeRunner``.
 """
 from __future__ import annotations
 
@@ -46,6 +52,28 @@ class MeshSpec:
         names = mesh.axis_names
         data = tuple(n for n in names if n in ("pod", "data"))
         return MeshSpec(data=data, model="model" if "model" in names else names[-1])
+
+
+#: axis name of the 1-D cluster-sharding mesh (the fused fleet loop)
+FLEET_AXIS = "fleet"
+
+
+def fleet_mesh(n_devices: Optional[int] = None) -> Optional[Mesh]:
+    """1-D mesh over the local devices for cluster-axis fleet sharding
+    (axis ``"fleet"``); None on single-device hosts — the fused loop then
+    stays a plain single-device program. On CPU,
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=K`` materialises K
+    host devices (the CI multi-device smoke job runs this way)."""
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else min(int(n_devices), len(devs))
+    if n <= 1:
+        return None
+    return Mesh(np.asarray(devs[:n]), (FLEET_AXIS,))
+
+
+def fleet_sharding(mesh: Mesh) -> NamedSharding:
+    """Cluster-axis NamedSharding for fleet arrays (leading N axis)."""
+    return NamedSharding(mesh, P(FLEET_AXIS))
 
 
 def tp_size(mesh: Mesh, ms: MeshSpec) -> int:

@@ -756,10 +756,44 @@ class DeviceFleetEngine:
 
 
 # --------------------------------------------------------------------------
+# device workload evaluation (DESIGN.md §11)
+# --------------------------------------------------------------------------
+
+def workload_rate_grid(wl: dict, times) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Evaluate a packed ``DeviceWorkloadTable`` (as a dict of device arrays)
+    at ``times`` of shape (..., N) -> (rate, mean_size), both (..., N).
+
+    Per cluster, each slot's leaf law is dispatched with ``lax.switch`` on
+    its kind code (the branch table is the shared ``device_rate``
+    staticmethods the numpy ``Workload.rate`` methods also call), and the
+    SwitchingWorkload regime flip selects between the two slots from the
+    carried clock — ``(t // period) % 2``, exactly ``SwitchingWorkload._is_a``.
+    Non-switching rows carry ``period = inf`` (``t // inf == 0``)."""
+    from repro.data.workloads import DEVICE_LEAF_CLASSES
+
+    branches = [functools.partial(cls.device_rate, xp=jnp)
+                for _, cls in sorted(DEVICE_LEAF_CLASSES.items())]
+
+    def one(kind_a, pa, sa, kind_b, pb, sb, period, t):
+        ra = jax.lax.switch(kind_a, branches, pa, t)
+        rb = jax.lax.switch(kind_b, branches, pb, t)
+        use_a = (t // period) % 2.0 < 0.5
+        return jnp.where(use_a, ra, rb), jnp.where(use_a, sa, sb)
+
+    rate, size = jax.vmap(one, in_axes=(0, 0, 0, 0, 0, 0, 0, -1),
+                          out_axes=-1)(
+        wl["kind_a"], wl["params_a"], wl["size_a"],
+        wl["kind_b"], wl["params_b"], wl["size_b"], wl["period_s"],
+        jnp.asarray(times, jnp.float32))
+    return rate, size
+
+
+# --------------------------------------------------------------------------
 # scan-composable window step (DESIGN.md §10)
 # --------------------------------------------------------------------------
 
-def build_step_window(core, sel_cols: tuple, T: int, E: int):
+def build_step_window(core, sel_cols: tuple, T: int, E: int,
+                      *, pallas: bool = False):
     """Build the *scan-composable* window step for the fused training loop.
 
     Unlike ``_window_program`` (one jitted dispatch per observe call, tick
@@ -775,7 +809,7 @@ def build_step_window(core, sel_cols: tuple, T: int, E: int):
     ``batch_interval_s`` below ``(window+stab)/T`` sees a truncated window,
     the documented §10 deviation), ``E`` the emission-slot budget.
 
-        step_window(key, backlog, sfree_rel, clock, cc, rate, size,
+        step_window(key, backlog, sfree_rel, clock, cc, wl,
                     stab_s, reconfigs, win_s)
             -> (backlog', sfree_rel', clock'), stats
 
@@ -783,8 +817,20 @@ def build_step_window(core, sel_cols: tuple, T: int, E: int):
     ``per_node`` is (N, nodes, len(sel_cols)). All latency/queue columns in
     ``sel_cols`` are grounded in the simulated mixture exactly like the §9
     window program.
+
+    ``wl`` is a packed ``DeviceWorkloadTable`` (dict of device arrays):
+    the (T, N) rate/size grids are evaluated *inside* the trace from the
+    carried clock (``workload_rate_grid``), so time-varying fleets —
+    Trapezoid ramps, SwitchingWorkload regime flips — run fused end-to-end
+    (DESIGN.md §11) instead of falling back to the per-step host loop.
+
+    ``pallas=True`` swaps the jnp tick scan for the fused
+    ``kernels.fleet_tick`` window kernel and computes the window/emission
+    statistics fully sampled over its latency-lane tiles (the §9 pallas
+    contract) — the kernel is carried through the episode ``lax.scan``
+    like any other traced op, which is what kills the old jax-only gate.
     """
-    from repro.kernels.fleet_tick import pack_tick_consts
+    from repro.kernels.fleet_tick import pack_tick_consts, window_recurrence
 
     spec, chips, nodes = core.spec, core.chips, core.n_nodes
     emc = _emission_constants()
@@ -803,12 +849,20 @@ def build_step_window(core, sel_cols: tuple, T: int, E: int):
     node_noise = core._dev.node_noise
     Sp = p99_lanes(T)
     kq = min(T * Sp, int(np.ceil(0.01 * (T * Sp - 1))) + 2)
+    S_l = lane_budget(T)             # pallas lane tiles per tick
+    kq_p = min(T * S_l, int(np.ceil(0.01 * (T * S_l - 1))) + 2)
+    interpret = _pallas_interpret() if pallas else False
     t_ax = jnp.arange(T)[:, None]
     e_ax = jnp.arange(E)[:, None]
     M_pad = M_sel + (M_sel % 2)      # normals_16bit wants an even last dim
 
-    def step_window(key, backlog, sfree_rel, clock, cc, rate, size,
-                    stab_s, reconfigs, win_s):
+    def step_window(key, backlog, sfree_rel, clock, cc, wl,
+                    stab_s, reconfigs, win_s, mc=None, F=None):
+        # mc/F default to the engine's full-fleet device copies; under a
+        # cluster-sharded mesh (§11) the caller passes the shard-local
+        # slices instead — closed-over (N,) constants can't shard
+        mc_d = mc_dev if mc is None else mc
+        F_d = F_sel if F is None else F
         N = backlog.shape[0]
         T_b = cc["T_b"]
         ee = jnp.maximum(cc["emit_every"].astype(jnp.int32), 1)
@@ -818,7 +872,7 @@ def build_step_window(core, sel_cols: tuple, T: int, E: int):
         n_ticks = n_skip + n_win
         tmask = t_ax < n_ticks[None, :]
         wmask = tmask & (t_ax >= n_skip[None, :])
-        consts = pack_tick_consts(cc, mc_dev, spec, chips, xp=jnp)
+        consts = pack_tick_consts(cc, mc_d, spec, chips, xp=jnp)
         (T_b_c, max_b, a_comp, c_coll, b_mem, kvp, ovh, slow_cap, backup,
          fail_frac, inflight) = tuple(consts[i] for i in range(11))
 
@@ -835,39 +889,71 @@ def build_step_window(core, sel_cols: tuple, T: int, E: int):
         fmask = u_fail < fail_frac
         slow = jnp.where(fmask, slow * 2.0, slow)
 
-        rg = jnp.broadcast_to(rate[None, :], (T, N))
-        arr = jnp.maximum(rg * T_b * (1.0 + spec.noise * z), 0.0)
-        xs = (arr, rg * spec.retention_s, slow,
-              jnp.broadcast_to(size[None, :] * TOKENS_PER_MB, (T, N)),
-              1.0 / jnp.maximum(rg, 1.0), tmask)
-        body = functools.partial(
-            _tick_body, T_b=T_b, max_b=max_b, a_comp=a_comp, c_coll=c_coll,
-            b_mem=b_mem, kvp=kvp, ovh=ovh, inflight=inflight)
-        (backlog, sfree_rel), ys = jax.lax.scan(
-            body, (backlog, sfree_rel), xs)
-        service, qd, batch, processed, blg_e = ys
+        # (T, N) arrival grids evaluated in-trace from the carried clock —
+        # tick t covers [clock + t·T_b, clock + (t+1)·T_b), the same tick
+        # start times the §9 host-side _rate_grids uses (DESIGN.md §11)
+        times = clock[None, :] + t_ax.astype(jnp.float32) * T_b[None, :]
+        rg, sg = workload_rate_grid(wl, times)
+
+        if pallas:
+            # fused fleet_tick window kernel carried through the episode
+            # scan; fully-sampled lane tiles back the window statistics
+            u_wait, z2a = split_lane_bits(
+                jax.random.bits(k_lane, (T, S_l, N), jnp.uint32))
+            (backlog, sfree_rel), ys, lat = window_recurrence(
+                backlog, sfree_rel, consts, rg, sg, z, u_strag, u_raw,
+                u_fail, tmask.astype(jnp.float32), u_wait, z2a,
+                noise=spec.noise, retention_s=spec.retention_s,
+                straggler_prob=spec.straggler_prob, slo=slo, shi=shi,
+                interpret=interpret)
+            service, qd, batch, processed, blg_e = ys
+            lat = jnp.transpose(lat, (0, 2, 1)) * 1000.0   # (T, N, S_l) ms
+        else:
+            arr = jnp.maximum(rg * T_b * (1.0 + spec.noise * z), 0.0)
+            xs = (arr, rg * spec.retention_s, slow, sg * TOKENS_PER_MB,
+                  1.0 / jnp.maximum(rg, 1.0), tmask)
+            body = functools.partial(
+                _tick_body, T_b=T_b, max_b=max_b, a_comp=a_comp,
+                c_coll=c_coll, b_mem=b_mem, kvp=kvp, ovh=ovh,
+                inflight=inflight)
+            (backlog, sfree_rel), ys = jax.lax.scan(
+                body, (backlog, sfree_rel), xs)
+            service, qd, batch, processed, blg_e = ys
 
         processed_sum = (processed * wmask).sum(axis=0)
         base_ms = (qd + service) * 1000.0
         a_ms = (T_b * 1000.0)[None, :]
         c_ms = 100.0 * service
-        # analytic window mean + lane-sampled p99 (the §9 jax path, inlined)
-        n_s = jnp.clip(batch.astype(jnp.int32), 1, _MAX_LAT_SAMPLES)
-        w_t = n_s.astype(jnp.float32) * wmask
-        mean_ms = (w_t * (base_ms + 0.5 * a_ms + _R2PI * c_ms)) \
-            .sum(axis=0) / jnp.maximum(w_t.sum(axis=0), 1e-9)
-        u_p, z_p = split_lane_bits(
-            jax.random.bits(k_lane, (T, N, Sp), jnp.uint32))
-        lat_p = base_ms[:, :, None] + a_ms[:, :, None] * u_p \
-            + c_ms[:, :, None] * z_p
-        n_sp = jnp.minimum(n_s, Sp)
-        lv = (jnp.arange(Sp)[None, None, :] < n_sp[:, :, None]) \
-            & wmask[:, :, None]
-        cnt = lv.sum(axis=(0, 2))
-        flat = jnp.where(lv, lat_p, -jnp.inf)
-        flat = jnp.transpose(flat, (1, 0, 2)).reshape(N, T * Sp)
-        top = jax.lax.top_k(flat, kq)[0]
-        p99 = _lerp_quantile(top, cnt, 99.0, descending=True)
+        if pallas:
+            # fully-sampled window stats over the kernel's lane tiles (§9)
+            n_s = jnp.clip(batch.astype(jnp.int32), 1, S_l)
+            lv = (jnp.arange(S_l)[None, None, :] < n_s[:, :, None]) \
+                & wmask[:, :, None]
+            cnt = lv.sum(axis=(0, 2))
+            mean_ms = jnp.where(lv, lat, 0.0).sum(axis=(0, 2)) \
+                / jnp.maximum(cnt, 1)
+            flat = jnp.where(lv, lat, -jnp.inf)
+            flat = jnp.transpose(flat, (1, 0, 2)).reshape(N, T * S_l)
+            top = jax.lax.top_k(flat, kq_p)[0]
+            p99 = _lerp_quantile(top, cnt, 99.0, descending=True)
+        else:
+            # analytic window mean + lane-sampled p99 (§9 jax path, inlined)
+            n_s = jnp.clip(batch.astype(jnp.int32), 1, _MAX_LAT_SAMPLES)
+            w_t = n_s.astype(jnp.float32) * wmask
+            mean_ms = (w_t * (base_ms + 0.5 * a_ms + _R2PI * c_ms)) \
+                .sum(axis=0) / jnp.maximum(w_t.sum(axis=0), 1e-9)
+            u_p, z_p = split_lane_bits(
+                jax.random.bits(k_lane, (T, N, Sp), jnp.uint32))
+            lat_p = base_ms[:, :, None] + a_ms[:, :, None] * u_p \
+                + c_ms[:, :, None] * z_p
+            n_sp = jnp.minimum(n_s, Sp)
+            lv = (jnp.arange(Sp)[None, None, :] < n_sp[:, :, None]) \
+                & wmask[:, :, None]
+            cnt = lv.sum(axis=(0, 2))
+            flat = jnp.where(lv, lat_p, -jnp.inf)
+            flat = jnp.transpose(flat, (1, 0, 2)).reshape(N, T * Sp)
+            top = jax.lax.top_k(flat, kq)[0]
+            p99 = _lerp_quantile(top, cnt, 99.0, descending=True)
 
         # ---- metric emission, selected columns only (device etick) ----
         forced = n_win < ee
@@ -879,10 +965,8 @@ def build_step_window(core, sel_cols: tuple, T: int, E: int):
         g = lambda a: jnp.take_along_axis(a, etick, axis=0)      # (E, N)
         srv_e, qd_e, batch_e = g(service), g(qd), g(batch)
         rho_e = srv_e / T_b
-        rate_e = jnp.broadcast_to(rate[None, :], (E, N))
-        size_e = jnp.broadcast_to(size[None, :], (E, N))
-        terms_e = service_terms_arrays(cc, mc_dev, spec, chips,
-                                       rate_e, size_e, batch_e, xp=jnp)
+        terms_e = service_terms_arrays(cc, mc_d, spec, chips,
+                                       g(rg), g(sg), batch_e, xp=jnp)
         s_safe = jnp.maximum(srv_e, 1e-6)
         smask_f = smask.astype(jnp.float32)
         fmask_f = fmask.astype(jnp.float32)
@@ -904,17 +988,28 @@ def build_step_window(core, sel_cols: tuple, T: int, E: int):
         ecnt = jnp.maximum(evalid.sum(axis=0), 1)                # (N,)
         emean = jnp.where(evalid[:, :, None, None], noisy, 0.0).sum(axis=0) \
             / ecnt[:, None, None]                                # (N, nodes, M_sel)
-        per_node = F_sel * emean
+        per_node = F_d * emean
         if lat_overwrite or queue_overwrite:
             n_s_e = g(n_s)
-            base_e, c_e = g(base_ms), g(c_ms)
-            a_e = T_b[None, :] * 1000.0
-            q = lambda al: base_e + al * a_e + _R2PI * c_e
-            n_f = n_s_e.astype(jnp.float32)
-            mx = base_e + a_e * n_f / (n_f + 1.0) \
-                + c_e * jnp.sqrt(2.0 * jnp.log(jnp.maximum(n_f, 2.0)))
-            stats5 = jnp.stack([q(0.5), q(0.5), q(0.95), q(0.99), mx],
-                               axis=-1)                          # (E, N, 5)
+            if pallas:
+                # sampled per-emission stats over the kernel's lane tiles
+                lat_e = jnp.take_along_axis(lat, etick[:, :, None], axis=0)
+                lv_e = jnp.arange(S_l)[None, None, :] < n_s_e[:, :, None]
+                srt = bitonic_sort_lanes(jnp.where(lv_e, lat_e, jnp.inf))
+                st = [jnp.where(lv_e, lat_e, 0.0).sum(-1) / n_s_e]
+                st += [_lerp_quantile(srt, n_s_e, q_) for q_ in _PCTS]
+                st.append(jnp.take_along_axis(
+                    srt, (n_s_e - 1)[..., None], axis=-1)[..., 0])
+                stats5 = jnp.stack(st, axis=-1)                  # (E, N, 5)
+            else:
+                base_e, c_e = g(base_ms), g(c_ms)
+                a_e = T_b[None, :] * 1000.0
+                q = lambda al: base_e + al * a_e + _R2PI * c_e
+                n_f = n_s_e.astype(jnp.float32)
+                mx = base_e + a_e * n_f / (n_f + 1.0) \
+                    + c_e * jnp.sqrt(2.0 * jnp.log(jnp.maximum(n_f, 2.0)))
+                stats5 = jnp.stack([q(0.5), q(0.5), q(0.95), q(0.99), mx],
+                                   axis=-1)                      # (E, N, 5)
             ew = jnp.where(evalid[:, :, None], stats5, 0.0).sum(axis=0) \
                 / ecnt[:, None]                                  # (N, 5)
             for j, stat_i in lat_overwrite:

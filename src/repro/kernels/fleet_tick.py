@@ -22,6 +22,15 @@ per-cluster coefficients (``pack_tick_consts``): service = ovh + tokens·A·pen
 collapse into A/B/C/ovh at config-pack time, so the per-tick hot loop does
 no table lookups. ``tests/test_fleet_jax.py`` diffs the kernel against the
 jnp scan tick.
+
+**Scan-composability (DESIGN.md §11).** ``window_recurrence`` exposes the
+kernel with the same carry contract as the jnp tick scan in
+``repro.engine.fleet_jax`` — ``(backlog, sfree_rel) -> (backlog',
+sfree_rel')`` plus the per-tick terms the summaries read — so
+``build_step_window(pallas=True)`` composes it straight into the fused
+training loop's episode ``lax.scan`` (a ``pallas_call`` is an ordinary
+traced op; nothing about the kernel is dispatch-only). That is what removed
+the fused loop's old jax-backend gate.
 """
 from __future__ import annotations
 
@@ -191,3 +200,25 @@ def fleet_tick_window(state, consts, rate, size, z, u_strag, u_raw, u_fail,
         interpret=interpret,
     )(state, consts, rate, size, z, u_strag, u_raw, u_fail, active,
       u_wait, z2a)
+
+
+def window_recurrence(backlog, sfree_rel, consts, rate, size, z, u_strag,
+                      u_raw, u_fail, active, u_wait, z2a, *, noise,
+                      retention_s, straggler_prob, slo, shi,
+                      interpret=False):
+    """The fused window kernel with the jnp tick scan's carry contract:
+
+        (backlog, sfree_rel) -> (backlog', sfree_rel'),
+        (service, queue_delay, batch, processed, backlog_after),
+        lat (T, S, N) seconds
+
+    — the drop-in pallas twin of the ``_tick_body`` scan that
+    ``repro.engine.fleet_jax.build_step_window`` carries through the fused
+    training loop's episode ``lax.scan`` (DESIGN.md §11)."""
+    state_out, ys, lat = fleet_tick_window(
+        jnp.stack([backlog, sfree_rel]), consts, rate, size, z, u_strag,
+        u_raw, u_fail, active, u_wait, z2a, noise=noise,
+        retention_s=retention_s, straggler_prob=straggler_prob, slo=slo,
+        shi=shi, interpret=interpret)
+    terms = (ys[0], ys[1], ys[2], ys[3], ys[6])
+    return (state_out[0], state_out[1]), terms, lat

@@ -36,11 +36,13 @@ def main(argv=None):
                          "(1000+-cluster fleets; statistical equivalence)")
     ap.add_argument("--device-loop", choices=["auto", "on", "off"],
                     default="auto",
-                    help="fused Algorithm-1 training loop (DESIGN.md §10): "
-                         "one jitted episode program + one jitted update per "
-                         "outer iteration. 'auto' uses it whenever the env "
-                         "supports it (jax backend, constant-rate "
-                         "workloads); 'on' fails loudly if it can't")
+                    help="fused Algorithm-1 training loop (DESIGN.md §10/§11):"
+                         " one jitted episode program + one jitted update per "
+                         "outer iteration, sharded across devices when more "
+                         "than one is visible. 'auto' uses it whenever the "
+                         "env supports it (jax/pallas backend, device-"
+                         "packable workloads) and logs the fallback reason "
+                         "once; 'on' fails loudly with that reason")
     ap.add_argument("--collect", type=int, default=1200)
     ap.add_argument("--updates", type=int, default=8)
     ap.add_argument("--steps-per-episode", type=int, default=5)
@@ -77,6 +79,15 @@ def main(argv=None):
         window = min(args.window, 6.0)  # real seconds on CPU
 
     fleet = args.env == "sim" and args.fleet > 1
+    if args.device_loop == "on":
+        # env-level gates are checkable NOW — fail before the collect
+        # budget is spent (reward-mode gate re-checked post-analysis)
+        from repro.core.device_loop import env_device_reason
+
+        env_reason = env_device_reason(env)
+        if env_reason is not None:
+            raise SystemExit(f"--device-loop=on but the fused device loop "
+                             f"cannot run: {env_reason}")
     tuner = AutoTuner(env, seed=args.seed, window_s=window)
     print(f"[collect] {args.collect} windows …")
     tuner.collect(args.collect)
@@ -101,11 +112,23 @@ def main(argv=None):
         steps_per_episode=args.steps_per_episode,
         episodes_per_update=args.episodes, window_s=window, f_exploit=args.f,
         device_loop=args.device_loop)
-    if fleet:
-        reason = cfgr.device_loop_reason()
-        print("[tune] fused device loop (§10): "
-              + ("ACTIVE — one episode program + one update program per "
-                 "outer iteration" if reason is None else f"off ({reason})"))
+    reason = cfgr.device_loop_reason()
+    if args.device_loop == "on" and reason is not None:
+        # fail BEFORE the tuning loop starts, with the supported() reason —
+        # a silent host-loop fallback here would burn the whole --updates
+        # budget at per-step host speed without anyone noticing
+        raise SystemExit(f"--device-loop=on but the fused device loop "
+                         f"cannot run: {reason}")
+    if args.device_loop == "auto" and reason is not None:
+        print(f"[tune] fused device loop (§10): off — {reason} "
+              "(per-step host loop)")
+    if fleet and reason is None:
+        runner = cfgr._device_runner()
+        mesh = runner.mesh
+        print("[tune] fused device loop (§10): ACTIVE — one episode program "
+              "+ one update program per outer iteration"
+              + (f", cluster axis sharded over {mesh.size} devices (§11)"
+                 if mesh is not None else ""))
 
     def cb(i, stats, history):
         last = history[-steps_per_update:]

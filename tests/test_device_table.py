@@ -4,7 +4,8 @@ clipping, and post-split/merge re-packing."""
 import numpy as np
 import pytest
 
-from repro.core.discretize import LeverDiscretiser, LeverSpec
+from repro.core.discretize import (DynamicBins, LeverDiscretiser,
+                                   LeverSpec)
 
 # --------------------------------------------------------------------------
 # DeviceLeverTable: integerised apply must match the dict oracle bin-for-bin
@@ -130,3 +131,77 @@ def test_table_property_walk_matches_frozen_oracle():
             assert got == pytest.approx(ref, rel=1e-12)
         else:
             assert got == ref
+
+# --------------------------------------------------------------------------
+# DynamicBins.record_many: the §11 fused-loop batched replay
+# --------------------------------------------------------------------------
+def test_record_many_matches_per_assignment_loop():
+    """``record_many`` (the §11 fused-loop batched replay) must leave a
+    DynamicBins in EXACTLY the state the per-assignment ``record`` loop
+    would — including when adaptation rules fire mid-batch (the fallback
+    path) and when they cannot (the vectorised fast path)."""
+    rng = np.random.default_rng(7)
+    for trial in range(60):
+        spec = LeverSpec("x", "float", 0.0, 10.0)
+        kw = dict(n_bins=10, split_after=int(rng.integers(2, 12)),
+                  extend_after=int(rng.integers(2, 8)),
+                  merge_after=int(rng.integers(5, 60)), seed=trial)
+        if trial % 3 == 0:      # frozen thresholds: the fast path
+            kw.update(split_after=10**9, extend_after=10**9,
+                      merge_after=10**9)
+        a = DynamicBins(spec, **kw)
+        b = DynamicBins(spec, **kw)
+        for x in rng.integers(0, 10, size=rng.integers(0, 6)).tolist():
+            a.record(x)         # nontrivial carried streak state
+            b.record(x)
+        seq = rng.integers(0, 10, size=rng.integers(1, 40))
+        if rng.random() < 0.3:  # adversarial: constant runs (split bait)
+            seq = np.full(rng.integers(1, 30), rng.integers(0, 10))
+        for x in seq.tolist():
+            a.record(x)
+        b.record_many(seq)
+        assert np.array_equal(a._edges, b._edges), trial
+        assert np.array_equal(a._hits, b._hits), trial
+        assert np.array_equal(a._since_used, b._since_used), trial
+        for f in ("_top_streak", "_bot_streak", "_same_streak", "_last_bin"):
+            assert getattr(a, f) == getattr(b, f), (trial, f)
+
+
+def test_record_many_fast_path_survives_hard_bound_saturation():
+    """A lever pinned at its hard bound grows an unbounded top streak that
+    the extend rule can never fire (record() checks feasibility) —
+    record_many must recognise that and keep its vectorised fast path
+    instead of degenerating to the per-call loop forever."""
+    spec = LeverSpec("x", "float", 0.0, 10.0, hard_lo=0.0, hard_hi=10.0)
+    dyn = DynamicBins(spec, n_bins=10, split_after=100, extend_after=3,
+                      merge_after=10**6)
+    for _ in range(50):             # saturate far past extend_after
+        dyn.record(dyn.n_bins - 1)  # hard bound blocks the extension
+    assert dyn._top_streak >= 50
+    calls = []
+    orig = dyn.record
+    dyn.record = lambda b: (calls.append(b), orig(b))  # fallback detector
+    dyn.record_many(np.array([2, 5, 2, 5, 2, 5]))
+    assert not calls, "fast path degenerated to the per-call fallback"
+
+
+def test_record_many_fast_path_survives_unmergeable_idle_bin():
+    """A lone idle bin between two busy neighbours can never merge
+    (``_maybe_merge`` needs an adjacent idle PAIR), so its unbounded
+    ``_since_used`` counter must not push record_many onto the per-call
+    fallback forever — the merge feasibility term looks at adjacent pairs,
+    not the raw max."""
+    spec = LeverSpec("x", "float", 0.0, 10.0)
+    dyn = DynamicBins(spec, n_bins=10, split_after=10**6, extend_after=10**6,
+                      merge_after=20)
+    # hit every even bin in rotation: each odd bin idles far past
+    # merge_after but has NO idle neighbour, so no merge can ever fire
+    seq = np.array([0, 2, 4, 6, 8] * 16)
+    dyn.record_many(seq)
+    assert dyn.n_bins == 10            # nothing merged
+    assert int(dyn._since_used[3]) > dyn.merge_after
+    calls = []
+    orig = dyn.record
+    dyn.record = lambda b: (calls.append(b), orig(b))
+    dyn.record_many(np.array([0, 2, 4, 6, 8]))
+    assert not calls, "fast path degenerated to the per-call fallback"

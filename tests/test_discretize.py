@@ -103,3 +103,4 @@ def test_int_lever_values_are_ints():
     cfg = disc.apply(disc.default_config(), "n", +1)
     assert isinstance(cfg["n"], int)
     assert 1 <= cfg["n"] <= 64 + 32  # may extend, but stays integral
+

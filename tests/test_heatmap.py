@@ -37,3 +37,76 @@ def test_missing_metric_defaults_to_zero():
     enc = HeatmapEncoder(spec)
     state = enc.encode({}, {})
     assert np.all(state == 0.0)
+
+
+# --------------------------------------------------------------------------
+# encode_fleet vs the host encoder under regime-switching metric ranges
+# --------------------------------------------------------------------------
+
+METRICS = ["latency_p99_ms", "latency_mean_ms", "queue_depth",
+           "device_util", "sched_queue_depth"]
+
+
+def _switching_windows(n=6, steps=3):
+    """Per-node window batches from a SwitchingWorkload fleet observed
+    ACROSS a regime flip — the λ jump moves every latency/queue metric,
+    which is exactly where the running-range normalisation had only been
+    pinned on constant-rate fleets before §11."""
+    from repro.data.workloads import PoissonWorkload, SwitchingWorkload
+    from repro.engine import FleetEnv
+
+    wls = [SwitchingWorkload(PoissonWorkload(6_000, 0.5),
+                             PoissonWorkload(14_000, 0.7), period_s=500.0)
+           for _ in range(n)]
+    env = FleetEnv(wls, seeds=list(range(n)))
+    cols = [env.metric_names.index(m) for m in METRICS]
+    batches = []
+    for _ in range(steps):          # 3×240 s straddles the 500 s flip
+        windows = env.observe(240.0)
+        batches.append(np.stack([w.node_matrix for w in windows])[:, :, cols])
+    return batches, env
+
+
+def test_encode_fleet_matches_serial_encoder_under_switching():
+    """The fleet-batch encoder must agree with the per-cluster host encoder
+    on every window of a regime-switching fleet once both have seen the
+    same value range: encode_fleet updates lo/hi from the WHOLE batch
+    before normalising, so feeding the serial encoder the batch first makes
+    the two normalisations identical — including across the flip, where the
+    running max jumps."""
+    batches, _ = _switching_windows()
+    spec = HeatmapSpec(METRICS, [], n_nodes=batches[0].shape[1])
+    fleet_enc = HeatmapEncoder(spec)
+    serial_enc = HeatmapEncoder(spec)
+    r, c = spec.grid
+    for raw in batches:
+        states = fleet_enc.encode_fleet(raw, np.zeros((raw.shape[0], 0)))
+        assert states.shape == (raw.shape[0], spec.state_dim)
+        assert (states >= 0.0).all() and (states <= 1.0).all()
+        # ranges moved with the regime: sync the serial twin, then compare
+        serial_enc._range.lo = fleet_enc._range.lo.copy()
+        serial_enc._range.hi = fleet_enc._range.hi.copy()
+        for i in range(raw.shape[0]):
+            per_node = {m: raw[i, :, j] for j, m in enumerate(METRICS)}
+            ref = serial_enc.encode(per_node, {})
+            np.testing.assert_allclose(states[i], ref, atol=1e-12)
+            # encode() updated the serial range; undo so cluster order
+            # cannot leak into the comparison (the fleet-batch contract)
+            serial_enc._range.lo = fleet_enc._range.lo.copy()
+            serial_enc._range.hi = fleet_enc._range.hi.copy()
+
+
+def test_encode_fleet_running_range_carries_across_flip():
+    """The running range must only ever widen, and the post-flip batch must
+    widen it (the heavy regime pushes latency/queue metrics up) — the
+    §11 device loop carries exactly this lo/hi through its episode scan."""
+    batches, _ = _switching_windows()
+    spec = HeatmapSpec(METRICS, [], n_nodes=batches[0].shape[1])
+    enc = HeatmapEncoder(spec)
+    his = []
+    for raw in batches:
+        enc.encode_fleet(raw, np.zeros((raw.shape[0], 0)))
+        his.append(enc._range.hi.copy())
+    for a, b in zip(his, his[1:]):
+        assert (b >= a).all()
+    assert (his[-1] > his[0]).any()   # the flip actually moved the range
