@@ -382,6 +382,99 @@ def sharded_train_rows(n: int, updates: int, seed: int,
     ]
 
 
+def train_chaos_rows(n: int, updates: int, seed: int,
+                     steps: int = 6) -> list[Row]:
+    """§12 chaos rows (``train_chaos_*``): fault tables live in the fused
+    loop. Two measurements:
+
+    1. **SLO-shaped training throughput**: `reward_mode="slo"` training on a
+       ``chaos_scenario`` fleet (correlated failures + backlog shocks +
+       stragglers evaluated in-trace), with the ChaosCounters breach
+       accounting riding along — the cost of chaos vs the clean `train_*`
+       rows is the fault-grid evaluation plus the tick-level breach
+       fraction.
+    2. **Recovery-windows-after-fault**: a fleet-wide 16x outage two windows
+       long on a FROZEN config (a DeployLatencyFault longer than the episode
+       pins the engine-visible config, so the breach and the drain-back are
+       purely the simulator's) — the row reports how many whole windows
+       after the outage ends until the fleet-median window p99 is back
+       within 1.3x the pre-fault median. Gate: bounded (1..4 windows; the
+       restart tail alone spans one)."""
+    from repro.core.configurator import Configurator
+    from repro.core.faults import (DeployLatencyFault, FailureFault,
+                                   chaos_scenario, pack_device_faults)
+    from repro.engine import FleetEnv
+
+    frozen = dict(split_after=10**9, extend_after=10**9, merge_after=10**9)
+    env = FleetEnv([_train_workload("poisson", i) for i in range(n)],
+                   seeds=[seed + i for i in range(n)], backend="jax",
+                   faults=chaos_scenario(n, seed=seed))
+    cfgr = Configurator(env, TRAIN_METRICS, TRAIN_LEVERS, seed=seed,
+                        steps_per_episode=steps, window_s=WINDOW_S,
+                        device_loop="on", bin_kw=frozen, mesh="off",
+                        reward_mode="slo", slo_ms=2_000.0)
+    for _ in range(3):          # compile + f-warmup
+        cfgr.run_update()
+    ts = []
+    for _ in range(updates):
+        t0 = time.perf_counter()
+        cfgr.run_update()
+        ts.append(time.perf_counter() - t0)
+    chaos = cfgr._device_runner().chaos
+    per_update = n * steps
+    rows = [
+        Row(f"train_chaos_jax{n}_fused_windows_per_s",
+            per_update * len(ts) / sum(ts), "win/s",
+            "slo-reward fused loop, chaos_scenario fault tables in-trace"),
+        Row(f"train_chaos_jax{n}_fused_windows_per_s_chunk_med",
+            per_update / float(np.median(ts)), "win/s",
+            "per-update median (throttle-robust twin)"),
+        Row(f"train_chaos_jax{n}_breach_rate", chaos.breach_rate, "",
+            "fraction of windows with in-trace SLO-breach ticks"),
+        Row(f"train_chaos_jax{n}_fault_events", float(chaos.fault_events),
+            "", "non-NoFault slots in the packed DeviceFaultTable"),
+    ]
+
+    # recovery measurement: frozen config, correlated 16x outage
+    t0_s, dur = 900.0, 2 * WINDOW_S
+    steps_r = 12                # ~6 whole windows past the restart tail
+    faults = pack_device_faults(
+        [[FailureFault(t0_s, dur, 16.0), DeployLatencyFault(steps_r + 1)]
+         for _ in range(n)])
+    env = FleetEnv([_train_workload("poisson", i) for i in range(n)],
+                   seeds=[seed + i for i in range(n)], backend="jax",
+                   faults=faults)
+    cfgr = Configurator(env, TRAIN_METRICS, TRAIN_LEVERS, seed=seed,
+                        steps_per_episode=steps_r, window_s=WINDOW_S,
+                        device_loop="on", bin_kw=frozen, mesh="off",
+                        reward_mode="slo", slo_ms=2_000.0)
+    cfgr.run_update()
+    clock = np.array([r.clock_s for r in cfgr.history])
+    p99 = np.array([r.p99_ms for r in cfgr.history])
+    pre_med = float(np.median(p99[clock < t0_s]))
+    spike = float(np.median(
+        p99[((clock - WINDOW_S) < t0_s + dur) & (clock > t0_s)]))
+    end = t0_s + dur
+    post = clock - WINDOW_S > end       # windows entirely after the outage
+    buckets = np.floor((clock - WINDOW_S - end) / WINDOW_S)
+    recovery = -1.0
+    for b in range(int(buckets[post].max()) + 1 if post.any() else 0):
+        sel = post & (buckets == b)
+        if sel.any() and float(np.median(p99[sel])) <= 1.3 * pre_med:
+            recovery = float(b + 1)
+            break
+    rows += [
+        Row(f"train_chaos_jax{n}_pre_p99_ms", pre_med, "ms",
+            "fleet-median window p99 before the outage (frozen config)"),
+        Row(f"train_chaos_jax{n}_spike_p99_ms", spike, "ms",
+            "fleet-median window p99 while the 16x outage is live"),
+        Row("train_chaos_recovery_windows", recovery, "win",
+            "whole windows after outage end until fleet-median p99 is back "
+            "within 1.3x pre-fault (-1 = never; gate: 1..4)"),
+    ]
+    return rows
+
+
 # --------------------------------------------------------------------------
 # legacy PR 1 rows: AutoTuner.collect vs the seed serial baseline
 # --------------------------------------------------------------------------
@@ -553,6 +646,8 @@ def main(argv=None) -> int:
              ("jax", "on", (8,))], updates=1, seed=args.seed, gate_n=8)
         rows += train_matrix([("jax", "on", (8,))], updates=1,
                              seed=args.seed, workload="switching")
+        # §12 chaos smoke: slo reward + fault tables + recovery row
+        rows += train_chaos_rows(8, updates=1, seed=args.seed, steps=3)
         import jax
 
         if jax.device_count() > 1:   # multi-device CI job: sharded smoke
@@ -584,6 +679,11 @@ def main(argv=None) -> int:
             rows += sharded_train_rows(args.sharded_n,
                                        updates=args.train_updates,
                                        seed=args.seed)
+            # §12 chaos matrix: slo-reward fused training through fault
+            # tables + the frozen-config recovery-windows measurement
+            rows += train_chaos_rows(min(gate_n, 256),
+                                     updates=args.train_updates,
+                                     seed=args.seed)
         if args.backend in ("all", "numpy"):
             rows += adaptation(16, 2, args.seed)
     emit(rows)
@@ -634,6 +734,12 @@ def main(argv=None) -> int:
                 print(f"FAIL: {label} {gate.value:.1f}x < {thresh:.0f}x",
                       file=sys.stderr)
                 failed = 1
+        rec = next((r for r in rows
+                    if r.name == "train_chaos_recovery_windows"), None)
+        if rec is not None and not (1.0 <= rec.value <= 4.0):
+            print(f"FAIL: chaos recovery {rec.value:.0f} windows outside "
+                  "the bounded 1..4 band", file=sys.stderr)
+            failed = 1
     return failed
 
 

@@ -104,13 +104,23 @@ class EpisodeResult:
     mean_return: float
 
 
-def reward_from_latency(latencies_ms: np.ndarray, mode: str = "neg_mean") -> float:
+def reward_from_latency(latencies_ms: np.ndarray, mode: str = "neg_mean", *,
+                        slo_ms: float = 1000.0, hinge_w: float = 1.0,
+                        breach_w: float = 1.0) -> float:
     """Paper's delay-dependent reward. The text writes sum(-1/T_e) but states
     the cumulative reward equals negative summed latency (gamma=1); we default
     to -mean(T) and keep the literal form as an option (DESIGN.md §1).
     ``neg_p99`` targets the tail SLO directly; on device backends both it and
     ``neg_mean`` read the window's device-computed statistic instead of
-    materialising the latency sample on host."""
+    materialising the latency sample on host.
+
+    ``slo`` (DESIGN.md §12) is the SLO-aware shaping used for chaos
+    recovery: -mean latency, minus a hinge penalty whenever the window p99
+    breaches ``slo_ms``, minus a breach-*duration* term. On this host path
+    the duration proxy is the fraction of latency samples above the SLO;
+    the fused device loop uses the fraction of window ticks whose analytic
+    mean breaches it (``stats["breach_frac"]``) — same shaping, tick-level
+    granularity."""
     lat = np.asarray(latencies_ms, float)
     lat = lat[np.isfinite(lat) & (lat > 0)]
     if lat.size == 0:
@@ -123,6 +133,12 @@ def reward_from_latency(latencies_ms: np.ndarray, mode: str = "neg_mean") -> flo
         return float(-lat.sum() / 1000.0)
     if mode == "neg_inv":  # the literal Σ -1/T form from the paper text
         return float(np.sum(-1.0 / np.maximum(lat, 1e-3)))
+    if mode == "slo":
+        p99 = float(np.percentile(lat, 99.0))
+        breach = float((lat > slo_ms).mean())
+        return float(-lat.mean() / 1000.0
+                     - hinge_w * max(p99 - slo_ms, 0.0) / 1000.0
+                     - breach_w * breach)
     raise ValueError(mode)
 
 
@@ -138,7 +154,14 @@ class Configurator:
     (DESIGN.md §11): ``"auto"`` (default) uses
     ``repro.distribution.sharding.fleet_mesh()`` whenever the fleet size
     divides the visible device count, ``"off"``/None pins single-device,
-    or pass an explicit 1-D ``jax.sharding.Mesh``."""
+    or pass an explicit 1-D ``jax.sharding.Mesh``.
+
+    ``reward_mode="slo"`` (DESIGN.md §12) shapes the reward against a
+    latency SLO: ``slo_ms`` is the p99 target, ``slo_hinge_w`` weights the
+    hinge penalty on a window-p99 breach and ``slo_breach_w`` weights the
+    breach-duration term. The fused device loop computes the breach
+    fraction in-trace (``stats["breach_frac"]``); the host loops proxy it
+    with the fraction of latency samples above the SLO."""
 
     def __init__(
         self,
@@ -153,6 +176,9 @@ class Configurator:
         episodes_per_update: int = 4,
         window_s: float = 120.0,
         reward_mode: str = "neg_mean",
+        slo_ms: float = 1000.0,
+        slo_hinge_w: float = 1.0,
+        slo_breach_w: float = 1.0,
         seed: int = 0,
         bin_kw: Optional[dict] = None,
         device_loop: str = "auto",
@@ -178,6 +204,9 @@ class Configurator:
         self.episodes_per_update = episodes_per_update
         self.window_s = window_s
         self.reward_mode = reward_mode
+        self.slo_ms = float(slo_ms)
+        self.slo_hinge_w = float(slo_hinge_w)
+        self.slo_breach_w = float(slo_breach_w)
         self.history: list[StepRecord] = []
         self._last_window: Optional[MetricsWindow] = None
         self._last_fleet_windows: Optional[list] = None
@@ -240,7 +269,10 @@ class Configurator:
                 # on the window AFTER it, so skip summaries when the env can
                 getattr(self.env, "advance", self.env.observe)(stab_s)
             window = self.env.observe(self.window_s)
-            reward = reward_from_latency(window.latencies_ms, self.reward_mode)
+            reward = reward_from_latency(window.latencies_ms, self.reward_mode,
+                                         slo_ms=self.slo_ms,
+                                         hinge_w=self.slo_hinge_w,
+                                         breach_w=self.slo_breach_w)
 
             traj.add(state, a, reward)
             records.append(StepRecord(
@@ -305,7 +337,10 @@ class Configurator:
                     rewards = [-w.p99_ms / 1000.0 for w in windows]
             else:
                 rewards = [reward_from_latency(w.latencies_ms,
-                                               self.reward_mode)
+                                               self.reward_mode,
+                                               slo_ms=self.slo_ms,
+                                               hinge_w=self.slo_hinge_w,
+                                               breach_w=self.slo_breach_w)
                            for w in windows]
             for i in range(N):
                 reward = rewards[i]

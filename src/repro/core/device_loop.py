@@ -24,8 +24,11 @@ batch (S steps × N parallel episodes) into a single jitted device program:
                 arrival rates are evaluated in-trace from the packed
                 ``DeviceWorkloadTable`` (§11), so Trapezoid ramps and
                 SwitchingWorkload regime flips run fused end-to-end
-      reward    the window's device-computed mean (``neg_mean``) or p99
-                (``neg_p99``); no latency sample ever materialises
+      reward    the window's device-computed mean (``neg_mean``), p99
+                (``neg_p99``) or SLO-shaped penalty (``slo``: hinge on the
+                window-p99 breach plus the in-trace breach-duration
+                fraction, DESIGN.md §12); no latency sample ever
+                materialises
 
 The program returns the full ``(N, S)`` states/actions/rewards batch (for
 ``ReinforceAgent.update_batch`` — the second and last device program of an
@@ -59,11 +62,21 @@ carried state before pass k's records exist); their bin replay is deferred
 to the iteration boundary — the one-step-stale binning this implies is the
 documented IMPALA-style decoupling trade.
 
+**Fault scenarios (§12).** When the fleet carries a ``DeviceFaultTable``
+(``FleetEnv(..., faults=...)``), the packed table rides into the episode
+program as sharded arrays: straggler/failure/backlog-shock events are
+evaluated in-trace by the fused observation window, and
+``DeployLatencyFault`` clusters run the config they *requested R steps
+ago* — a device-carried config-index history ring indexed per cluster —
+while the encoder state still shows the requested knobs (the policy knows
+what it asked for; the engine lags, paper §4.4).
+
 Remaining gates (``DeviceEpisodeRunner.supported``): a device backend
 (jax or pallas — the pallas window kernel is scan-composable since §11),
 device-packable workloads (closed-form rate laws; IoT's precomputed burst
 schedule is the one roster member that falls back to the host loop), and a
-reward mode with a device-computed statistic.
+reward mode with a device-computed statistic (``neg_mean``, ``neg_p99``
+or ``slo``).
 """
 from __future__ import annotations
 
@@ -157,6 +170,10 @@ class DeviceEpisodeRunner:
         self._hw_B = 0
         self._wl_dev: Optional[dict] = None
         self._mc_arg: Optional[dict] = None
+        self._ft_dev: Optional[dict] = None   # packed DeviceFaultTable (§12)
+        self._delays = None                   # (N,) per-cluster deploy lag
+        self._R_max = 0                       # static history depth
+        self._hist = None                     # carried config-index history
         #: double-buffer state: the not-yet-adopted device carry and the
         #: dispatched-but-not-materialised episode batches of this epoch
         self._carry = None
@@ -164,6 +181,8 @@ class DeviceEpisodeRunner:
         self._epoch_configs: Optional[list] = None
         self._epoch_t0 = 0.0
         self.last_wall_s = 0.0
+        from repro.monitoring.metrics import ChaosCounters
+        self.chaos = ChaosCounters()
         self.mesh = self._resolve_mesh()
 
     def _resolve_mesh(self):
@@ -191,7 +210,7 @@ class DeviceEpisodeRunner:
         reason = env_device_reason(self.env)
         if reason is not None:
             return reason
-        if self.cfgr.reward_mode not in ("neg_mean", "neg_p99"):
+        if self.cfgr.reward_mode not in ("neg_mean", "neg_p99", "slo"):
             return f"reward_mode={self.cfgr.reward_mode} has no device statistic"
         return None
 
@@ -219,13 +238,15 @@ class DeviceEpisodeRunner:
         if skey in self._programs:
             return self._programs[skey]
         (S, T, E, sel_cols, exploit, greedy, reward_mode, win_s,
-         pallas, ndev) = skey
+         pallas, ndev, slo_sig, R_max, has_ft) = skey
         from repro.engine.fleet_jax import (build_step_window,
                                             workload_rate_grid)
 
         env = self.env
         spec = env.spec
-        step_window = build_step_window(env, sel_cols, T, E, pallas=pallas)
+        slo_ms, hinge_w, breach_w = slo_sig if slo_sig else (0.0, 0.0, 0.0)
+        step_window = build_step_window(env, sel_cols, T, E, pallas=pallas,
+                                        slo_ms=slo_ms)
         nodes = env.n_nodes
         r, c = node_grid_shape(nodes)
         rc = r * c
@@ -237,7 +258,8 @@ class DeviceEpisodeRunner:
 
         def program(params, key, config_idx, backlog, sfree, clock,
                     last_service, reconfigs, lo, hi, per_node, wl, f,
-                    tabs, kind_code, n_valid, reboot_f, rejit_f, mc, emitF):
+                    tabs, kind_code, n_valid, reboot_f, rejit_f, mc, emitF,
+                    ft, delays, hist):
             TRACE_COUNTS[skey] = TRACE_COUNTS.get(skey, 0) + 1
             # decorrelate the per-shard RNG streams; the unsharded program
             # folds shard ordinal 0 so a 1-device mesh replays it exactly
@@ -252,7 +274,8 @@ class DeviceEpisodeRunner:
 
             def step(carry, t):
                 (config_idx, backlog, sfree, clock, last_service, reconfigs,
-                 lo, hi, per_node) = carry
+                 lo, hi, per_node) = carry[:9]
+                hist = carry[9] if R_max else None
                 k = jax.random.fold_in(key, t)
                 k_act, k_load, k_win = jax.random.split(k, 3)
 
@@ -287,7 +310,18 @@ class DeviceEpisodeRunner:
                     cur, l_idx, direction, xp=jnp, n_valid=n_valid,
                     kind_code=kind_code)
                 config_idx = config_idx.at[rows, l_idx].set(new_bin)
-                cc = {kk: tabs[kk][config_idx[:, li]] for kk, li in cc_pairs}
+                if R_max:
+                    # §12 deploy latency: the engine runs the config each
+                    # cluster requested `delays[i]` steps ago; the encoder
+                    # above still shows the requested knobs
+                    hist = jnp.roll(hist, 1, axis=0).at[0].set(config_idx)
+                    eff_idx = jnp.take_along_axis(
+                        hist, jnp.broadcast_to(delays[None, :, None],
+                                               (1,) + config_idx.shape),
+                        axis=0)[0]
+                else:
+                    eff_idx = config_idx
+                cc = {kk: tabs[kk][eff_idx[:, li]] for kk, li in cc_pairs}
 
                 # ---- loading (Kafka buffers arrivals, paper §4.2) ----
                 rate_now, _ = workload_rate_grid(wl, clock)
@@ -315,10 +349,16 @@ class DeviceEpisodeRunner:
                 # ---- fused preroll + observation window + reward ----
                 (backlog, sfree, clock), stats = step_window(
                     k_win, backlog, sfree, clock, cc, wl, stab,
-                    reconfigs, win_s, mc=mc, F=emitF)
+                    reconfigs, win_s, mc=mc, F=emitF,
+                    ft=ft if has_ft else None)
                 per_node = stats["per_node"]
                 if reward_mode == "neg_p99":
                     reward = -stats["p99_ms"] / 1000.0
+                elif reward_mode == "slo":
+                    reward = (-stats["mean_ms"] / 1000.0
+                              - hinge_w * jnp.maximum(
+                                  stats["p99_ms"] - slo_ms, 0.0) / 1000.0
+                              - breach_w * stats["breach_frac"])
                 else:
                     reward = -stats["mean_ms"] / 1000.0
 
@@ -326,28 +366,41 @@ class DeviceEpisodeRunner:
                        "p99_ms": stats["p99_ms"], "clock_s": clock,
                        "load_s": load_s, "stab_s": stab,
                        "lever": l_idx, "bin": new_bin}
+                if slo_sig:
+                    out["breach_frac"] = stats["breach_frac"]
                 carry = (config_idx, backlog, sfree, clock, last_service,
                          reconfigs, lo, hi, per_node)
+                if R_max:
+                    carry = carry + (hist,)
                 return carry, out
 
             carry0 = (config_idx, backlog, sfree, clock, last_service,
                       reconfigs, lo, hi, per_node)
+            if R_max:
+                # fresh epoch (hist is None): the pre-episode config is what
+                # is deployed at every history depth
+                h0 = hist if hist is not None else jnp.broadcast_to(
+                    config_idx[None], (R_max + 1,) + config_idx.shape)
+                carry0 = carry0 + (h0,)
             carry, outs = jax.lax.scan(step, carry0, jnp.arange(S))
             # (S, N) -> (N, S): the episode axis leads, ready for the update
             outs = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), outs)
             return carry, outs
 
-        donate = tuple(range(2, 11))   # config_idx .. per_node (loop state)
+        # config_idx .. per_node (loop state) + the config-index history
+        donate = tuple(range(2, 11)) + (22,)
         if mesh is not None:
             from jax.experimental.shard_map import shard_map
 
             pf, pr = P(mesh.axis_names[0]), P()
+            ph = P(None, mesh.axis_names[0])   # (R+1, N, L) history ring
             # (params, key) replicated; per-cluster loop state, workload
-            # table, model constants + emission factors sharded; lo/hi +
-            # lever tables + scalars replicated
+            # table, model constants + emission factors + fault table +
+            # deploy lags sharded; lo/hi + lever tables + scalars replicated
             in_specs = (pr, pr) + (pf,) * 6 + (pr, pr) + (pf, pf) \
-                + (pr,) * 6 + (pf, pf)
-            out_specs = ((pf,) * 6 + (pr, pr, pf), pf)
+                + (pr,) * 6 + (pf, pf) + (pf, pf, ph)
+            out_specs = ((pf,) * 6 + (pr, pr, pf)
+                         + ((ph,) if R_max else ()), pf)
             prog = jax.jit(shard_map(program, mesh=mesh, in_specs=in_specs,
                                      out_specs=out_specs, check_rep=False),
                            donate_argnums=donate)
@@ -379,23 +432,26 @@ class DeviceEpisodeRunner:
 
         if self._carry is None:
             args = self._fresh_inputs()
+            hist = self._hist          # survives epochs while configs do
             self._epoch_t0 = time.perf_counter()
         else:
             # chained pass: everything per-cluster continues from the carry;
             # tables/workloads are the epoch's (binning frozen until the
             # finalize replay — the §11 double-buffer contract)
-            (config_idx, backlog, sfree, clock, last_service, reconfigs,
-             lo, hi, per_node) = self._carry
-            args = (config_idx, backlog, sfree, clock, last_service,
-                    reconfigs, lo, hi, per_node)
+            args = tuple(self._carry[:9])
+            hist = self._carry[9] if len(self._carry) > 9 else None
 
         T, E = self._tick_budget()
         exploit = cfgr.agent.exploit_ready(explore=explore)
         greedy = bool(greedy or not explore)
         pallas = bool(getattr(dev, "pallas", False))
+        slo_sig = ((float(cfgr.slo_ms), float(cfgr.slo_hinge_w),
+                    float(cfgr.slo_breach_w))
+                   if cfgr.reward_mode == "slo" else None)
         skey = (S, T, E, self._sel_cols, exploit, greedy, cfgr.reward_mode,
                 float(cfgr.window_s), pallas,
-                self.mesh.size if self.mesh is not None else 0)
+                self.mesh.size if self.mesh is not None else 0,
+                slo_sig, self._R_max, self._ft_dev is not None)
         prog = self._program(skey, {"cc_pairs": self._cc_pairs,
                                     "ranked_g": self._ranked_g})
 
@@ -407,7 +463,8 @@ class DeviceEpisodeRunner:
                 cfgr.agent.params, dev._next_key(), *args,
                 self._wl_dev, jnp.float32(cfgr.agent.f), self._tabs,
                 self._kind_code, self._n_valid, self._reboot_f,
-                self._rejit_f, self._mc_arg, self._emitF)
+                self._rejit_f, self._mc_arg, self._emitF,
+                self._ft_dev, self._delays, hist)
         self._carry = carry
         self._inflight.append({"outs": outs, "S": S})
         return {"states": outs["states"], "actions": outs["actions"],
@@ -443,6 +500,18 @@ class DeviceEpisodeRunner:
             tbl = pack_device_workloads(env.workloads)
             self._wl_dev = {k: jnp.asarray(v)
                             for k, v in tbl.asdict().items()}
+            # §12 fault table: tick effects ride the window program; deploy
+            # lags drive the config-index history ring
+            ftab = getattr(env, "_faults", None)
+            self._R_max = 0 if ftab is None else int(ftab.max_deploy_delay())
+            self.chaos.fault_events = (0 if ftab is None
+                                       else int((ftab.kind != 0).sum()))
+            if ftab is not None and ftab.has_tick_effects():
+                self._ft_dev = {k: jnp.asarray(v)
+                                for k, v in ftab.asdict().items()}
+            if self._R_max:
+                self._delays = jnp.asarray(
+                    np.clip(ftab.deploy_delays(), 0, self._R_max))
         configs = env.current_configs()
         self._epoch_configs = configs
         # re-indexing N configs through 109 levers costs ~0.1 s at N=1024;
@@ -459,6 +528,7 @@ class DeviceEpisodeRunner:
             config_idx = self._config_idx
         else:
             config_idx = jnp.asarray(table.index_configs(configs))
+            self._hist = None   # stale config history can't be replayed
         self._bins_sig = sig
 
         self._sel_cols = tuple(env.metric_names.index(m)
@@ -484,6 +554,10 @@ class DeviceEpisodeRunner:
             self._rejit_f = jax.device_put(self._rejit_f, rep)
             self._wl_dev = jax.device_put(self._wl_dev, shd)
             self._emitF = jax.device_put(self._emitF, shd)
+            if self._ft_dev is not None:
+                self._ft_dev = jax.device_put(self._ft_dev, shd)
+            if self._delays is not None:
+                self._delays = jax.device_put(self._delays, shd)
             if self._mc_arg is None:
                 self._mc_arg = jax.device_put(dev._mc_dev, shd)
         else:
@@ -521,10 +595,12 @@ class DeviceEpisodeRunner:
         jax.block_until_ready(inflight[-1]["outs"])
         self.last_wall_s = time.perf_counter() - self._epoch_t0
         total_steps = sum(e["S"] for e in inflight) * env.n_clusters
+        self.chaos.add_wall(self.last_wall_s)
 
         # ---- hand the queueing state back to the engine -------------------
         (config_idx_f, backlog_f, sfree_f, clock_f, last_service_f,
-         reconfigs_f, lo_f, hi_f, per_node_f) = carry
+         reconfigs_f, lo_f, hi_f, per_node_f) = carry[:9]
+        self._hist = carry[9] if len(carry) > 9 else None
         env._dev.adopt_loop_state(backlog_f, sfree_f, clock_f)
         env.reconfigs[:] = np.asarray(reconfigs_f, np.int64)
         env.last_service[:] = np.asarray(last_service_f, np.float64)
@@ -558,8 +634,14 @@ class DeviceEpisodeRunner:
         lever = np.asarray(outs["lever"])            # (N, S)
         new_bin = np.asarray(outs["bin"])
         lever_l, bin_l = lever.tolist(), new_bin.tolist()
-        rewards = np.asarray(outs["rewards"]).tolist()
-        p99 = np.asarray(outs["p99_ms"]).tolist()
+        rewards_a = np.asarray(outs["rewards"])
+        p99_a = np.asarray(outs["p99_ms"])
+        self.chaos.record_batch(
+            rewards_a, p99_a,
+            np.asarray(outs["breach_frac"]) if "breach_frac" in outs else None,
+            slo_ms=self.cfgr.slo_ms)
+        rewards = rewards_a.tolist()
+        p99 = p99_a.tolist()
         clock_s = np.asarray(outs["clock_s"]).tolist()
         load_s = np.asarray(outs["load_s"]).tolist()
         stab_s = np.asarray(outs["stab_s"]).tolist()

@@ -56,6 +56,7 @@ class FleetEnv(FleetCore):
         seeds: Optional[Sequence[int]] = None,
         seed: int = 0,
         backend: str = "numpy",
+        faults=None,
     ):
         from repro import configs
 
@@ -71,7 +72,7 @@ class FleetEnv(FleetCore):
         assert len(models) == n and len(list(seeds)) == n
         super().__init__(workloads, list(models), spec or SimSpec(),
                          list(lever_specs or LEVER_SPECS), list(seeds),
-                         backend=backend)
+                         backend=backend, faults=faults)
 
     # ------------------------------------------------------------ constructors
     @classmethod

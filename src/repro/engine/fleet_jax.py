@@ -221,7 +221,7 @@ def _window_program(T: int, S: int, E: int, nodes: int, M: int,
     spec = SimSpec(**dict(spec_key))
 
     def prog(key, backlog, sfree_rel, cc, mc, emitc, rate_g, size_g,
-             n_ticks, n_skip, etick, evalid, reconfigs):
+             n_ticks, n_skip, etick, evalid, reconfigs, fmult=None):
         """``n_skip`` is the fused stabilisation preroll (paper §4.2): those
         leading ticks evolve state and consume arrivals but emit nothing and
         are excluded from the window statistics — one device program per
@@ -256,6 +256,8 @@ def _window_program(T: int, S: int, E: int, nodes: int, M: int,
                                           jnp.minimum(raw, slow_cap)), 1.0)
         fmask = u_fail < fail_frac
         slow = jnp.where(fmask, slow * 2.0, slow)
+        if fmult is not None:   # chaos-table service multiplier (§12) —
+            slow = slow * fmult  # host-evaluated twin grid, like rate_g
         smask_f, fmask_f = smask.astype(jnp.float32), fmask.astype(jnp.float32)
 
         # rate_g/size_g are (1, N) for time-invariant fleets (no T× upload);
@@ -268,7 +270,7 @@ def _window_program(T: int, S: int, E: int, nodes: int, M: int,
             state_out, ys_k, lat_tsn = fleet_tick_window(
                 jnp.stack([backlog, sfree_rel]), consts, rg, sg,
                 z, u_strag, u_raw, u_fail,
-                tmask.astype(jnp.float32), u_wait, z2a,
+                tmask.astype(jnp.float32), u_wait, z2a, fmult,
                 noise=spec.noise, retention_s=spec.retention_s,
                 straggler_prob=spec.straggler_prob, slo=slo, shi=shi,
                 interpret=interpret)
@@ -706,6 +708,16 @@ class DeviceFleetEngine:
             etick = np.zeros((1, core.n))
             evalid = np.zeros((1, core.n), bool)
         rate_g, size_g = self._rate_grids(T, T_b)
+        # chaos events (repro.core.faults): host-evaluated effect grids, the
+        # same pattern as the host-evaluated rate grids — rate shocks
+        # premultiply arrivals, service faults ride a slow-multiplier operand
+        fmult = None
+        ft = getattr(core, "_faults", None)
+        if ft is not None and ft.has_tick_effects():
+            times = core.clock[None, :] + np.arange(T)[:, None] * T_b[None, :]
+            f_slow, f_rate = ft.effects(times)
+            rate_g = rate_g * f_rate            # broadcasts (1,N) -> (T,N)
+            fmult = jnp.asarray(f_slow, jnp.float32)
         # the jax path computes window stats analytically ((T, N) erf math),
         # so only the pallas path carries a full lane tensor — throttled by
         # the lane-budget ladder when batch_interval_s walks low
@@ -736,7 +748,7 @@ class DeviceFleetEngine:
                    jnp.asarray(n_ticks, jnp.int32),
                    jnp.asarray(n_skip, jnp.int32),
                    jnp.asarray(etick, jnp.int32), jnp.asarray(evalid),
-                   jnp.asarray(core.reconfigs, jnp.float32))
+                   jnp.asarray(core.reconfigs, jnp.float32), fmult)
         core.clock += n_ticks * T_b        # exact host shadow
         self._backlog, self._sfree_rel = res["backlog"], res["sfree"]
         if not summarise:
@@ -788,12 +800,42 @@ def workload_rate_grid(wl: dict, times) -> tuple[jnp.ndarray, jnp.ndarray]:
     return rate, size
 
 
+def fault_effect_grid(ft: dict, times) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Evaluate a packed ``DeviceFaultTable`` (as a dict of device arrays)
+    at ``times`` of shape (..., N) -> (service_mult, rate_mult), both
+    broadcast to ``times``'s shape — the traced twin of
+    ``DeviceFaultTable.effects`` (DESIGN.md §12).
+
+    Per cluster, each event slot's law is dispatched with ``lax.switch`` on
+    its kind code (the branch table is the shared ``device_effect``
+    staticmethods the numpy oracle also calls); concurrent slots compose
+    multiplicatively, and padding slots multiply by an exact ``1.0`` (f32
+    bit-for-bit no-op — the property suite pins this)."""
+    from repro.core.faults import FAULT_KIND_CLASSES
+
+    branches = [functools.partial(cls.device_effect, xp=jnp)
+                for _, cls in sorted(FAULT_KIND_CLASSES.items())]
+
+    def one(kind, p, t):
+        return jax.lax.switch(kind, branches, p, t)
+
+    t = jnp.asarray(times, jnp.float32)
+    slow = jnp.ones_like(t)
+    rate = jnp.ones_like(t)
+    for e in range(ft["kind"].shape[1]):
+        s, r = jax.vmap(one, in_axes=(0, 0, -1), out_axes=-1)(
+            ft["kind"][:, e], ft["params"][:, e], t)
+        slow = slow * s
+        rate = rate * r
+    return slow, rate
+
+
 # --------------------------------------------------------------------------
 # scan-composable window step (DESIGN.md §10)
 # --------------------------------------------------------------------------
 
 def build_step_window(core, sel_cols: tuple, T: int, E: int,
-                      *, pallas: bool = False):
+                      *, pallas: bool = False, slo_ms: float = 0.0):
     """Build the *scan-composable* window step for the fused training loop.
 
     Unlike ``_window_program`` (one jitted dispatch per observe call, tick
@@ -829,6 +871,15 @@ def build_step_window(core, sel_cols: tuple, T: int, E: int,
     statistics fully sampled over its latency-lane tiles (the §9 pallas
     contract) — the kernel is carried through the episode ``lax.scan``
     like any other traced op, which is what kills the old jax-only gate.
+
+    ``ft`` (optional) is a packed ``DeviceFaultTable`` (dict of device
+    arrays): chaos events are evaluated in-trace at the same tick times as
+    the workload grid (``fault_effect_grid``, DESIGN.md §12) — rate shocks
+    premultiply the arrival grid, service slowdowns multiply the straggler
+    slow factor (jax path) or ride the kernel's ``fmult`` operand (pallas).
+    ``slo_ms > 0`` adds ``stats["breach_frac"]``: the wmask-weighted
+    fraction of window ticks whose analytic per-tick mean latency exceeds
+    the SLO — the breach-duration term of the ``reward="slo"`` mode.
     """
     from repro.kernels.fleet_tick import pack_tick_consts, window_recurrence
 
@@ -857,7 +908,7 @@ def build_step_window(core, sel_cols: tuple, T: int, E: int,
     M_pad = M_sel + (M_sel % 2)      # normals_16bit wants an even last dim
 
     def step_window(key, backlog, sfree_rel, clock, cc, wl,
-                    stab_s, reconfigs, win_s, mc=None, F=None):
+                    stab_s, reconfigs, win_s, mc=None, F=None, ft=None):
         # mc/F default to the engine's full-fleet device copies; under a
         # cluster-sharded mesh (§11) the caller passes the shard-local
         # slices instead — closed-over (N,) constants can't shard
@@ -894,6 +945,15 @@ def build_step_window(core, sel_cols: tuple, T: int, E: int,
         # start times the §9 host-side _rate_grids uses (DESIGN.md §11)
         times = clock[None, :] + t_ax.astype(jnp.float32) * T_b[None, :]
         rg, sg = workload_rate_grid(wl, times)
+        f_slow = None
+        if ft is not None:
+            # chaos events at the same tick times as the workload grid:
+            # rate shocks premultiply arrivals (retention caps, backlog age
+            # and emission terms all scale consistently), service faults
+            # multiply the slow factor / the kernel's fmult operand
+            f_slow, f_rate = fault_effect_grid(ft, times)
+            rg = rg * f_rate
+            slow = slow * f_slow
 
         if pallas:
             # fused fleet_tick window kernel carried through the episode
@@ -902,7 +962,7 @@ def build_step_window(core, sel_cols: tuple, T: int, E: int,
                 jax.random.bits(k_lane, (T, S_l, N), jnp.uint32))
             (backlog, sfree_rel), ys, lat = window_recurrence(
                 backlog, sfree_rel, consts, rg, sg, z, u_strag, u_raw,
-                u_fail, tmask.astype(jnp.float32), u_wait, z2a,
+                u_fail, tmask.astype(jnp.float32), u_wait, z2a, f_slow,
                 noise=spec.noise, retention_s=spec.retention_s,
                 straggler_prob=spec.straggler_prob, slo=slo, shi=shi,
                 interpret=interpret)
@@ -1022,6 +1082,15 @@ def build_step_window(core, sel_cols: tuple, T: int, E: int,
         clock = clock + n_ticks.astype(jnp.float32) * T_b
         stats = {"mean_ms": mean_ms, "p99_ms": p99,
                  "processed": processed_sum, "per_node": per_node}
+        if slo_ms > 0.0:
+            # breach duration: fraction of window ticks whose analytic mean
+            # latency (base + a/2 + √(2/π)·c, the same mixture mean the
+            # window stat integrates) exceeds the SLO — identical formula on
+            # the jax path, the pallas path and the numpy oracle
+            tick_ms = base_ms + 0.5 * a_ms + _R2PI * c_ms
+            stats["breach_frac"] = \
+                ((tick_ms > slo_ms) & wmask).sum(axis=0) \
+                / jnp.maximum(wmask.sum(axis=0), 1)
         return (backlog, sfree_rel, clock), stats
 
     return step_window

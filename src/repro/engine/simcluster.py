@@ -331,12 +331,25 @@ class FleetCore:
 
     def __init__(self, workloads: Sequence[Workload], models: Sequence[ModelConfig],
                  spec: SimSpec, lever_specs: Sequence[LeverSpec],
-                 seeds: Sequence[int], backend: str = "numpy"):
+                 seeds: Sequence[int], backend: str = "numpy",
+                 faults=None):
         assert len(workloads) == len(models) == len(seeds)
         assert backend in ("numpy", "jax", "pallas"), backend
         self.n = len(workloads)
         self.backend = backend
         self.workloads = list(workloads)
+        # chaos event table (repro.core.faults, DESIGN.md §12): per-cluster
+        # fault scenarios evaluated per tick by every backend — None, a
+        # packed DeviceFaultTable, or per-cluster fault spec lists
+        if faults is not None and not hasattr(faults, "effects"):
+            from repro.core.faults import pack_device_faults
+
+            faults = pack_device_faults(faults)
+        if faults is not None and faults.n_clusters != self.n:
+            raise ValueError(f"fault table covers {faults.n_clusters} "
+                             f"clusters, fleet has {self.n}")
+        self._faults = faults
+        self._fault_tick = faults is not None and faults.has_tick_effects()
         self.models = list(models)
         self.spec = spec
         self.lever_specs = list(lever_specs)
@@ -749,6 +762,16 @@ class FleetCore:
         else:
             rate = np.array([wls[i].rate(clock[i]) for i in act])
             ev_size = np.array([wls[i].mean_size(clock[i]) for i in act])
+        # chaos events (repro.core.faults) at the tick start time — the same
+        # instants the device grids evaluate: rate shocks premultiply
+        # arrivals (and with them retention caps, backlog age and the
+        # emission terms), service faults multiply the slow factor below
+        f_slow = None
+        if self._fault_tick:
+            f_slow, f_rate = self._faults.effects(self.clock)
+            if not full:
+                f_slow, f_rate = f_slow[act], f_rate[act]
+            rate = rate * f_rate
         z = take(buf["z"])
         arrivals = rate * T_b * (1.0 + spec.noise * z)
         # age of the oldest backlog BEFORE this tick's arrivals join
@@ -772,6 +795,8 @@ class FleetCore:
         slow = np.where(smask, np.where(ccs["backup_tasks"], 1.1, timeout_slow), 1.0)
         fmask = take(buf["u_fail"]) < ccs["failure_inject_frac"]
         slow = np.where(fmask, slow * 2.0, slow)
+        if f_slow is not None:
+            slow = slow * f_slow
         service = service * slow
         # single logical server per cluster: a batch starts when both the
         # window has closed AND the previous batch finished (service > T_b

@@ -89,7 +89,7 @@ def pack_tick_consts(cc: dict, mc: dict, spec, chips: int, xp=jnp):
 
 
 def _tick_window_kernel(state_ref, c_ref, rate_ref, size_ref, z_ref, us_ref,
-                        ur_ref, uf_ref, act_ref, uw_ref, z2_ref,
+                        ur_ref, uf_ref, act_ref, uw_ref, z2_ref, fm_ref,
                         state_out_ref, ys_ref, lat_ref,
                         *, T: int, noise: float, retention_s: float,
                         straggler_prob: float, slo: float, shi: float):
@@ -126,6 +126,9 @@ def _tick_window_kernel(state_ref, c_ref, rate_ref, size_ref, z_ref, us_ref,
                                           jnp.minimum(raw, slow_cap)), 1.0)
         fmask = uf_ref[t] < fail_frac
         slow = jnp.where(fmask, slow * 2.0, slow)
+        # chaos-table service multiplier (repro.core.faults): exactly 1.0
+        # outside fault windows, so fault-free tables are bit-for-bit no-ops
+        slow = slow * fm_ref[t]
         service = service * slow
         start_rel = jnp.maximum(T_b, sfree)
         sfree_new = jnp.minimum(start_rel + service, T_b + inflight) - T_b
@@ -156,18 +159,23 @@ def _tick_window_kernel(state_ref, c_ref, rate_ref, size_ref, z_ref, us_ref,
     static_argnames=("noise", "retention_s", "straggler_prob", "slo", "shi",
                      "block_n", "block_s", "interpret"))
 def fleet_tick_window(state, consts, rate, size, z, u_strag, u_raw, u_fail,
-                      active, u_wait, z2a, *, noise, retention_s,
+                      active, u_wait, z2a, fmult=None, *, noise, retention_s,
                       straggler_prob, slo, shi, block_n=DEFAULT_BLOCK_N,
                       block_s=DEFAULT_BLOCK_S, interpret=False):
     """Run one window's fused tick recurrence on the clusters × lanes grid.
 
     state (2, N) [backlog, server_free_rel]; consts (CONSTS_ROWS, N) from
     ``pack_tick_consts``; rate/size/z/u_* / active (T, N); u_wait/z2a
-    (T, S, N). Returns (state' (2, N), ys (7, T, N), lat (T, S, N) seconds):
+    (T, S, N); ``fmult`` an optional (T, N) chaos-table service multiplier
+    (``repro.core.faults``; defaults to all-ones — a bit-for-bit no-op).
+    Returns (state' (2, N), ys (7, T, N), lat (T, S, N) seconds):
     ys rows = service, queue_delay, batch, processed, straggler, failure,
     backlog_after.
     """
     T, S, N = u_wait.shape
+    if fmult is None:
+        fmult = jnp.ones_like(rate)
+    fmult = jnp.broadcast_to(fmult, (T, N))
     bn = min(block_n, N)
     bs = min(block_s, S)
     grid = (pl.cdiv(N, bn), pl.cdiv(S, bs))
@@ -186,6 +194,7 @@ def fleet_tick_window(state, consts, rate, size, z, u_strag, u_raw, u_fail,
         ] + [pl.BlockSpec((T, bn), tn, memory_space=vm)] * 7 + [
             pl.BlockSpec((T, bs, bn), lane, memory_space=vm),
             pl.BlockSpec((T, bs, bn), lane, memory_space=vm),
+            pl.BlockSpec((T, bn), tn, memory_space=vm),
         ],
         out_specs=[
             pl.BlockSpec((2, bn), tn, memory_space=vm),
@@ -199,12 +208,12 @@ def fleet_tick_window(state, consts, rate, size, z, u_strag, u_raw, u_fail,
         ],
         interpret=interpret,
     )(state, consts, rate, size, z, u_strag, u_raw, u_fail, active,
-      u_wait, z2a)
+      u_wait, z2a, fmult)
 
 
 def window_recurrence(backlog, sfree_rel, consts, rate, size, z, u_strag,
-                      u_raw, u_fail, active, u_wait, z2a, *, noise,
-                      retention_s, straggler_prob, slo, shi,
+                      u_raw, u_fail, active, u_wait, z2a, fmult=None, *,
+                      noise, retention_s, straggler_prob, slo, shi,
                       interpret=False):
     """The fused window kernel with the jnp tick scan's carry contract:
 
@@ -217,7 +226,7 @@ def window_recurrence(backlog, sfree_rel, consts, rate, size, z, u_strag,
     training loop's episode ``lax.scan`` (DESIGN.md §11)."""
     state_out, ys, lat = fleet_tick_window(
         jnp.stack([backlog, sfree_rel]), consts, rate, size, z, u_strag,
-        u_raw, u_fail, active, u_wait, z2a, noise=noise,
+        u_raw, u_fail, active, u_wait, z2a, fmult, noise=noise,
         retention_s=retention_s, straggler_prob=straggler_prob, slo=slo,
         shi=shi, interpret=interpret)
     terms = (ys[0], ys[1], ys[2], ys[3], ys[6])

@@ -43,6 +43,14 @@ def main(argv=None):
                          "env supports it (jax/pallas backend, device-"
                          "packable workloads) and logs the fallback reason "
                          "once; 'on' fails loudly with that reason")
+    ap.add_argument("--reward", choices=["neg_mean", "neg_p99", "neg_inv",
+                                         "slo"],
+                    default="neg_mean",
+                    help="episode reward shaping (DESIGN.md §1/§12): 'slo' "
+                         "adds a hinge penalty on p99 over --slo-ms plus a "
+                         "breach-duration term")
+    ap.add_argument("--slo-ms", type=float, default=1000.0,
+                    help="latency SLO for --reward slo (ms)")
     ap.add_argument("--collect", type=int, default=1200)
     ap.add_argument("--updates", type=int, default=8)
     ap.add_argument("--steps-per-episode", type=int, default=5)
@@ -111,7 +119,8 @@ def main(argv=None):
     cfgr = tuner.build_configurator(
         steps_per_episode=args.steps_per_episode,
         episodes_per_update=args.episodes, window_s=window, f_exploit=args.f,
-        device_loop=args.device_loop)
+        device_loop=args.device_loop, reward_mode=args.reward,
+        slo_ms=args.slo_ms)
     reason = cfgr.device_loop_reason()
     if args.device_loop == "on" and reason is not None:
         # fail BEFORE the tuning loop starts, with the supported() reason —

@@ -3,6 +3,7 @@ from repro.monitoring.metrics import (
     METRIC_NAMES,
     REGISTRY,
     WORKER_METRICS,
+    ChaosCounters,
     MetricDef,
     TimeSeriesStore,
     build_registry,
@@ -13,6 +14,7 @@ __all__ = [
     "METRIC_NAMES",
     "REGISTRY",
     "WORKER_METRICS",
+    "ChaosCounters",
     "MetricDef",
     "TimeSeriesStore",
     "build_registry",

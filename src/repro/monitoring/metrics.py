@@ -145,6 +145,72 @@ DRIVER_METRICS = [m.name for m in REGISTRY if m.scope == "driver"]
 WORKER_METRICS = [m.name for m in REGISTRY if m.scope == "worker"]
 
 
+@dataclass
+class ChaosCounters:
+    """Chaos/SLO bookkeeping for the fused device loop (DESIGN.md §12).
+
+    The fused episode program never materialises per-step host values, so
+    monitoring is fed in bulk ONCE per episode batch — the same
+    device-to-host pull that builds ``StepRecord``s: window counts, reward
+    mass, the p99 high-water mark and SLO-breach counters.
+    ``breach_frac`` rows come from the window program's in-trace tick-level
+    breach fraction (``reward_mode="slo"``); without them breaches are
+    counted against an explicit ``slo_ms`` from the window p99 instead.
+    ``fault_events`` is the static count of non-``NoFault`` slots in the
+    fleet's packed ``DeviceFaultTable``."""
+
+    windows: int = 0
+    breached_windows: int = 0
+    fault_events: int = 0
+    reward_sum: float = 0.0
+    breach_frac_sum: float = 0.0
+    p99_max_ms: float = 0.0
+    wall_s: float = 0.0
+
+    def record_batch(self, rewards, p99_ms, breach_frac=None, *,
+                     slo_ms: float = 0.0) -> None:
+        """Fold one episode batch's (N, S) arrays into the counters."""
+        rewards = np.asarray(rewards, float)
+        p99 = np.asarray(p99_ms, float)
+        self.windows += int(rewards.size)
+        self.reward_sum += float(rewards.sum())
+        if p99.size:
+            self.p99_max_ms = max(self.p99_max_ms, float(p99.max()))
+        if breach_frac is not None:
+            bf = np.asarray(breach_frac, float)
+            self.breach_frac_sum += float(bf.sum())
+            self.breached_windows += int((bf > 0.0).sum())
+        elif slo_ms > 0.0:
+            self.breached_windows += int((p99 > slo_ms).sum())
+
+    def add_wall(self, seconds: float) -> None:
+        self.wall_s += float(seconds)
+
+    @property
+    def windows_per_s(self) -> float:
+        return self.windows / self.wall_s if self.wall_s > 0.0 else 0.0
+
+    @property
+    def mean_reward(self) -> float:
+        return self.reward_sum / self.windows if self.windows else 0.0
+
+    @property
+    def breach_rate(self) -> float:
+        return self.breached_windows / self.windows if self.windows else 0.0
+
+    def as_dict(self) -> dict:
+        return {"windows": self.windows,
+                "breached_windows": self.breached_windows,
+                "fault_events": self.fault_events,
+                "reward_sum": self.reward_sum,
+                "breach_frac_sum": self.breach_frac_sum,
+                "p99_max_ms": self.p99_max_ms,
+                "wall_s": self.wall_s,
+                "windows_per_s": self.windows_per_s,
+                "mean_reward": self.mean_reward,
+                "breach_rate": self.breach_rate}
+
+
 class TimeSeriesStore:
     """Per-node ring buffer of metric samples: (t, node, metric) -> value."""
 

@@ -91,3 +91,46 @@ def test_manifest_is_valid_json_with_leaf_metadata(tmp_path):
     assert man["step"] == 4
     leaf = next(iter(man["leaves"].values()))
     assert set(leaf) == {"file", "shape", "dtype"}
+
+
+def test_policy_and_optimizer_midtraining_roundtrip(tmp_path):
+    """Resume-from-checkpoint for the RL loop (DESIGN.md §12 satellite):
+    save a mid-training agent's params + rmsprop optimizer state, restore
+    into a FRESH differently-seeded agent, and both (1) greedy actions and
+    (2) the next update step must match the original exactly — the
+    optimizer second-moment buffers are part of the trajectory, so
+    forgetting them would silently change the post-resume updates."""
+    from repro.core.policy import ReinforceAgent
+
+    rng = np.random.default_rng(0)
+    D, levers = 12, ["a", "b", "c"]
+    states = rng.normal(0, 1, (5, 4, D)).astype(np.float32)   # (N, S, D)
+    actions = rng.integers(0, 2 * len(levers), (5, 4))
+    rewards = rng.normal(-5, 1, (5, 4)).astype(np.float32)
+
+    agent = ReinforceAgent(D, levers, seed=0)
+    for _ in range(2):                              # mid-training
+        agent.update_batch(states, actions, rewards)
+    store = CheckpointStore(tmp_path)
+    store.save(agent.n_updates,
+               {"params": agent.params, "opt_state": agent.opt_state},
+               extra={"n_updates": agent.n_updates})
+
+    fresh = ReinforceAgent(D, levers, seed=123)     # different init
+    restored, step, extra = store.restore(
+        {"params": fresh.params, "opt_state": fresh.opt_state})
+    fresh.params = restored["params"]
+    fresh.opt_state = restored["opt_state"]
+    fresh.n_updates = extra["n_updates"]
+    assert step == 2 and fresh.n_updates == agent.n_updates
+
+    flat = rng.normal(0, 1, (7, D)).astype(np.float32)
+    assert np.array_equal(agent.act_batch(flat, greedy=True),
+                          fresh.act_batch(flat, greedy=True))
+    # training resumes identically: one more matched update on both
+    s1 = agent.update_batch(states, actions, rewards)
+    s2 = fresh.update_batch(states, actions, rewards)
+    assert s1["pg_loss"] == pytest.approx(s2["pg_loss"], rel=1e-6)
+    for k in agent.params:
+        np.testing.assert_array_equal(np.asarray(agent.params[k]),
+                                      np.asarray(fresh.params[k]))

@@ -13,7 +13,10 @@ cluster that random-walks its config into a saturating corner produces a
 retention-capped ~300 s latency window, and a handful of those dominate a
 96-sample mean — the two loops draw different action paths by design, so
 where the blow-ups land is coin-flip luck, while the bulk of the
-distribution (what the medians pin) tracks within a few percent.
+distribution (what the medians pin) tracks within a few percent. The
+discipline (tolerances + comparison helpers) is shared with
+tests/test_fleet_jax.py and tests/test_faults.py via
+tests/chaos_harness.py (DESIGN.md §12).
 
 §11 mesh coverage lives in ``test_mesh_*`` (skipped on single-device
 hosts; CI forces 8 CPU devices with
@@ -24,6 +27,7 @@ the RNG key, so the only difference is the shard_map plumbing), and the
 """
 import numpy as np
 import pytest
+from chaos_harness import assert_loop_equivalent, rel
 
 from repro.core.configurator import Configurator, reward_from_latency
 from repro.core.discretize import LeverDiscretiser
@@ -72,16 +76,6 @@ def _cfgr(env, *, device_loop="auto", seed=0, steps=3, ridge=True, **kw):
     return Configurator(env, METRICS, LEVERS, seed=seed,
                         steps_per_episode=steps, window_s=240.0,
                         device_loop=device_loop, bin_kw=bin_kw, **kw)
-
-
-def _trim_mean(x, frac=0.1):
-    x = np.sort(np.asarray(x))
-    k = int(len(x) * frac)
-    return x[k:len(x) - k].mean()
-
-
-def _rel(a, b):
-    return abs(a - b) / max(abs(b), 1e-12)
 
 
 # --------------------------------------------------------------------------
@@ -165,22 +159,6 @@ def _loop_rewards(backend, device_loop, n=24, updates=2, seed=0,
     return r, p
 
 
-def _assert_loop_equivalent(r_ref, p_ref, r_dev, p_dev, steps=3):
-    assert r_dev.shape == r_ref.shape
-    # medians pin the bulk of the reward/p99 distributions …
-    assert _rel(np.median(r_dev), np.median(r_ref)) < 0.10, (
-        np.median(r_ref), np.median(r_dev))
-    assert _rel(np.median(p_dev), np.median(p_ref)) < 0.15, (
-        np.median(p_ref), np.median(p_dev))
-    # … trimmed means additionally bound the mid-tail …
-    assert _rel(_trim_mean(r_dev), _trim_mean(r_ref)) < 0.30, (
-        _trim_mean(r_ref), _trim_mean(r_dev))
-    # … and returns (undiscounted episode sums, gamma=1) agree too
-    ret_ref = np.median(r_ref.reshape(-1, steps).sum(1))
-    ret_dev = np.median(r_dev.reshape(-1, steps).sum(1))
-    assert _rel(ret_dev, ret_ref) < 0.15, (ret_ref, ret_dev)
-
-
 def test_fused_loop_statistically_matches_oracle_loop():
     """Fleet-median rewards (window mean latency), p99 and returns from the
     fused device loop must agree with the numpy-oracle per-step loop — the
@@ -188,7 +166,7 @@ def test_fused_loop_statistically_matches_oracle_loop():
     actions, so this is a distributional pin, not a bitwise one."""
     r_ref, p_ref = _loop_rewards("numpy", "off")
     r_dev, p_dev = _loop_rewards("jax", "on")
-    _assert_loop_equivalent(r_ref, p_ref, r_dev, p_dev)
+    assert_loop_equivalent(r_ref, p_ref, r_dev, p_dev)
 
 
 @pytest.mark.parametrize("kind", ["trapezoid", "switching"])
@@ -199,7 +177,7 @@ def test_fused_variable_rate_matches_oracle_loop(kind):
     python ``rate()`` calls."""
     r_ref, p_ref = _loop_rewards("numpy", "off", n=16, kind=kind)
     r_dev, p_dev = _loop_rewards("jax", "on", n=16, kind=kind)
-    _assert_loop_equivalent(r_ref, p_ref, r_dev, p_dev)
+    assert_loop_equivalent(r_ref, p_ref, r_dev, p_dev)
 
 
 def test_fused_pallas_variable_rate_matches_oracle_loop():
@@ -208,7 +186,7 @@ def test_fused_pallas_variable_rate_matches_oracle_loop():
     SwitchingWorkload fleet, against the numpy oracle."""
     r_ref, p_ref = _loop_rewards("numpy", "off", n=8, kind="switching")
     r_dev, p_dev = _loop_rewards("pallas", "on", n=8, kind="switching")
-    _assert_loop_equivalent(r_ref, p_ref, r_dev, p_dev)
+    assert_loop_equivalent(r_ref, p_ref, r_dev, p_dev)
 
 
 def test_fused_loop_learns_like_the_oracle_loop():
@@ -330,7 +308,7 @@ def test_mesh_sharded_run_stays_in_distribution_and_hands_back_state():
     r8, env, runner8 = run("auto")
     assert runner1.mesh is None and runner8.mesh is not None
     assert runner8.mesh.size == ndev
-    assert _rel(np.median(r8), np.median(r1)) < 0.15, (
+    assert rel(np.median(r8), np.median(r1)) < 0.15, (
         np.median(r1), np.median(r8))
     # sharded loop state hands back cleanly: reconfig accounting advanced
     # and a later plain observe on the (still sharded) engine state works

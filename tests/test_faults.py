@@ -1,0 +1,403 @@
+"""Fault scenarios on the device engines (DESIGN.md §12).
+
+Every fault kind in ``repro.core.faults`` must run *fused* — evaluated
+in-trace by ``engine.fleet_jax`` on both the jax and pallas backends — and
+stay statistically pinned to the numpy oracle's host-evaluated twin
+(``DeviceFaultTable.effects`` inside ``FleetCore._tick``), via the shared
+``tests/chaos_harness`` discipline pooled over its seed matrix.
+
+Exact (bit-for-bit) contracts ride alongside the statistical ones:
+
+* a table of ``NoFault`` slots is a no-op on every backend — fault
+  multipliers enter the recurrence as exact f32 ``* 1.0``;
+* events parked entirely outside the simulated horizon never fire;
+* ``DeployLatencyFault`` (paper §4.4) delays the *effect* of a fused-loop
+  config move by R steps: any delay ≥ steps-per-episode freezes the
+  engine-visible config (two such runs are identical), and the first
+  delayed step matches the fully-frozen run exactly while an undelayed run
+  diverges.
+
+The SLO-aware reward (``reward_mode="slo"``) closes the loop: training
+through a correlated failure must show the breach in-window and recover
+once the fault clears — the measurement the ``train_chaos_*`` benchmark
+rows (benchmarks/fleet_scaling.py) record at scale.
+
+Property-based packing tests live in tests/test_faults_props.py
+(hypothesis; skipped where it isn't installed).
+"""
+import numpy as np
+import pytest
+from chaos_harness import (SEED_MATRIX, Tolerances,
+                           assert_window_stats_equivalent,
+                           collect_window_stats, rel)
+
+from repro.core.configurator import Configurator, reward_from_latency
+from repro.core.faults import (BacklogShockFault, DeployLatencyFault,
+                               FailureFault, NoFault, StragglerFault,
+                               chaos_scenario, no_faults, pack_device_faults,
+                               unpack_device_faults)
+from repro.data.workloads import PoissonWorkload
+from repro.engine import FleetEnv
+
+N = 6
+METRICS = ["latency_p99_ms", "latency_mean_ms", "queue_depth", "device_util",
+           "sched_queue_depth"]
+LEVERS = ["max_batch_events", "prefetch_depth", "driver_memory_gb",
+          "sink_partitions", "backup_tasks"]
+FROZEN = dict(split_after=10**9, extend_after=10**9, merge_after=10**9)
+
+#: one representative event per tick-effect kind, timed to land inside the
+#: harness's observation windows (stab preroll ≈ 30-180 s, then 240 s
+#: windows — t0 = 300 s sits in the first/second window)
+KIND_EVENTS = {
+    "straggler": lambda: StragglerFault(300.0, 240.0, 3.0),
+    "failure": lambda: FailureFault(300.0, 300.0, 6.0),
+    "shock": lambda: BacklogShockFault(300.0, 180.0, 2.5),
+}
+
+#: fault windows amplify the oracle's own seed-to-seed spread (a slowdown
+#: multiplies the queueing nonlinearity), so the chaos pins run slightly
+#: looser than the clean-fleet defaults — still far below any real
+#: modelling divergence
+CHAOS_TOL = Tolerances(mean=0.15, p99=0.20, processed=0.06)
+
+
+def _fleet(backend, seed=0, faults=None):
+    return _fleet_n(N, backend, seed=seed, faults=faults)
+
+
+def _fleet_n(n, backend, seed=0, faults=None):
+    return FleetEnv([PoissonWorkload(10_000, 0.5) for _ in range(n)],
+                    seeds=[seed + i for i in range(n)], backend=backend,
+                    faults=faults)
+
+
+def _faulted(kind):
+    return (pack_device_faults([[KIND_EVENTS[kind]()] for _ in range(N)])
+            if kind else None)
+
+
+_STATS_CACHE: dict = {}
+
+
+def _pooled_stats(backend, kind):
+    """Window stats pooled over the harness seed matrix (cached so the
+    jax and pallas pins share one numpy-oracle reference run)."""
+    key = (backend, kind)
+    if key not in _STATS_CACHE:
+        per = [collect_window_stats(_fleet(backend, s, _faulted(kind)),
+                                    windows=2)
+               for s in SEED_MATRIX]
+        _STATS_CACHE[key] = {k: float(np.mean([p[k] for p in per]))
+                             for k in per[0]}
+    return _STATS_CACHE[key]
+
+
+# --------------------------------------------------------------------------
+# statistical pins: every tick-effect kind, fused vs oracle, both backends
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+@pytest.mark.parametrize("kind", sorted(KIND_EVENTS))
+def test_fault_kind_statistically_matches_oracle(backend, kind):
+    ref = _pooled_stats("numpy", kind)
+    got = _pooled_stats(backend, kind)
+    assert_window_stats_equivalent(got, ref, CHAOS_TOL)
+
+
+@pytest.mark.parametrize("kind", sorted(KIND_EVENTS))
+def test_fault_kind_actually_bites(kind):
+    """The scenario construction check behind the pins above: each fault
+    kind must visibly degrade the oracle's fleet-mean latency — a pin
+    between two no-op runs would pass vacuously."""
+    clean = _pooled_stats("numpy", None)
+    faulted = _pooled_stats("numpy", kind)
+    if kind == "shock":
+        # a backlog shock multiplies the ingest rate: its primary signature
+        # is throughput, with latency dragged up only secondarily
+        assert faulted["processed"] > 1.3 * clean["processed"], (clean, faulted)
+        assert faulted["mean"] > clean["mean"], (clean, faulted)
+    else:
+        assert faulted["mean"] > 1.05 * clean["mean"], (kind, clean, faulted)
+
+
+# --------------------------------------------------------------------------
+# exact contracts: in-trace grid twin, no-op tables, horizon
+# --------------------------------------------------------------------------
+
+def test_fault_effect_grid_matches_numpy_twin():
+    """The in-trace ``fault_effect_grid`` (vmapped lax.switch over kind
+    codes) and the table's numpy ``effects`` twin are the same function —
+    every kind, composition across event slots, padding included."""
+    import jax.numpy as jnp
+
+    from repro.engine.fleet_jax import fault_effect_grid
+
+    table = pack_device_faults([
+        [StragglerFault(100.0, 50.0, 3.0)],
+        [FailureFault(80.0, 60.0, 4.0)],
+        [BacklogShockFault(30.0, 120.0, 2.5), StragglerFault(90.0, 40.0, 2.0)],
+        [DeployLatencyFault(2)],
+        [],
+    ])
+    times = np.linspace(0.0, 400.0, 161)[:, None] * np.ones((1, 5))
+    s_np, r_np = table.effects(times)
+    ft = {k: jnp.asarray(v) for k, v in table.asdict().items()}
+    s_j, r_j = fault_effect_grid(ft, jnp.asarray(times, jnp.float32))
+    assert np.allclose(np.asarray(s_j), s_np, rtol=1e-5, atol=1e-5)
+    assert np.allclose(np.asarray(r_j), r_np, rtol=1e-5, atol=1e-5)
+    # the failure's restart tail decays mult -> 1 over dur/2 after the outage
+    s1 = s_np[:, 1]
+    in_tail = (times[:, 1] > 140.0) & (times[:, 1] < 170.0)
+    assert (s1[in_tail] > 1.0).all() and (s1[in_tail] < 4.0).all()
+    assert np.all(np.diff(s1[in_tail]) <= 0)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax", "pallas"])
+def test_no_fault_table_is_bitwise_noop(backend):
+    """An all-``NoFault`` table multiplies by exact f32 1.0 everywhere:
+    windows must equal the faultless fleet bit-for-bit, per backend."""
+    e0 = _fleet(backend)
+    e1 = _fleet(backend, faults=no_faults(N, n_events=2))
+    for _ in range(2):
+        s0 = e0.observe_stats(240.0)
+        s1 = e1.observe_stats(240.0)
+        for k in ("mean_ms", "p99_ms", "processed"):
+            assert np.array_equal(np.asarray(s0[k]), np.asarray(s1[k])), k
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_out_of_horizon_events_never_fire(backend):
+    """Events parked past the simulated horizon are dead weight, not
+    perturbation: identical windows bit-for-bit."""
+    far = 10_000.0   # two observe windows reach ~1000 s of sim time
+    faults = pack_device_faults(
+        [[StragglerFault(far, 50.0, 3.0)], [FailureFault(far, 60.0)],
+         [BacklogShockFault(far, 60.0, 2.0)], [], [], []])
+    e0 = _fleet(backend)
+    e1 = _fleet(backend, faults=faults)
+    for _ in range(2):
+        s0 = e0.observe_stats(240.0)
+        s1 = e1.observe_stats(240.0)
+        for k in ("mean_ms", "p99_ms", "processed"):
+            assert np.array_equal(np.asarray(s0[k]), np.asarray(s1[k])), k
+
+
+def test_pack_unpack_roundtrip_and_validation():
+    events = [[StragglerFault(100.0, 50.0, 3.0)],
+              [FailureFault(10.0, 20.0), DeployLatencyFault(2)],
+              [BacklogShockFault(5.0, 30.0, 2.0)],
+              []]
+    t = pack_device_faults(events)
+    assert t.n_clusters == 4 and t.n_events == 2
+    back = unpack_device_faults(t)
+    assert [type(f) for f in back[1]] == [FailureFault, DeployLatencyFault]
+    assert back[3] == []
+    t2 = pack_device_faults(back, n_events=t.n_events)
+    assert np.array_equal(t.kind, t2.kind)
+    assert np.array_equal(t.params, t2.params)
+    assert t.max_deploy_delay() == 2
+    assert t.deploy_delays().tolist() == [0, 2, 0, 0]
+    with pytest.raises(ValueError):
+        pack_device_faults(events, n_events=1)
+    with pytest.raises(ValueError):
+        FleetEnv([PoissonWorkload(10_000, 0.5)] * 2, seeds=[0, 1],
+                 faults=no_faults(3))
+
+
+def test_chaos_scenario_composition():
+    t = chaos_scenario(8, t0_s=600.0, duration_s=240.0, deploy_delay=1,
+                       seed=3)
+    kinds = t.kind[:, 0].tolist()
+    assert kinds.count(FailureFault.KIND) == 2      # fail_frac=0.25 of 8
+    assert kinds.count(BacklogShockFault.KIND) == 2
+    assert kinds.count(StragglerFault.KIND) == 2
+    assert t.max_deploy_delay() == 1
+    assert (t.deploy_delays() == 1).all()
+    assert t.has_tick_effects()
+    assert not no_faults(4).has_tick_effects()
+    deploy_only = pack_device_faults([[DeployLatencyFault(2)]] * 4)
+    assert not deploy_only.has_tick_effects()
+    assert deploy_only.max_deploy_delay() == 2
+
+
+# --------------------------------------------------------------------------
+# deploy latency through the fused device loop (paper §4.4)
+# --------------------------------------------------------------------------
+
+def _greedy_records(delay, steps=3):
+    faults = (pack_device_faults([[DeployLatencyFault(delay)]
+                                  for _ in range(N)]) if delay else None)
+    env = _fleet("jax", faults=faults)
+    cfgr = Configurator(env, METRICS, LEVERS, seed=0,
+                        steps_per_episode=steps, window_s=240.0,
+                        device_loop="on", mesh="off", bin_kw=dict(FROZEN))
+    _, records = cfgr.run_fleet_episodes_device(explore=False)
+    return records   # cluster-major, N * steps
+
+
+def test_deploy_delay_beyond_episode_freezes_the_config():
+    """Any delay ≥ steps-per-episode means no requested config ever goes
+    live inside the batch — two such runs are identical to the float."""
+    r3 = _greedy_records(3)
+    r5 = _greedy_records(5)
+    assert [r.reward for r in r3] == [r.reward for r in r5]
+    assert [r.p99_ms for r in r3] == [r.p99_ms for r in r5]
+    assert [r.clock_s for r in r3] == [r.clock_s for r in r5]
+
+
+def test_deploy_delay_shifts_when_configs_take_effect():
+    """R=1: step 0 still runs the pre-episode config (it matches the
+    fully-frozen run exactly), while an undelayed run already shows the
+    move; later steps diverge from the frozen run once requests deploy."""
+    r0 = _greedy_records(0)
+    r1 = _greedy_records(1)
+    rf = _greedy_records(3)          # frozen reference (delay ≥ steps)
+    S = 3
+    # same greedy first action everywhere (deploy faults don't touch the
+    # initial observation), so any step-0 difference is purely the config
+    step0_levers = lambda recs: [(r.lever, r.direction) for r in recs[0::S]]
+    assert step0_levers(r0) == step0_levers(r1) == step0_levers(rf)
+    step0 = lambda recs: [(r.reward, r.p99_ms) for r in recs[0::S]]
+    assert step0(r1) == step0(rf)
+    assert step0(r0) != step0(r1)
+    # by the last step the R=1 run has deployed steps 0..S-2: it must have
+    # left the frozen trajectory
+    last = lambda recs: [r.reward for r in recs[S - 1::S]]
+    assert last(r1) != last(rf)
+
+
+# --------------------------------------------------------------------------
+# SLO-aware reward: shaping + recovery through a correlated failure
+# --------------------------------------------------------------------------
+
+def test_reward_from_latency_slo_mode():
+    lat = np.linspace(100.0, 2_000.0, 200)
+    p99 = np.percentile(lat, 99.0)
+    expect = (-lat.mean() / 1000.0
+              - 2.0 * max(p99 - 800.0, 0.0) / 1000.0
+              - 0.5 * (lat > 800.0).mean())
+    got = reward_from_latency(lat, "slo", slo_ms=800.0, hinge_w=2.0,
+                              breach_w=0.5)
+    assert got == pytest.approx(expect)
+    # below-SLO samples: pure -mean shaping, no hinge, no breach term
+    low = np.linspace(10.0, 200.0, 50)
+    assert reward_from_latency(low, "slo", slo_ms=800.0) == pytest.approx(
+        -low.mean() / 1000.0)
+
+
+def test_slo_gate_opens_the_fused_loop():
+    cfgr = Configurator(_fleet("jax"), METRICS, LEVERS, seed=0,
+                        window_s=240.0, device_loop="on", mesh="off",
+                        bin_kw=dict(FROZEN), reward_mode="slo")
+    assert cfgr.device_loop_reason() is None
+    bad = Configurator(_fleet("jax"), METRICS, LEVERS, seed=0,
+                       window_s=240.0, device_loop="on", mesh="off",
+                       bin_kw=dict(FROZEN), reward_mode="neg_inv")
+    assert "reward_mode" in bad.device_loop_reason()
+
+
+#: the correlated-failure scenario shared by the recovery + training tests:
+#: a fleet-wide 16x outage two windows long, landing after the preroll
+_T0, _DUR, _MULT = 900.0, 480.0, 16.0
+_WIN = 240.0
+
+
+def _classify(cfgr, tail_end=_T0 + _DUR + _DUR / 2):
+    clock = np.array([r.clock_s for r in cfgr.history])
+    p99 = np.array([r.p99_ms for r in cfgr.history])
+    pre = p99[clock < _T0]
+    during = p99[((clock - _WIN) < _T0 + _DUR) & (clock > _T0)]
+    post = p99[clock - _WIN > tail_end]
+    assert pre.size and during.size and post.size, (
+        "scenario timing drifted out of the episode budget",
+        clock.min(), clock.max())
+    return pre, during, post
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+def test_fused_fleet_recovers_from_correlated_failure(backend):
+    """Recovery-after-fault as a first-class measurement (§12): with the
+    engine-visible config frozen (a DeployLatencyFault longer than the
+    episode — composition of two fault kinds), the failure's breach and the
+    return to the pre-fault band are purely the simulator's doing. Post-tail
+    windows must sit back in the pre-fault band — the bounded-recovery
+    contract the `train_chaos_*` benchmark rows measure at fleet scale."""
+    steps = 12
+    faults = pack_device_faults(
+        [[FailureFault(_T0, _DUR, _MULT), DeployLatencyFault(steps + 1)]
+         for _ in range(N)])
+    cfgr = Configurator(_fleet(backend, faults=faults), METRICS, LEVERS,
+                        seed=0, steps_per_episode=steps, window_s=_WIN,
+                        device_loop="on", mesh="off", bin_kw=dict(FROZEN),
+                        reward_mode="slo", slo_ms=2_000.0)
+    cfgr.run_update()
+    pre, during, post = _classify(cfgr)
+    pre_med = np.median(pre)
+    assert np.median(during) > 1.5 * pre_med, (pre_med, np.median(during))
+    assert np.median(post) < 1.15 * pre_med, (pre_med, np.median(post))
+    # recovery is fleet-wide, not just central: at most a straggling window
+    # or two may still be draining backlog right after the restart tail
+    assert (post < 1.3 * pre_med).mean() >= 0.8, (pre_med, np.sort(post))
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+def test_slo_training_sees_breach(backend):
+    """SLO-shaped training through the same correlated failure: the fused
+    loop must run end-to-end, the record stream must show the breach while
+    the fault is live, and the ChaosCounters must account for every window.
+    (No post-fault band assertion here: REINFORCE exploration moves configs
+    mid-trajectory, so recovery is pinned on a frozen config above.)"""
+    faults = pack_device_faults(
+        [[FailureFault(_T0, _DUR, _MULT)] for _ in range(N)])
+    cfgr = Configurator(_fleet(backend, faults=faults), METRICS, LEVERS,
+                        seed=0, steps_per_episode=3, window_s=_WIN,
+                        device_loop="on", mesh="off", bin_kw=dict(FROZEN),
+                        reward_mode="slo", slo_ms=2_000.0)
+    for _ in range(4):
+        cfgr.run_update()
+    pre, during, _ = _classify(cfgr)
+    assert np.median(during) > 1.5 * np.median(pre), (
+        np.median(pre), np.median(during))
+    # chaos bookkeeping saw it all (windows counted, breaches recorded)
+    chaos = cfgr._device_runner().chaos
+    assert chaos.windows == 4 * 3 * N
+    assert chaos.fault_events == N
+    assert 0 < chaos.breached_windows <= chaos.windows
+    assert chaos.breach_frac_sum > 0.0
+
+
+def test_chaos_mesh_sharded_matches_unsharded():
+    """The whole §12 plumbing under shard_map (§11): fault tables, deploy
+    ring and slo reward carry per-cluster/replicated shardings through the
+    mesh program. Multi-device hosts only (the CI chaos matrix forces 8);
+    sharded and unsharded runs of the same chaos fleet must agree on the
+    reward bulk and on every exact counter."""
+    import jax
+
+    if jax.device_count() == 1:
+        pytest.skip("needs >1 jax device (XLA_FLAGS force on CPU)")
+    n = jax.device_count()
+    ev = unpack_device_faults(chaos_scenario(n, seed=0))
+    faults = pack_device_faults([e + [DeployLatencyFault(1)] for e in ev])
+    med = {}
+    chaos = {}
+    for mesh in ("off", "auto"):
+        cfgr = Configurator(_fleet_n(n, "jax", faults=faults), METRICS,
+                            LEVERS, seed=0, steps_per_episode=3,
+                            window_s=240.0, device_loop="on", mesh=mesh,
+                            bin_kw=dict(FROZEN), reward_mode="slo",
+                            slo_ms=2_000.0)
+        for _ in range(2):
+            cfgr.run_update()
+        rewards = np.array([r.reward for r in cfgr.history])
+        assert np.isfinite(rewards).all()
+        med[mesh] = float(np.median(rewards))
+        chaos[mesh] = cfgr._device_runner().chaos
+    for m in chaos.values():
+        assert m.windows == 2 * 3 * n
+        assert m.fault_events == chaos["off"].fault_events
+        assert m.breached_windows == chaos["off"].breached_windows
+    # per-shard RNG folds a different key than the unsharded program, so
+    # agreement is statistical, not bitwise (the §11 contract)
+    assert rel(med["auto"], med["off"]) < 0.15, med

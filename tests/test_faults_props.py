@@ -1,0 +1,96 @@
+"""Property-based tests for ``DeviceFaultTable`` packing (DESIGN.md §12).
+
+These run under hypothesis, which the CI chaos-suite installs; the module
+skips wholesale where it isn't available (the container image doesn't ship
+it). The deterministic twins of these properties — fixed-example
+round-trip, bit-for-bit no-op through a full fused window, horizon
+behaviour through real backends — live in tests/test_faults.py and always
+run.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.faults import (BacklogShockFault, DeployLatencyFault,
+                               FailureFault, NoFault, StragglerFault,
+                               no_faults, pack_device_faults,
+                               unpack_device_faults)
+
+_pos = dict(allow_nan=False, allow_infinity=False)
+
+event_st = st.one_of(
+    st.builds(NoFault),
+    st.builds(StragglerFault,
+              t0_s=st.floats(0.0, 1e5, **_pos),
+              duration_s=st.floats(1.0, 1e4, **_pos),
+              slow_mult=st.floats(1.0, 16.0, **_pos)),
+    st.builds(FailureFault,
+              t0_s=st.floats(0.0, 1e5, **_pos),
+              duration_s=st.floats(1.0, 1e4, **_pos),
+              slow_mult=st.floats(1.0, 16.0, **_pos)),
+    st.builds(BacklogShockFault,
+              t0_s=st.floats(0.0, 1e5, **_pos),
+              duration_s=st.floats(1.0, 1e4, **_pos),
+              rate_mult=st.floats(0.1, 16.0, **_pos)),
+    st.builds(DeployLatencyFault, delay_windows=st.integers(0, 12)),
+)
+events_st = st.lists(st.lists(event_st, max_size=3), min_size=1, max_size=8)
+
+
+@given(events_st)
+@settings(max_examples=60, deadline=None)
+def test_pack_unpack_roundtrip(events):
+    """pack(unpack(pack(x))) == pack(x) bit-for-bit: unpack rounds every
+    value through the table's own f32 storage, so re-packing is lossless
+    regardless of the original float64 spec values."""
+    t = pack_device_faults(events)
+    back = unpack_device_faults(t)
+    t2 = pack_device_faults(back, n_events=t.n_events)
+    assert np.array_equal(t.kind, t2.kind)
+    assert np.array_equal(t.params, t2.params)
+    # padding invariants: width is the widest cluster (min 1), pads NoFault
+    assert t.n_events == max(1, max(len(e) for e in events))
+    assert all(len(b) == len(e) for b, e in zip(back, events))
+
+
+@given(n=st.integers(1, 12), e=st.integers(1, 4),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_no_fault_table_is_identity_on_the_grids(n, e, seed):
+    """All-NoFault tables produce exact f32 1.0 multipliers on both the
+    numpy twin and the in-trace grid — the bit-for-bit no-op guarantee the
+    fused window relies on (the engine-level twin runs in test_faults.py)."""
+    import jax.numpy as jnp
+
+    from repro.engine.fleet_jax import fault_effect_grid
+
+    t = no_faults(n, n_events=e)
+    times = np.random.default_rng(seed).uniform(0.0, 1e5, (7, n))
+    s_np, r_np = t.effects(times)
+    assert (s_np == 1.0).all() and (r_np == 1.0).all()
+    ft = {k: jnp.asarray(v) for k, v in t.asdict().items()}
+    s_j, r_j = fault_effect_grid(ft, jnp.asarray(times, jnp.float32))
+    assert (np.asarray(s_j) == 1.0).all() and (np.asarray(r_j) == 1.0).all()
+
+
+@given(st.lists(st.tuples(st.sampled_from(["straggler", "failure", "shock"]),
+                          st.floats(0.0, 1e4, **_pos),
+                          st.floats(1.0, 1e3, **_pos)),
+                min_size=1, max_size=6),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_out_of_horizon_events_are_exact_identity(specs, seed):
+    """Events whose entire span (including the failure restart tail) sits
+    past the horizon never fire: multipliers are exactly 1.0 for every time
+    inside it."""
+    H = 50_000.0
+    mk = {"straggler": lambda t0, d: StragglerFault(H + t0, d, 3.0),
+          "failure": lambda t0, d: FailureFault(H + t0, d, 4.0),
+          "shock": lambda t0, d: BacklogShockFault(H + t0, d, 2.0)}
+    t = pack_device_faults([[mk[k](t0, d)] for k, t0, d in specs])
+    times = np.random.default_rng(seed).uniform(
+        0.0, np.nextafter(H, 0.0), (9, len(specs)))
+    s, r = t.effects(times)
+    assert (s == 1.0).all() and (r == 1.0).all()

@@ -1,11 +1,13 @@
-"""Monitoring registry + time-series store."""
+"""Monitoring registry + time-series store + chaos/SLO counters."""
 import numpy as np
+import pytest
 
 from repro.monitoring import (
     DRIVER_METRICS,
     METRIC_NAMES,
     REGISTRY,
     WORKER_METRICS,
+    ChaosCounters,
     TimeSeriesStore,
 )
 
@@ -48,3 +50,73 @@ def test_empty_store_returns_zeros():
     store = TimeSeriesStore(["a"], n_nodes=3)
     avg = store.node_average(10.0, now=0.0)
     np.testing.assert_allclose(avg["a"], np.zeros(3))
+
+
+def test_chaos_counters_breach_frac_path():
+    """slo-mode accounting: breach_frac rows from the in-trace tick-level
+    breach fraction decide breached_windows; p99 only feeds the high-water
+    mark. Two batches accumulate."""
+    c = ChaosCounters()
+    c.record_batch(rewards=[[-1.0, -2.0], [-3.0, -4.0]],
+                   p99_ms=[[900.0, 1200.0], [800.0, 700.0]],
+                   breach_frac=[[0.0, 0.5], [0.25, 0.0]])
+    c.record_batch(rewards=[[-5.0]], p99_ms=[[2500.0]], breach_frac=[[1.0]])
+    assert c.windows == 5
+    assert c.breached_windows == 3          # frac > 0, NOT p99-based
+    assert c.reward_sum == pytest.approx(-15.0)
+    assert c.breach_frac_sum == pytest.approx(1.75)
+    assert c.p99_max_ms == 2500.0
+    assert c.mean_reward == pytest.approx(-3.0)
+    assert c.breach_rate == pytest.approx(3 / 5)
+
+
+def test_chaos_counters_slo_ms_fallback_and_wall():
+    """Without breach_frac (non-slo rewards) an explicit slo_ms counts
+    breaches from window p99; without either, nothing is a breach."""
+    c = ChaosCounters()
+    c.record_batch(rewards=[-1.0, -1.0, -1.0],
+                   p99_ms=[500.0, 1500.0, 2500.0], slo_ms=1000.0)
+    assert c.breached_windows == 2
+    c.record_batch(rewards=[-1.0], p99_ms=[9000.0])   # slo_ms=0: no SLO set
+    assert c.breached_windows == 2 and c.windows == 4
+    assert c.windows_per_s == 0.0                     # no wall time yet
+    c.add_wall(2.0)
+    c.add_wall(0.5)
+    assert c.wall_s == 2.5 and c.windows_per_s == pytest.approx(4 / 2.5)
+    d = c.as_dict()
+    assert d["windows"] == 4 and d["windows_per_s"] == pytest.approx(1.6)
+    assert d["breach_rate"] == pytest.approx(0.5)
+
+
+def test_chaos_counters_under_fused_path():
+    """The device loop feeds the counters once per episode batch from the
+    same device->host pull that builds StepRecords: window counts, reward
+    mass, wall time, static fault-event count — with plain neg_mean reward
+    (no in-trace breach_frac), breaches fall back to p99 > slo_ms."""
+    from repro.core.configurator import Configurator
+    from repro.data.workloads import PoissonWorkload
+    from repro.engine import FleetEnv
+
+    n, updates, steps = 4, 2, 3
+    env = FleetEnv([PoissonWorkload(10_000, 0.5) for _ in range(n)],
+                   seeds=list(range(n)), backend="jax")
+    cfgr = Configurator(
+        env, ["latency_p99_ms", "latency_mean_ms", "queue_depth"],
+        ["max_batch_events", "prefetch_depth"], seed=0,
+        steps_per_episode=steps, window_s=240.0, device_loop="on",
+        mesh="off", reward_mode="neg_mean", slo_ms=1_000.0,
+        bin_kw=dict(split_after=10**9, extend_after=10**9,
+                    merge_after=10**9))
+    for _ in range(updates):
+        cfgr.run_update()
+    chaos = cfgr._device_runner().chaos
+    assert chaos.windows == updates * steps * n
+    assert chaos.fault_events == 0
+    assert chaos.wall_s > 0.0 and chaos.windows_per_s > 0.0
+    assert chaos.reward_sum == pytest.approx(
+        sum(r.reward for r in cfgr.history), rel=1e-5)
+    assert chaos.p99_max_ms == pytest.approx(
+        max(r.p99_ms for r in cfgr.history), rel=1e-5)
+    # the saturated seed fleet runs way above a 1 s SLO: p99 fallback fires
+    assert chaos.breached_windows == chaos.windows
+    assert chaos.breach_frac_sum == 0.0   # no in-trace rows under neg_mean
