@@ -128,10 +128,18 @@ class CheckpointStore:
         return steps[-1] if steps else None
 
     def restore(self, skeleton: PyTree, *, step: Optional[int] = None,
-                shardings: Optional[PyTree] = None) -> tuple[PyTree, int, dict]:
+                shardings: Optional[PyTree] = None,
+                host: bool = False) -> tuple[PyTree, int, dict]:
         """Load into the structure of ``skeleton``; if ``shardings`` (a pytree
         of NamedSharding matching skeleton) is given, every leaf is placed
-        with it — this is the elastic reshard-on-restore path."""
+        with it — this is the elastic reshard-on-restore path.
+
+        ``host=True`` returns raw numpy leaves exactly as saved. The default
+        device path goes through ``jnp.asarray``, which under x64-off
+        silently truncates float64/int64 leaves (simulator clocks, RNG
+        words, bin hit counts) — callers restoring host-side state that must
+        round-trip bitwise (the serve controller) use the host path and
+        device_put only the leaves that belong on device."""
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
@@ -142,7 +150,12 @@ class CheckpointStore:
         for key, info in manifest["leaves"].items():
             arr = np.load(d / info["file"])
             sh = flat_shard.get(key)
-            flat[key] = jax.device_put(arr, sh) if sh is not None else jax.numpy.asarray(arr)
+            if sh is not None:
+                flat[key] = jax.device_put(arr, sh)
+            elif host:
+                flat[key] = arr
+            else:
+                flat[key] = jax.numpy.asarray(arr)
         tree = _unflatten_into(skeleton, flat)
         return tree, manifest["step"], manifest.get("extra", {})
 

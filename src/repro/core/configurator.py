@@ -435,26 +435,12 @@ class Configurator:
         Double-buffered dispatch (§11): the passes chain device-side
         (``run_async``), the update program is enqueued on their
         device-resident outputs, and only THEN does the host block and
-        materialise records / replay §2.4.1 bins (``finalize``) — the
-        host-side adaptation work overlaps the device update."""
-        import jax.numpy as jnp
-
+        materialise records / replay §2.4.1 bins
+        (``DeviceEpisodeRunner.run_cycle``) — the host-side adaptation
+        work overlaps the device update."""
         runner = self._device_runner()
         passes = max(1, -(-self.episodes_per_update // self.env.n_clusters))
-        batches = [runner.run_async() for _ in range(passes)]
-        if len(batches) == 1:
-            b = batches[0]
-        else:  # stack passes along the episode axis, still on device
-            b = {k: jnp.concatenate([x[k] for x in batches], axis=0)
-                 for k in batches[0]}
-        t0 = time.perf_counter()
-        pending = self.agent.update_batch_async(b["states"], b["actions"],
-                                                b["rewards"])
-        dispatch_s = time.perf_counter() - t0
-        all_records = runner.finalize()   # host work, device update in flight
-        t1 = time.perf_counter()
-        stats = pending()
-        upd_s = dispatch_s + time.perf_counter() - t1
+        stats, all_records, upd_s = runner.run_cycle(passes=passes)
         return self._finish_update(stats, all_records, upd_s)
 
     def _finish_update(self, stats: dict, all_records: list,
@@ -463,6 +449,17 @@ class Configurator:
             all_records[-1].phases["update_s"] = upd_s
         self.history.extend(all_records)
         stats["p99_ms"] = all_records[-1].p99_ms if all_records else float("nan")
+        return stats
+
+    def run_cycle(self) -> dict:
+        """One serve-loop shadow pass (DESIGN.md §13): a single
+        ``run_update`` outer iteration whose freshly-appended
+        ``StepRecord``s ride back under ``stats["records"]`` — the serve
+        controller picks its challenger from them without rescanning
+        ``self.history``."""
+        n0 = len(self.history)
+        stats = self.run_update()
+        stats["records"] = self.history[n0:]
         return stats
 
     def tune(self, n_updates: int, *, callback=None) -> list[StepRecord]:

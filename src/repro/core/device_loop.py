@@ -419,6 +419,32 @@ class DeviceEpisodeRunner:
         batch = self.run_async(explore=explore, greedy=greedy)
         return batch, self.finalize()
 
+    def run_cycle(self, *, passes: int = 1):
+        """One serve-loop shadow cycle (DESIGN.md §13) — exactly one outer
+        Algorithm-1 iteration as the SAME ≤2 jitted programs the batch
+        tuner compiles (§10/§11): ``passes`` chained episode programs plus
+        one update program, double-buffered so the host's record
+        materialisation and bin replay overlap the in-flight update.
+        Returns ``(stats, records, upd_s)``. An always-on loop calling
+        this per cycle never retraces (the no-retrace pin in
+        tests/test_serve.py watches ``TRACE_COUNTS`` across cycles)."""
+        batches = [self.run_async() for _ in range(max(1, passes))]
+        if len(batches) == 1:
+            b = batches[0]
+        else:  # stack passes along the episode axis, still on device
+            b = {k: jnp.concatenate([x[k] for x in batches], axis=0)
+                 for k in batches[0]}
+        agent = self.cfgr.agent
+        t0 = time.perf_counter()
+        pending = agent.update_batch_async(b["states"], b["actions"],
+                                           b["rewards"])
+        dispatch_s = time.perf_counter() - t0
+        records = self.finalize()   # host work, device update in flight
+        t1 = time.perf_counter()
+        stats = pending()
+        upd_s = dispatch_s + time.perf_counter() - t1
+        return stats, records, upd_s
+
     def run_async(self, *, explore: bool = True, greedy: bool = False):
         """Dispatch one fused episode batch WITHOUT blocking on it and
         return the device-resident (N, S) batch. Consecutive calls before

@@ -308,6 +308,18 @@ class AutoTuner:
             seed=self.seed, **kw)
         return self.configurator
 
+    def build_serve_controller(self, workloads, **kw):
+        """§13 handoff from offline analysis to the continuous control
+        plane: the tuner's selected metrics + ranked levers seed a
+        ``ServeController`` whose shadow fleet keeps training forever.
+        ``workloads`` is the serve-time workload roster (one per shadow
+        cluster); remaining kwargs pass through to the controller."""
+        assert self.selected_metrics and self.ranked_levers, "run analyse() first"
+        from repro.serve import ServeController
+        kw.setdefault("seed", self.seed)
+        return ServeController(workloads, metrics=self.selected_metrics,
+                               levers=self.ranked_levers, **kw)
+
     def run(self, n_updates: int, *, collect_windows: int = 120,
             configurator_kw: Optional[dict] = None, callback=None):
         """collect -> analyse -> tune, in one call (examples/launchers)."""

@@ -145,13 +145,32 @@ def main(argv=None):
               f"min {np.min([r.p99_ms for r in last]):.0f} ms  "
               f"return {stats['mean_return']:.2f}")
 
-    cfgr.tune(args.updates, callback=cb)
+    from repro.monitoring import ChaosCounters, flush_guard
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    def metrics_text():
+        runner = cfgr._runner
+        chaos = runner.chaos if runner is not None else ChaosCounters()
+        return chaos.prometheus_text()
+
+    # the guard (shared with launch/serve.py) remaps SIGTERM to
+    # KeyboardInterrupt and writes the dump in its finally — a Ctrl-C'd or
+    # killed tune run always leaves a final metrics.prom behind
+    interrupted = False
+    try:
+        with flush_guard(out / "metrics.prom", metrics_text):
+            cfgr.tune(args.updates, callback=cb)
+    except KeyboardInterrupt:
+        interrupted = True
+        print(f"[interrupted] final metrics dump at {out}/metrics.prom")
+    if interrupted and not cfgr.history:
+        return
     best = min(cfgr.history, key=lambda r: r.p99_ms)
     print(f"[done] best p99 {best.p99_ms:.0f} ms "
           f"({100 * (1 - best.p99_ms / base_p99):.0f}% below default)")
 
-    out = Path(args.out)
-    out.mkdir(parents=True, exist_ok=True)
     tuner.save_analysis(out / "analysis.json")
     hist = [
         dict(lever=r.lever, direction=r.direction, reward=r.reward,

@@ -5,8 +5,10 @@ from repro.monitoring.metrics import (
     WORKER_METRICS,
     ChaosCounters,
     MetricDef,
+    ServeCounters,
     TimeSeriesStore,
     build_registry,
+    flush_guard,
 )
 
 __all__ = [
@@ -16,6 +18,8 @@ __all__ = [
     "WORKER_METRICS",
     "ChaosCounters",
     "MetricDef",
+    "ServeCounters",
     "TimeSeriesStore",
     "build_registry",
+    "flush_guard",
 ]

@@ -17,7 +17,10 @@ them): load, compute, memory, network, host, efficiency, reliability, power.
 """
 from __future__ import annotations
 
+import contextlib
+import threading
 from dataclasses import dataclass, field
+from pathlib import Path
 from typing import Optional, Sequence
 
 import numpy as np
@@ -209,6 +212,138 @@ class ChaosCounters:
                 "windows_per_s": self.windows_per_s,
                 "mean_reward": self.mean_reward,
                 "breach_rate": self.breach_rate}
+
+    def prometheus_text(self, prefix: str = "repro_chaos") -> str:
+        """Prometheus text-exposition dump of the counters."""
+        return _prometheus_text(prefix, self.as_dict(), _CHAOS_COUNTER_KEYS)
+
+
+#: which ChaosCounters fields render as monotonically-increasing counters
+#: (``_total`` suffix) vs gauges in the text exposition
+_CHAOS_COUNTER_KEYS = frozenset(
+    {"windows", "breached_windows", "fault_events"})
+
+_SERVE_COUNTER_KEYS = frozenset(
+    {"cycles", "shadow_windows", "canary_windows", "canary_breached",
+     "live_windows", "live_breached", "promotions", "rollbacks",
+     "demotions", "holds"})
+
+
+def _prometheus_text(prefix: str, values: dict, counter_keys) -> str:
+    """Render a flat {name: number} dict in the Prometheus text-exposition
+    format (one HELP/TYPE pair per series, counters get ``_total``)."""
+    lines = []
+    for k, v in values.items():
+        if v is None or isinstance(v, (dict, list, str)):
+            continue
+        kind = "counter" if k in counter_keys else "gauge"
+        name = f"{prefix}_{k}" + ("_total" if kind == "counter" else "")
+        lines.append(f"# HELP {name} {k.replace('_', ' ')}")
+        lines.append(f"# TYPE {name} {kind}")
+        lines.append(f"{name} {float(v):g}")
+    return "\n".join(lines) + "\n"
+
+
+@dataclass
+class ServeCounters:
+    """Control-plane bookkeeping for the serve loop (DESIGN.md §13).
+
+    Counters (monotone): cycles, per-role window counts, SLO breach counts
+    on the canary and live fleets, and the gate outcome tally
+    (promotions / rollbacks / demotions / holds). Gauges: the latest live
+    reward/p99 and the canary p99 high-water of the most recent
+    evaluation. ``prometheus_text`` renders the ``/metrics``-style dump
+    the launcher writes on every cycle and on shutdown (``flush_guard``)."""
+
+    cycles: int = 0
+    shadow_windows: int = 0
+    canary_windows: int = 0
+    canary_breached: int = 0
+    live_windows: int = 0
+    live_breached: int = 0
+    promotions: int = 0
+    rollbacks: int = 0
+    demotions: int = 0
+    holds: int = 0
+    wall_s: float = 0.0
+    live_reward: float = 0.0
+    live_p99_ms: float = 0.0
+    last_canary_p99_ms: float = 0.0
+
+    def inc(self, name: str, n: int = 1) -> None:
+        setattr(self, name, getattr(self, name) + int(n))
+
+    def add_wall(self, seconds: float) -> None:
+        self.wall_s += float(seconds)
+
+    def observe_live(self, *, reward: float, p99_ms: float) -> None:
+        self.live_reward = float(reward)
+        self.live_p99_ms = float(p99_ms)
+
+    @property
+    def windows_per_s(self) -> float:
+        w = self.shadow_windows + self.canary_windows + self.live_windows
+        return w / self.wall_s if self.wall_s > 0.0 else 0.0
+
+    @property
+    def breach_rate(self) -> float:
+        w = self.canary_windows + self.live_windows
+        return (self.canary_breached + self.live_breached) / w if w else 0.0
+
+    @property
+    def cycle_latency_s(self) -> float:
+        return self.wall_s / self.cycles if self.cycles else 0.0
+
+    def as_dict(self) -> dict:
+        d = {f: getattr(self, f) for f in self.__dataclass_fields__}
+        d["windows_per_s"] = self.windows_per_s
+        d["breach_rate"] = self.breach_rate
+        d["cycle_latency_s"] = self.cycle_latency_s
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServeCounters":
+        c = cls()
+        for f in cls.__dataclass_fields__:
+            if f in d:
+                setattr(c, f, type(getattr(c, f))(d[f]))
+        return c
+
+    def prometheus_text(self, prefix: str = "repro_serve") -> str:
+        return _prometheus_text(prefix, self.as_dict(), _SERVE_COUNTER_KEYS)
+
+
+@contextlib.contextmanager
+def flush_guard(path, render):
+    """Always-write-the-metrics-dump guard for the launchers.
+
+    ``render()`` must return the text to write to ``path``. The body runs
+    with SIGTERM remapped to ``KeyboardInterrupt`` so a polite kill of a
+    long-running serve/tune process unwinds through the ``finally`` and
+    the final dump is written — the launch/tune.py Ctrl-C fix and the
+    serve loop's shutdown path share this one guard."""
+    import os
+    import signal
+
+    path = Path(path)
+    prev = None
+    is_main = threading.current_thread() is threading.main_thread()
+    if is_main:
+        def _term(signum, frame):
+            raise KeyboardInterrupt
+        try:
+            prev = signal.signal(signal.SIGTERM, _term)
+        except (ValueError, OSError):
+            prev = None
+    try:
+        yield
+    finally:
+        if prev is not None:
+            signal.signal(signal.SIGTERM, prev)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_suffix(path.suffix + ".tmp")
+        tmp.write_text(render())
+        os.replace(tmp, path)
 
 
 class TimeSeriesStore:

@@ -1,0 +1,282 @@
+"""Serve-path integration suite (DESIGN.md §13).
+
+Pins the control plane end to end: the CanaryGate state machine, the
+episode store, promotion within K cycles when a challenger genuinely beats
+a degraded incumbent, FailureFault-driven rollback with the incumbent
+restored bit-for-bit, ServeCounters accounting + the Prometheus dump, the
+no-retrace pin across serve cycles (the always-on loop must keep compiling
+the SAME ≤2 device programs as cycle 1), and the 20-cycle SwitchingWorkload
+acceptance run. Statistical assertions use tests/chaos_harness.py
+tolerances — no ad-hoc numbers.
+"""
+import numpy as np
+import pytest
+
+from chaos_harness import DEFAULT_TOL, assert_rel_close
+from repro.core import device_loop as dl
+from repro.core import policy as pol
+from repro.core.faults import FailureFault
+from repro.data.workloads import PoissonWorkload, SwitchingWorkload
+from repro.monitoring import ServeCounters, flush_guard
+from repro.serve import (CanaryGate, EpisodeStore, ServeController,
+                         workload_features)
+
+METRICS = ["latency_p99_ms", "latency_mean_ms", "queue_depth",
+           "device_util", "sched_queue_depth"]
+LEVERS = ["max_batch_events", "prefetch_depth", "driver_memory_gb",
+          "sink_partitions", "backup_tasks"]
+#: freeze §2.4.1 bin adaptation — serve pins want a stable lever table
+FROZEN = dict(split_after=10**9, extend_after=10**9, merge_after=10**9)
+#: a genuinely bad incumbent: tiny max-batch throttles the pipeline to
+#: ~30× the default latency (probed: p99 ≈ 306 s vs ≈ 10 s) — any
+#: reasonable challenger beats it by far more than the gate margin. NOTE:
+#: this point is SATURATED (service < arrival), so the fleet's backlog
+#: grows without bound — promote tests using it must disable the breach
+#: path with a huge SLO or every window breaches forever.
+DEGRADED = {"max_batch_events": 20_000.0}
+#: degraded but STATIONARY (probed: p99 oscillates 10-17 s with the
+#: switching phases vs a flat ≈ 10 s healthy): bad enough that healthy
+#: challengers clear the margin, stable enough that nothing breaches a
+#: 20 s SLO at rest — the acceptance run's starting point
+DEGRADED_STATIONARY = {"max_batch_events": 120_000.0}
+
+
+def _wl(i):
+    return SwitchingWorkload(PoissonWorkload(6_000, 0.5),
+                             PoissonWorkload(12_000, 0.5),
+                             period_s=700.0 + 60.0 * i)
+
+
+def _controller(n=3, **kw):
+    kw.setdefault("backend", "jax")
+    kw.setdefault("seed", 0)
+    kw.setdefault("window_s", 240.0)
+    kw.setdefault("steps_per_episode", 2)
+    kw.setdefault("canary_pairs", 2)
+    kw.setdefault("n_live", 2)
+    kw.setdefault("bin_kw", FROZEN)
+    kw.setdefault("mesh", "off")
+    return ServeController([_wl(i) for i in range(n)],
+                           metrics=METRICS, levers=LEVERS, **kw)
+
+
+# ---------------------------------------------------------------- gate unit
+def test_gate_promotes_after_k_consecutive_wins():
+    g = CanaryGate(k=2, margin=0.02)
+    g.adopt({"x": 1}, cycle=1)
+    assert g.decide(-1.0, -2.0, False, cycle=1) == "hold"
+    assert g.streak == 1
+    assert g.decide(-1.0, -2.0, False, cycle=2) == "promote"
+    assert g.challenger is None and g.last_promoted == {"x": 1}
+    assert [e["event"] for e in g.log] == ["adopt", "hold", "promote"]
+
+
+def test_gate_demotes_on_single_loss_and_resets_streak():
+    g = CanaryGate(k=3, margin=0.0)
+    g.adopt({"x": 1}, cycle=1)
+    assert g.decide(-1.0, -2.0, False, cycle=1) == "hold"
+    # one loss ends the evaluation — consecutive means consecutive
+    assert g.decide(-2.0, -1.0, False, cycle=2) == "demote"
+    assert g.challenger is None and g.streak == 0
+    assert not g.promotions()
+
+
+def test_gate_breach_beats_reward_and_rolls_back():
+    g = CanaryGate(k=1, margin=0.0)
+    g.adopt({"x": 1}, cycle=1)
+    # the challenger WINS on reward but breached: rollback anyway — a
+    # config that breached under canary can never be promoted
+    assert g.decide(-1.0, -5.0, True, cycle=1) == "rollback"
+    assert g.challenger is None
+    assert len(g.rollbacks()) == 1 and not g.promotions()
+
+
+def test_gate_margin_is_relative():
+    g = CanaryGate(k=1, margin=0.10)
+    assert g.beats(-0.89, -1.0)          # 11 % better than |−1|
+    assert not g.beats(-0.95, -1.0)      # only 5 % better
+    g.adopt({"x": 1}, cycle=1)
+    assert g.decide(-0.95, -1.0, False, cycle=1) == "demote"
+
+
+def test_gate_state_roundtrip():
+    g = CanaryGate(k=3, margin=0.05)
+    g.adopt({"x": 1}, cycle=4)
+    g.decide(-1.0, -2.0, False, cycle=4)
+    h = CanaryGate()
+    h.load_state(g.state())
+    assert h.state() == g.state()
+    assert h.decide(-1.0, -2.0, False, cycle=5) == "hold"  # streak carried
+
+
+# ------------------------------------------------------------ episode store
+def test_episode_store_jsonl_roundtrip(tmp_path):
+    p = tmp_path / "hist.jsonl"
+    s = EpisodeStore(p)
+    feats = workload_features(_wl(0), t=100.0)
+    for c in range(4):
+        s.append(cycle=c, role="shadow", workload=feats,
+                 config={"max_batch_events": np.float64(1e5 + c)},
+                 reward=np.float32(-c), p99_ms=5000.0, clock_s=240.0 * c)
+    s2 = EpisodeStore(p)                 # reload from disk
+    assert s2.rows() == s.rows()
+    assert isinstance(s2.rows()[0]["config"]["max_batch_events"], float)
+    assert s2.truncate_to_cycle(1) == 2  # crash-resume consistency
+    assert len(EpisodeStore(p)) == 2
+
+
+def test_episode_store_warm_start_query():
+    s = EpisodeStore()
+    lo = {"kind": "SwitchingWorkload", "rate": 6_000.0, "mean_size": 0.5}
+    hi = {"kind": "SwitchingWorkload", "rate": 12_000.0, "mean_size": 0.5}
+    s.append(cycle=1, role="promote", workload=lo, config={"v": 1},
+             reward=-2.0, p99_ms=1.0, clock_s=0.0)
+    s.append(cycle=2, role="promote", workload=lo, config={"v": 2},
+             reward=-1.0, p99_ms=1.0, clock_s=0.0)
+    s.append(cycle=3, role="promote", workload=hi, config={"v": 3},
+             reward=-0.5, p99_ms=1.0, clock_s=0.0)
+    assert s.best_config_for(lo) == {"v": 2}     # best reward at nearest rate
+    assert s.best_config_for(hi) == {"v": 3}
+    assert s.best_config_for({"kind": "Nope", "rate": 1.0}) is not None
+
+
+# ------------------------------------------------- promotion / rollback loop
+def test_challenger_beats_degraded_incumbent_and_promotes():
+    ctl = _controller(k_promote=2, margin=0.02, slo_ms=400_000.0,
+                      incumbent=DEGRADED)
+    assert ctl.incumbent["max_batch_events"] == 20_000.0
+    for _ in range(8):
+        s = ctl.run_cycle()
+        if s["decision"] == "promote":
+            break
+    promos = ctl.gate.promotions()
+    assert ctl.counters.promotions >= 1, ctl.gate.log
+    assert ctl.counters.promotions == len(promos)
+    # the winner beat the incumbent in K consecutive canary evaluations and
+    # is now what the live fleet serves
+    assert promos[0]["cand_reward"] > promos[0]["inc_reward"]
+    assert ctl.incumbent != DEGRADED
+    assert ctl.incumbent["max_batch_events"] != 20_000.0
+    assert all(c == ctl.incumbent for c in ctl.live_env.current_configs())
+    assert ctl.history.rows(role="promote")
+
+
+def test_failure_fault_on_canary_triggers_rollback_bit_for_bit():
+    # a permanent outage on the CHALLENGER slice only (clusters 0..M-1):
+    # every canary evaluation breaches, so nothing may ever be promoted and
+    # the incumbent must come back on the canary fleet bit-for-bit
+    M = 2
+    faults = [[FailureFault(t0_s=0.0, duration_s=1e9, slow_mult=8.0)]
+              for _ in range(M)] + [[] for _ in range(M)]
+    ctl = _controller(k_promote=1, margin=0.0, slo_ms=12_000.0,
+                      canary_faults=faults)
+    incumbent0 = dict(ctl.incumbent)
+    for _ in range(3):
+        ctl.run_cycle()
+    c = ctl.counters
+    assert c.rollbacks >= 1 and c.promotions == 0, ctl.gate.log
+    assert c.rollbacks == len(ctl.gate.rollbacks())
+    assert c.canary_breached >= c.rollbacks
+    # bit-for-bit: the exact incumbent dict is back on every canary
+    # replica, and the live fleet never served anything else
+    assert ctl.incumbent == incumbent0
+    assert all(cfg == incumbent0 for cfg in ctl.canary_env.current_configs())
+    assert all(cfg == incumbent0 for cfg in ctl.live_env.current_configs())
+    canary_rows = ctl.history.rows(role="canary")
+    assert canary_rows and all(r["breached"] for r in canary_rows)
+
+
+# ------------------------------------------------------- counters / metrics
+def test_serve_counters_accounting_and_prometheus_text():
+    ctl = _controller(n=2, k_promote=2, margin=0.0, slo_ms=20_000.0)
+    ctl.run_cycle()
+    ctl.run_cycle()
+    c = ctl.counters
+    assert c.cycles == 2
+    assert c.shadow_windows == 2 * 2 * 2   # cycles × clusters × steps
+    assert c.canary_windows == 2 * 2 * ctl.canary_pairs
+    assert c.live_windows == 2 * ctl.live_env.n_clusters
+    d = c.as_dict()
+    assert d["windows_per_s"] > 0 and d["cycle_latency_s"] > 0
+    text = c.prometheus_text()
+    assert "# TYPE repro_serve_cycles_total counter" in text
+    assert "repro_serve_cycles_total 2" in text
+    assert "# TYPE repro_serve_live_p99_ms gauge" in text
+    assert f"repro_serve_promotions_total {c.promotions}" in text
+    # the registry round-trips through its dict form (checkpoint extra)
+    c2 = ServeCounters.from_dict(d)
+    assert c2.as_dict() == d
+
+
+def test_flush_guard_writes_dump_even_on_interrupt(tmp_path):
+    path = tmp_path / "m" / "metrics.prom"
+    c = ServeCounters(cycles=3)
+    with pytest.raises(KeyboardInterrupt):
+        with flush_guard(path, c.prometheus_text):
+            c.inc("cycles")
+            raise KeyboardInterrupt
+    assert "repro_serve_cycles_total 4" in path.read_text()
+
+
+# ------------------------------------------------------------ no-retrace pin
+def test_serve_loop_compiles_same_programs_as_cycle_one():
+    ctl = _controller(n=2, slo_ms=20_000.0)
+    # pin the exploit static open from the start so cycle 1 compiles the
+    # steady-state program set (same discipline as test_device_loop)
+    ctl.cfgr.agent.f_warmup_updates = 0
+    assert ctl.cfgr.device_loop_reason() is None
+    ctl.run_cycle()
+    episode_traces = dict(dl.TRACE_COUNTS)
+    update_traces = pol.UPDATE_TRACE_COUNT[0]
+    for _ in range(2):
+        ctl.run_cycle()
+    # an always-on serve loop must never retrace: cycles 2-3 reuse cycle
+    # 1's ≤2 jitted device programs exactly
+    assert dict(dl.TRACE_COUNTS) == episode_traces
+    assert pol.UPDATE_TRACE_COUNT[0] == update_traces
+
+
+# ------------------------------------------------ paired-eval equivalence
+def test_paired_canary_slices_statistically_equivalent():
+    # both canary slices run the SAME config on matched workloads: their
+    # rewards must agree within the harness's loop tolerance (this is the
+    # noise floor the gate margin sits on top of)
+    ctl = _controller(slo_ms=400_000.0)
+    cand_r, inc_r, breached = ctl._canary_eval(dict(ctl.incumbent))
+    assert not breached
+    assert_rel_close(cand_r, inc_r, DEFAULT_TOL.median_reward,
+                     "paired canary slices")
+
+
+# ------------------------------------------------------------ acceptance run
+def test_twenty_cycle_switching_acceptance():
+    # the ISSUE acceptance criterion: 20 cycles on a SwitchingWorkload
+    # fleet promote at least one candidate and never serve a config that
+    # breached SLO during its winning canary evaluation. The incumbent
+    # starts degraded-but-stationary (p99 10-17 s) under a 20 s SLO:
+    # healthy challengers clear the margin without breaching, regressive
+    # ones breach and roll back.
+    # eval_windows=2 spans ~480 s of the ~700 s switching period, so every
+    # canary evaluation samples the congested phase where the degraded
+    # incumbent actually loses
+    ctl = _controller(k_promote=2, margin=0.02, slo_ms=20_000.0,
+                      eval_windows=2, incumbent=DEGRADED_STATIONARY)
+    ctl.run(20)
+    c = ctl.counters
+    assert c.cycles == 20
+    assert c.promotions >= 1, ctl.gate.log
+    # never-serve-breached: inside each promoted adoption window every
+    # canary evaluation of the winning config was breach-free
+    promoted = ctl.history.rows(role="promote")
+    assert promoted
+    for p in promoted:
+        run_rows = [r for r in ctl.history.rows(role="canary")
+                    if r["config"] == p["config"] and r["cycle"] <= p["cycle"]]
+        adopt = [e["cycle"] for e in ctl.gate.log
+                 if e["event"] == "adopt" and e["config"] == p["config"]
+                 and e["cycle"] <= p["cycle"]][-1]
+        window = [r for r in run_rows if r["cycle"] >= adopt]
+        assert window and not any(r["breached"] for r in window)
+    # the serving fleet ends on the last promoted config
+    assert ctl.incumbent == promoted[-1]["config"]
+    assert all(cfg == ctl.incumbent for cfg in ctl.live_env.current_configs())

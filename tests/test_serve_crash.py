@@ -1,0 +1,116 @@
+"""Crash-safe serve checkpoints (DESIGN.md §13): kill/resume bitwise pin.
+
+Extends the PR 6 policy/optimizer roundtrip (tests/test_checkpoint.py) to
+the whole control plane: an uninterrupted run A and a killed-then-resumed
+run B→C must end with identical greedy actions, bitwise-identical policy
+parameters, the same promotion history, the same fleet clocks/configs and
+the same counters. This only holds because every RNG stream is restored
+exactly — the counter-based device key (``fold_in(key, draws)``), the
+per-cluster SFC64 generators, the agent's and bins' PCG64 state — and
+because the device runner's carried window metrics are checkpointed (a
+resume that re-observed its first window would advance the simulated
+clock and fork the stream).
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.checkpoint import CheckpointStore
+from repro.data.workloads import PoissonWorkload, SwitchingWorkload
+from repro.serve import ServeController
+
+METRICS = ["latency_p99_ms", "latency_mean_ms", "queue_depth",
+           "device_util", "sched_queue_depth"]
+LEVERS = ["max_batch_events", "prefetch_depth", "driver_memory_gb",
+          "sink_partitions", "backup_tasks"]
+FROZEN = dict(split_after=10**9, extend_after=10**9, merge_after=10**9)
+
+
+def _wl(i):
+    return SwitchingWorkload(PoissonWorkload(6_000, 0.5),
+                             PoissonWorkload(12_000, 0.5),
+                             period_s=700.0 + 60.0 * i)
+
+
+def _controller(ckdir=None):
+    # resumed controllers MUST be constructed with the same workloads /
+    # seed / backend: the device RNG key derives from the fleet seeds
+    return ServeController([_wl(i) for i in range(3)],
+                           metrics=METRICS, levers=LEVERS, backend="jax",
+                           seed=0, window_s=240.0, steps_per_episode=2,
+                           k_promote=2, margin=0.0, canary_pairs=2,
+                           n_live=2, slo_ms=20_000.0, bin_kw=FROZEN,
+                           mesh="off", checkpoint_dir=ckdir)
+
+
+def _params_equal(a, b) -> bool:
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def test_serve_crash_resume_is_bitwise(tmp_path):
+    # A: the uninterrupted reference run
+    A = _controller()
+    for _ in range(4):
+        A.run_cycle()
+
+    # B: same service, killed after a mid-run checkpoint at cycle 2
+    B = _controller(tmp_path / "ck")
+    for _ in range(2):
+        B.run_cycle()
+    B.checkpoint()
+    for _ in range(2):
+        B.run_cycle()        # work after the checkpoint — lost in the crash
+
+    # C: a fresh process resumes from the store and replays cycles 3-4
+    C = _controller(tmp_path / "ck")
+    assert C.restore() == 2 and C.cycle == 2
+    for _ in range(2):
+        C.run_cycle()
+
+    # greedy policy probe: identical decisions on identical states
+    dim = A.cfgr.agent.params["w1"].shape[0]
+    probe = np.linspace(-1.0, 1.0, 5 * dim, dtype=np.float32).reshape(5, dim)
+    assert np.array_equal(A.greedy_actions(probe), C.greedy_actions(probe))
+    # bitwise policy + optimizer state
+    assert _params_equal(A.cfgr.agent.params, C.cfgr.agent.params)
+    assert _params_equal(A.cfgr.agent.opt_state, C.cfgr.agent.opt_state)
+    assert A.cfgr.agent.n_updates == C.cfgr.agent.n_updates
+    # identical promotion history and incumbent
+    assert A.gate.log == C.gate.log
+    assert A.incumbent == C.incumbent
+    # the three fleets marched through identical simulated time and configs
+    for ea, ec in [(A.shadow_env, C.shadow_env),
+                   (A.canary_env, C.canary_env),
+                   (A.live_env, C.live_env)]:
+        assert np.array_equal(ea.clock, ec.clock)
+        assert np.array_equal(ea.reconfigs, ec.reconfigs)
+        assert ea.configs == ec.configs
+    # counters agree on everything except wall-clock timings
+    ca, cc = A.counters.as_dict(), C.counters.as_dict()
+    for k in ca:
+        if "wall" in k or k.endswith("_s") or k == "windows_per_s":
+            continue
+        assert ca[k] == cc[k], k
+    # C's episode rows (cycles 3-4) match A's rows for the same cycles
+    assert C.history.rows() == [r for r in A.history.rows()
+                                if r["cycle"] > 2]
+
+
+def test_restore_host_mode_preserves_wide_dtypes(tmp_path):
+    # the serve controller restores simulator clocks (f64), RNG words
+    # (u64) and bin hit counts (i64) through host=True: the default
+    # device path would silently truncate them under x64-off
+    store = CheckpointStore(tmp_path / "ck")
+    tree = {"clock": np.arange(3, dtype=np.float64) + 0.1234567890123456,
+            "hits": np.arange(3, dtype=np.int64) + 2**40,
+            "words": np.arange(3, dtype=np.uint64) + 2**60}
+    store.save(0, tree)
+    host, _, _ = store.restore(tree, host=True)
+    for k in tree:
+        assert host[k].dtype == tree[k].dtype, k
+        assert np.array_equal(host[k], tree[k])
+    if not jax.config.jax_enable_x64:
+        dev, _, _ = store.restore(tree)
+        assert dev["clock"].dtype == np.float32     # the documented hazard
