@@ -50,6 +50,62 @@ def make_dist2_env(seed: int = 0):
     return SimCluster(PoissonWorkload(100_000, 5.0), seed=seed)
 
 
+def make_fleet_tick_ops(T: int, N: int, S: int = None, seed: int = 0):
+    """Operand set for one ``fleet_tick_window`` call at (T, N, S): real
+    packed consts from a jax fleet of N clusters plus random grids — the
+    shared input builder for the kernel_micro / roofline ``--kernel
+    fleet_tick`` modes. Returns ``(ops_tuple, static_kwargs, S)``."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.data.workloads import PoissonWorkload
+    from repro.engine import FleetEnv
+    from repro.engine.fleet_jax import compiled_lane_budget
+    from repro.kernels.fleet_tick import pack_tick_consts
+
+    if S is None:
+        S = compiled_lane_budget(T)
+    env = FleetEnv([PoissonWorkload(10_000, 0.5) for _ in range(N)],
+                   seeds=[seed + i for i in range(N)], backend="jax")
+    cc = {k: jnp.asarray(v, jnp.float32) for k, v in env.packed().items()}
+    mc = {k: jnp.asarray(np.asarray(v, np.float32))
+          for k, v in env.mc.items()}
+    consts = pack_tick_consts(cc, mc, env.spec, env.chips, xp=jnp)
+    rng = np.random.default_rng(seed)
+    ops = (jnp.zeros((2, N)), consts,
+           jnp.asarray(rng.uniform(5e3, 2e4, (T, N)), jnp.float32),
+           jnp.asarray(rng.uniform(0.2, 1.0, (T, N)), jnp.float32),
+           jnp.asarray(rng.standard_normal((T, N)), jnp.float32),
+           jnp.asarray(rng.random((T, N)), jnp.float32),
+           jnp.asarray(rng.random((T, N)), jnp.float32),
+           jnp.asarray(rng.random((T, N)), jnp.float32),
+           jnp.ones((T, N), jnp.float32),
+           jnp.asarray(rng.random((T, S, N)), jnp.float32),
+           jnp.asarray(np.abs(rng.standard_normal((T, S, N))), jnp.float32))
+    kw = dict(noise=env.spec.noise, retention_s=env.spec.retention_s,
+              straggler_prob=env.spec.straggler_prob,
+              slo=env.spec.straggler_slow[0],
+              shi=env.spec.straggler_slow[1])
+    return ops, kw, S
+
+
+@contextlib.contextmanager
+def allow_interpret_tier():
+    """Scope where an EXPLICIT interpret-tier reference is allowed even
+    under ``REPRO_REQUIRE_COMPILED`` (the CI compiled-pallas job sets it
+    for the whole process). The guard bans the interpret tier sneaking in
+    as a silent fallback; the benchmarks' labelled debug-tier reference
+    rows are the opposite of silent."""
+    import os
+
+    saved = os.environ.pop("REPRO_REQUIRE_COMPILED", None)
+    try:
+        yield
+    finally:
+        if saved is not None:
+            os.environ["REPRO_REQUIRE_COMPILED"] = saved
+
+
 def write_json(rows: list, path, meta: dict = None) -> None:
     """Persist benchmark rows as ``BENCH_*.json`` so CI can archive the perf
     trajectory as workflow artifacts."""

@@ -1,20 +1,29 @@
 """Kernel microbenchmarks: Pallas (interpret) vs jnp fast path vs oracle.
 
-On this CPU container the Pallas bodies execute in interpret mode, so the
-numbers are CORRECTNESS + relative-cost references, not TPU wall-clock; the
-TPU roofline for these ops comes from the dry-run (§Roofline).
+Two modes (``--kernel``):
+
+* ``legacy`` (default) — the model-layer kernels (flash attention, wkv6,
+  ssd). On this CPU container their Pallas bodies execute in interpret
+  mode, so the numbers are CORRECTNESS + relative-cost references, not TPU
+  wall-clock; the TPU roofline for these ops comes from the dry-run
+  (§Roofline). This mode forces ``REPRO_PALLAS_INTERPRET=1`` itself.
+* ``fleet_tick`` — the fused fleet-tick window kernel (DESIGN.md §14) on
+  its COMPILED tier (``pallas_mode()``: xla off-TPU, Mosaic on TPU).
+  Interpret is timed only at a small shape as the correctness reference —
+  the ``max_err`` rows must be exactly 0, the tiers share the tick/stat
+  helpers. The env override is deliberately NOT set here: this mode
+  measures the tier the engine actually dispatches.
 """
 from __future__ import annotations
 
 import os
 
-os.environ.setdefault("REPRO_PALLAS_INTERPRET", "1")
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Row, emit
+from benchmarks.common import (Row, allow_interpret_tier, emit,
+                               make_fleet_tick_ops)
 
 
 def _timed(fn, *args, iters: int = 3) -> float:
@@ -30,7 +39,46 @@ def _timed(fn, *args, iters: int = 3) -> float:
     return float(np.median(ts)) * 1e6  # us
 
 
+def run_fleet() -> list[Row]:
+    """``--kernel fleet_tick``: one fused window per tier. The big point
+    runs the compiled tier only (interpret at T=32,N=128 takes minutes);
+    the small point runs both and pins their bitwise agreement."""
+    from repro.kernels.fleet_tick import fleet_tick_window, pallas_mode
+
+    mode = pallas_mode()
+    rows = [Row("kernel.fleet_tick.mode", 0, "", mode)]
+
+    # small shape: compiled-vs-interpret reference (single grid cell); the
+    # explicit debug-tier rows stay legal under the CI job's
+    # REPRO_REQUIRE_COMPILED guard
+    ops_s, kw_s, S_s = make_fleet_tick_ops(T=12, N=8, S=16)
+    call = lambda m, o, kw: fleet_tick_window(*o, **kw, p99_k=4, mode=m)
+    with allow_interpret_tier():
+        a = call("interpret", ops_s, kw_s)
+    b = call(mode, ops_s, kw_s)
+    err = max(float(np.nanmax(np.abs(np.asarray(x) - np.asarray(y))))
+              for x, y in zip(a, b))
+    rows.append(Row("kernel.fleet_tick.T12xN8.max_err", err, "",
+                    f"{mode} vs interpret (bitwise-shared helpers)"))
+    with allow_interpret_tier():
+        rows.append(Row("kernel.fleet_tick.T12xN8.interpret",
+                        _timed(lambda: call("interpret", ops_s, kw_s)),
+                        "us"))
+    rows.append(Row(f"kernel.fleet_tick.T12xN8.{mode}",
+                    _timed(lambda: call(mode, ops_s, kw_s)), "us"))
+
+    # engine-shaped point on the compiled tier: T=32 ticks (240 s window at
+    # 7.5 s batch interval), fleet of 128, statistical lane budget
+    ops_l, kw_l, S_l = make_fleet_tick_ops(T=32, N=128)
+    rows.append(Row("kernel.fleet_tick.T32xN128.lanes", S_l, "lanes",
+                    "compiled_lane_budget(32)"))
+    rows.append(Row(f"kernel.fleet_tick.T32xN128.{mode}",
+                    _timed(lambda: call(mode, ops_l, kw_l)), "us"))
+    return rows
+
+
 def run() -> list[Row]:
+    os.environ.setdefault("REPRO_PALLAS_INTERPRET", "1")
     from repro.kernels import ops, ref
     from repro.models.layers import attention_core, wkv6_chunked
 
@@ -82,4 +130,10 @@ def run() -> list[Row]:
 
 
 if __name__ == "__main__":
-    emit(run())
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kernel", choices=("legacy", "fleet_tick"),
+                    default="legacy")
+    a = ap.parse_args()
+    emit(run_fleet() if a.kernel == "fleet_tick" else run())

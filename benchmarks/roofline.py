@@ -4,13 +4,24 @@ Reads ``experiments/dryrun/*.json`` written by ``repro.launch.dryrun`` and
 prints, per (arch × shape × mesh): the three roofline terms, the dominant
 bottleneck, MODEL_FLOPS/HLO_FLOPS, and the step-time bound. Run the dry-run
 first:  PYTHONPATH=src python -m repro.launch.dryrun
+
+``--kernel fleet_tick`` switches to a MEASURED roofline of the fused
+fleet-tick window kernel (DESIGN.md §14) on the current box: analytic
+bytes-moved and flop counts per window (the bitonic lane sort dominates),
+median wall time per tier, and the resulting arithmetic intensity +
+achieved GFLOP/s. These rows are the CI compiled-pallas job's artifact.
 """
 from __future__ import annotations
 
 import json
+import math
+import time
 from pathlib import Path
 
-from benchmarks.common import Row, emit
+from benchmarks.common import (Row, allow_interpret_tier, emit,
+                               make_fleet_tick_ops)
+
+DEFAULT_FLEET_POINTS = ((32, 128), (32, 1024))
 
 DRYRUN_DIR = Path("experiments/dryrun")
 
@@ -50,6 +61,76 @@ def run() -> list[Row]:
     return rows
 
 
+def _fleet_tick_counts(T: int, N: int, S: int, K: int) -> tuple[float, float]:
+    """Analytic (bytes_moved, flops) for one fused window at (T, N, S, K).
+
+    Bytes: the operand set in HBM/DRAM terms — 8 (T,N) grids, 2 (T,S,N)
+    lane tensors, the consts block, and the 4 outputs — each touched once
+    (the fused kernel never re-reads lanes). Flops: per tick the dominant
+    term is the ascending bitonic lane sort, ~S·log2(S)·(log2(S)+1)/2
+    compare-exchanges (2 ops each: min+max), plus the O((S+K)·log2(S+K))
+    head merge, the S-lane latency build (~4 ops/lane) and the ~40-op
+    scalar tick step — all × N clusters."""
+    f32 = 4
+    bytes_moved = f32 * (2 * N + 16 * N + 8 * T * N + 2 * T * S * N
+                         + 2 * N + 7 * T * N + 5 * T * N + K * N)
+    lg = math.log2(S)
+    sort_ce = S / 2 * lg * (lg + 1) / 2            # compare-exchanges/tick
+    merge_ce = (S + K) / 2 * math.log2(S + K)
+    per_tick = 2 * (sort_ce + merge_ce) + 4 * S + 40
+    return float(bytes_moved), float(T * N * per_tick)
+
+
+def _median_time_s(fn, reps: int = 5) -> float:
+    import jax
+
+    jax.block_until_ready(fn())                     # compile + warm
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def run_fleet(points=DEFAULT_FLEET_POINTS) -> list[Row]:
+    """``--kernel fleet_tick``: measured roofline rows for the fused window
+    kernel on the tier ``pallas_mode()`` resolves (the compiled path — the
+    CI job runs this under ``REPRO_REQUIRE_COMPILED=1``), plus the
+    interpret reference at the small point only."""
+    from repro.kernels.fleet_tick import (fleet_tick_window, head_budget,
+                                          pallas_mode)
+
+    mode = pallas_mode()
+    rows = [Row("roofline.fleet_tick.mode", 0, "", mode)]
+    for i, (T, N) in enumerate(points):
+        ops, kw, S = make_fleet_tick_ops(T, N)
+        K = head_budget(S, 2)
+        call = lambda m: fleet_tick_window(*ops, **kw, p99_k=2, mode=m)
+        tag = f"roofline.fleet_tick.T{T}xN{N}"
+        bts, flops = _fleet_tick_counts(T, N, S, K)
+        t = _median_time_s(lambda: call(mode))
+        rows.append(Row(f"{tag}.bytes", bts / 2**20, "MiB", "per window"))
+        rows.append(Row(f"{tag}.flops", flops / 1e6, "Mflop",
+                        "analytic, sort-dominated"))
+        rows.append(Row(f"{tag}.intensity", flops / bts, "flop/B"))
+        rows.append(Row(f"{tag}.{mode}_time", t * 1e6, "us", "median"))
+        rows.append(Row(f"{tag}.{mode}_gflops", flops / t / 1e9, "GFLOP/s",
+                        "achieved"))
+        rows.append(Row(f"{tag}.{mode}_gbs", bts / t / 2**30, "GiB/s",
+                        "achieved"))
+        if i == 0 and mode != "interpret":
+            with allow_interpret_tier():   # explicit debug-tier reference
+                ti = _median_time_s(lambda: call("interpret"), reps=3)
+            rows.append(Row(f"{tag}.interpret_time", ti * 1e6, "us",
+                            "debug tier reference"))
+            rows.append(Row(f"{tag}.compiled_speedup", ti / t, "x",
+                            f"interpret / {mode} (~1 on CPU where both jit "
+                            "through XLA; diverges on TPU Mosaic)"))
+    return rows
+
+
 def markdown() -> str:
     """§Roofline markdown table for EXPERIMENTS.md."""
     recs = load_records()
@@ -74,9 +155,16 @@ def markdown() -> str:
 
 
 if __name__ == "__main__":
-    import sys
+    import argparse
 
-    if "--markdown" in sys.argv:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--kernel", choices=("dryrun", "fleet_tick"),
+                    default="dryrun")
+    a = ap.parse_args()
+    if a.markdown:
         print(markdown())
+    elif a.kernel == "fleet_tick":
+        emit(run_fleet())
     else:
         emit(run())

@@ -468,3 +468,33 @@ class Configurator:
             if callback:
                 callback(i, stats, self.history)
         return self.history
+
+    def tune_pipelined(self, n_updates: int, *, depth: int = 2,
+                       callback=None) -> list[StepRecord]:
+        """``tune`` with a depth-``depth`` pipelined actor/learner
+        (DESIGN.md §14): update k's jitted program runs while batch k+1's
+        episode scan explores — device-to-device handoff of params and
+        returns through the dispatch queue, host record materialisation
+        deferred to one finalize per call (so §2.4.1 bin adaptation replays
+        once per call, not per update, and episodes act on
+        (depth-1)-update-stale params — IMPALA-style).
+
+        ``depth=1`` IS the sequential schedule: it delegates to ``tune``
+        and is pinned bitwise-equal to it. Requires the fused device loop."""
+        if depth <= 1 or n_updates <= 0:
+            return self.tune(n_updates, callback=callback)
+        reason = self.device_loop_reason()
+        if reason is not None:
+            raise RuntimeError(
+                f"pipelined tuning needs the fused device loop: {reason}")
+        runner = self._device_runner()
+        passes = max(1, -(-self.episodes_per_update // self.env.n_clusters))
+        stats_list, records, upd_s = runner.run_pipelined(
+            n_updates, passes=passes, depth=depth)
+        per = len(records) // n_updates if records else 0
+        for k, stats in enumerate(stats_list):
+            recs = records[k * per:(k + 1) * per] if per else []
+            stats = self._finish_update(stats, recs, upd_s[k])
+            if callback:
+                callback(k, stats, self.history)
+        return self.history

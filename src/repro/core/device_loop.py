@@ -428,12 +428,7 @@ class DeviceEpisodeRunner:
         Returns ``(stats, records, upd_s)``. An always-on loop calling
         this per cycle never retraces (the no-retrace pin in
         tests/test_serve.py watches ``TRACE_COUNTS`` across cycles)."""
-        batches = [self.run_async() for _ in range(max(1, passes))]
-        if len(batches) == 1:
-            b = batches[0]
-        else:  # stack passes along the episode axis, still on device
-            b = {k: jnp.concatenate([x[k] for x in batches], axis=0)
-                 for k in batches[0]}
+        b = self._dispatch_group(passes)
         agent = self.cfgr.agent
         t0 = time.perf_counter()
         pending = agent.update_batch_async(b["states"], b["actions"],
@@ -444,6 +439,70 @@ class DeviceEpisodeRunner:
         stats = pending()
         upd_s = dispatch_s + time.perf_counter() - t1
         return stats, records, upd_s
+
+    def _dispatch_group(self, passes: int) -> dict:
+        """Dispatch one update's worth of chained episode batches and stack
+        them along the episode axis, still on device."""
+        batches = [self.run_async() for _ in range(max(1, passes))]
+        if len(batches) == 1:
+            return batches[0]
+        return {k: jnp.concatenate([x[k] for x in batches], axis=0)
+                for k in batches[0]}
+
+    def run_pipelined(self, updates: int, *, passes: int = 1,
+                      depth: int = 2):
+        """``updates`` outer iterations as a depth-``depth`` pipelined
+        actor/learner (DESIGN.md §14): the jitted update program for batch k
+        is enqueued while batch k+1's episode scan explores.
+
+        The pipeline is pure dispatch-order scheduling on the device queue —
+        ``run_async`` reads ``agent.params`` at dispatch time and
+        ``update_batch_async`` rebinds them to the update's not-yet-ready
+        device outputs, so dispatching episode group k+1 BEFORE update k
+        hands update k-1's params straight to it device-to-device: episodes
+        run (depth-1)-updates stale (IMPALA-style), returns hand off
+        device-to-device, and no host round-trip sits on the critical path
+        (the single deferred ``finalize`` materialises every batch's records
+        and replays §2.4.1 bins once per pipelined epoch, not per update —
+        binning is frozen across it, exactly like chained passes within one
+        update).
+
+        ``depth=1`` IS the sequential schedule: it delegates to
+        ``run_cycle`` per update and is pinned bitwise-equal to it
+        (tests/test_pallas_compiled.py). Returns ``(stats_list, records,
+        upd_s_list)``."""
+        if updates <= 0:
+            return [], [], []
+        if depth <= 1:
+            out, recs, upds = [], [], []
+            for _ in range(updates):
+                stats, records, upd_s = self.run_cycle(passes=passes)
+                out.append(stats)
+                recs.extend(records)
+                upds.append(upd_s)
+            return out, recs, upds
+        agent = self.cfgr.agent
+        ahead = depth - 1
+        groups: list = []
+        thunks: list = []
+        upds: list = []
+        nxt = 0
+        for k in range(updates):
+            # keep `ahead` episode groups dispatched past the current update
+            while nxt <= min(k + ahead, updates - 1):
+                groups.append(self._dispatch_group(passes))
+                nxt += 1
+            b = groups[k]
+            t0 = time.perf_counter()
+            thunks.append(agent.update_batch_async(
+                b["states"], b["actions"], b["rewards"]))
+            upds.append(time.perf_counter() - t0)
+            groups[k] = None          # drop the host ref once enqueued
+        records = self.finalize()     # blocks on the tail episode batch
+        t1 = time.perf_counter()
+        stats_list = [t() for t in thunks]
+        upds[-1] += time.perf_counter() - t1
+        return stats_list, records, upds
 
     def run_async(self, *, explore: bool = True, greedy: bool = False):
         """Dispatch one fused episode batch WITHOUT blocking on it and

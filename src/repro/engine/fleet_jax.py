@@ -25,7 +25,14 @@ program:
 
 ``backend="pallas"`` swaps the scan for the fused window kernel in
 ``repro.kernels.fleet_tick`` (clusters × latency-lane grid); everything
-around it — RNG, emission, summaries — is shared with the jax path.
+around it — RNG, emission, summaries — is shared with the jax path. The
+kernel runs on a tier picked by ``pallas_mode()`` (DESIGN.md §14): Mosaic
+on TPU, a compiled XLA lowering of the same tick math elsewhere, interpret
+only when forced for debugging — and the kernel reduces its latency lanes
+in place (per-tick sums/quantiles + a streaming top-K head), so neither
+tier materialises a (T, S, N) lane buffer. ``backend="auto"`` picks
+pallas-vs-scan per (backend, fleet-size bucket) from a one-time timed
+calibration (``preferred_window_impl``).
 
 Equivalence contract (DESIGN.md §9): *statistical*, not bitwise — the
 counter RNG deliberately breaks the oracle's per-cluster stream accounting;
@@ -116,6 +123,20 @@ def lane_budget(T: int, cap: int = _MAX_LAT_SAMPLES) -> int:
         if T * s <= 2048:
             return s
     return 8
+
+
+def compiled_lane_budget(T: int, cap: int = _MAX_LAT_SAMPLES) -> int:
+    """Latency lanes per tick for the kernel's compiled XLA tier: the
+    largest power of two with ticks × lanes ≤ ~1024 samples — the same
+    statistical budget the lean scan path spends on its sampled p99
+    (``p99_lanes``'s 768), rather than the interpret/Mosaic tiers' full
+    oracle-like tile (lanes are near-free in VMEM, but on the host each
+    lane is real threefry + sort work, and ~1k samples already pin p99
+    far inside the equivalence tolerance)."""
+    s = 8
+    while s * 2 <= cap and T * (s * 2) <= 1024:
+        s *= 2
+    return s
 
 
 def bitonic_sort_lanes(x: jnp.ndarray) -> jnp.ndarray:
@@ -209,7 +230,7 @@ def _tick_body(carry, xs, T_b, max_b, a_comp, c_coll, b_mem, kvp, ovh,
 def _window_program(T: int, S: int, E: int, nodes: int, M: int,
                     spec_key: tuple, chips: int, pallas: bool,
                     summarise: bool, node_noise: bool, p99_k: int,
-                    lat_cols: tuple, queue_col: int, interpret: bool):
+                    lat_cols: tuple, queue_col: int, mode: str):
     """Build + jit the device window program for one static shape bundle.
 
     N is NOT part of the key — it is carried by the array shapes, so a fleet
@@ -267,17 +288,22 @@ def _window_program(T: int, S: int, E: int, nodes: int, M: int,
         if pallas:
             lane_bits = jax.random.bits(k_lane, (T, S, N), jnp.uint32)
             u_wait, z2a = split_lane_bits(lane_bits)
-            state_out, ys_k, lat_tsn = fleet_tick_window(
+            state_out, ys_k, kstats, head = fleet_tick_window(
                 jnp.stack([backlog, sfree_rel]), consts, rg, sg,
                 z, u_strag, u_raw, u_fail,
                 tmask.astype(jnp.float32), u_wait, z2a, fmult,
+                wmask.astype(jnp.float32),
                 noise=spec.noise, retention_s=spec.retention_s,
                 straggler_prob=spec.straggler_prob, slo=slo, shi=shi,
-                interpret=interpret)
+                p99_k=p99_k, mode=mode)
             backlog, sfree_rel = state_out[0], state_out[1]
             service, qd, batch, processed, _, _, blg_e = \
                 tuple(ys_k[i] for i in range(7))
-            lat = jnp.transpose(lat_tsn, (0, 2, 1)) * 1000.0    # (T, N, S) ms
+            # the kernel reduces its lanes in place: per-tick valid-lane
+            # sums + quantiles (seconds) and a streaming top-K window head
+            lane_sum_ms = kstats[0] * 1000.0              # (T, N)
+            tickq_ms = kstats[1:] * 1000.0                # (4, T, N)
+            head_ms = head * 1000.0                       # (K, N) ascending
         else:
             arr = jnp.maximum(rg * T_b * (1.0 + spec.noise * z), 0.0)
             xs = (arr, rg * spec.retention_s, slow, sg * TOKENS_PER_MB,
@@ -299,17 +325,13 @@ def _window_program(T: int, S: int, E: int, nodes: int, M: int,
         a_ms = (T_b * 1000.0)[None, :]
         c_ms = 100.0 * service
         if pallas:
-            # fully-sampled window stats over the kernel's fused lane tiles
-            # (the TPU-shaped path; lanes are near-free in VMEM)
+            # window stats straight from the kernel's in-place reductions:
+            # mean = masked cross-tick sum of per-tick lane sums, p99 via
+            # the streaming head — no (T, N, S) buffer, no top_k pass
             n_s = jnp.clip(batch.astype(jnp.int32), 1, S)        # (T, N)
-            lane_valid = (jnp.arange(S)[None, None, :] < n_s[:, :, None]) \
-                & wmask[:, :, None]                              # (T, N, S)
-            cnt = lane_valid.sum(axis=(0, 2))                    # (N,)
-            mean_ms = jnp.where(lane_valid, lat, 0.0).sum(axis=(0, 2)) \
-                / jnp.maximum(cnt, 1)
-            flat = jnp.where(lane_valid, lat, -jnp.inf)
-            flat = jnp.transpose(flat, (1, 0, 2)).reshape(N, T * S)
-            top = jax.lax.top_k(flat, p99_k)[0]                  # descending
+            cnt = (n_s * wmask).sum(axis=0)                      # (N,)
+            mean_ms = lane_sum_ms.sum(axis=0) / jnp.maximum(cnt, 1)
+            top = jnp.flip(head_ms.T, axis=-1)                   # descending
             p99 = _lerp_quantile(top, cnt, 99.0, descending=True)
         else:
             # the lane tensor exists only to estimate window stats, so the
@@ -366,14 +388,10 @@ def _window_program(T: int, S: int, E: int, nodes: int, M: int,
         # semantics: per-emission stats overwrite the factor-model columns)
         n_s_e = g(n_s)
         if pallas:
-            # sampled per-emission stats over the kernel's lane tiles
-            lat_e = jnp.take_along_axis(lat, etick[:, :, None], axis=0)
-            lv_e = jnp.arange(S)[None, None, :] < n_s_e[:, :, None]
-            srt = bitonic_sort_lanes(jnp.where(lv_e, lat_e, jnp.inf))
-            stats = [jnp.where(lv_e, lat_e, 0.0).sum(-1) / n_s_e]
-            stats += [_lerp_quantile(srt, n_s_e, q) for q in _PCTS]
-            stats.append(jnp.take_along_axis(srt, (n_s_e - 1)[..., None],
-                                             axis=-1)[..., 0])
+            # per-emission stats are the kernel's per-tick quantile rows,
+            # gathered at the emission ticks (always window ticks)
+            stats = [g(lane_sum_ms) / n_s_e]
+            stats += [g(tickq_ms[i]) for i in range(4)]
         else:
             # analytic stats of base + a·U + c·|Z| — the monitoring metrics
             # feed heat-maps and the §2.2 factor analysis, not the reward,
@@ -397,11 +415,11 @@ def _window_program(T: int, S: int, E: int, nodes: int, M: int,
 
         out = {"backlog": backlog, "sfree": sfree_rel, "mean_ms": mean_ms,
                "p99_ms": p99, "processed": processed_sum,
-               "per_node": per_node, "n_s": n_s}
-        if pallas:
-            out["lat"] = lat
-        else:
-            out["qd"], out["service"] = qd, service
+               "per_node": per_node, "n_s": n_s,
+               # raw lane samples never leave the kernel any more; consumers
+               # that want them redraw host-side from the same per-tick
+               # mixture (``_WindowBatch.latencies_of``) on BOTH paths
+               "qd": qd, "service": service}
         return out
 
     return jax.jit(prog, donate_argnums=(1, 2))
@@ -432,17 +450,14 @@ class _WindowBatch:
         return self._np[name]
 
     def latencies_of(self, i: int) -> np.ndarray:
-        """Cluster i's per-event latency sample. The pallas path hands back
-        its fused lane tiles; the jax path computes window stats analytically
-        on device (DESIGN.md §9), so consumers that want raw samples get
-        them drawn here, host-side, from the same per-tick mixture —
-        deterministic per (window ordinal, cluster)."""
+        """Cluster i's per-event latency sample. Neither device path emits
+        raw lane samples (the pallas kernel reduces its lanes in place, the
+        jax path computes window stats analytically — DESIGN.md §9/§14), so
+        consumers that want them get samples drawn here, host-side, from the
+        same per-tick mixture — deterministic per (window ordinal,
+        cluster)."""
         n_s = self.arr("n_s")
         t0, t1 = int(self.n_skip[i]), int(self.n_ticks[i])
-        if "lat" in self._dev:
-            lat = self.arr("lat")
-            rows = [lat[t, i, :n_s[t, i]] for t in range(t0, t1)]
-            return np.concatenate(rows) if rows else np.zeros(1)
         qd, sv = self.arr("qd")[t0:t1, i], self.arr("service")[t0:t1, i]
         counts = n_s[t0:t1, i].astype(np.int64)
         rng = np.random.default_rng((self.lane_seed << 20) ^ i)
@@ -506,9 +521,11 @@ class DeviceFleetEngine:
     ``FleetCore`` (DESIGN.md §9). Host-side concerns — config dicts, the
     allow-list, stabilisation, the clock shadow — stay on the core."""
 
-    def __init__(self, core, *, pallas: bool = False):
+    def __init__(self, core, *, pallas=False):
         self.core = core
-        self.pallas = pallas
+        if pallas == "auto":   # one-time timed calibration per (backend, N)
+            pallas = preferred_window_impl(core.n) == "pallas"
+        self.pallas = bool(pallas)
         # per-node metric noise matches the oracle's iid draw at tuning
         # scales; huge exploration fleets share the draw across nodes (the
         # tuner mean-reduces the node axis anyway) to keep RNG off the
@@ -718,10 +735,15 @@ class DeviceFleetEngine:
             f_slow, f_rate = ft.effects(times)
             rate_g = rate_g * f_rate            # broadcasts (1,N) -> (T,N)
             fmult = jnp.asarray(f_slow, jnp.float32)
-        # the jax path computes window stats analytically ((T, N) erf math),
-        # so only the pallas path carries a full lane tensor — throttled by
-        # the lane-budget ladder when batch_interval_s walks low
-        S = lane_budget(T) if self.pallas else _MAX_LAT_SAMPLES
+        # the jax path computes window stats analytically ((T, N) erf math);
+        # the pallas path draws lane tiles the kernel reduces in place —
+        # full oracle-like tiles on the interpret/Mosaic tiers, the ~1k
+        # sample statistical budget on the compiled XLA tier (§14)
+        mode = pallas_mode() if self.pallas else "xla"
+        if self.pallas:
+            S = compiled_lane_budget(T) if mode == "xla" else lane_budget(T)
+        else:
+            S = _MAX_LAT_SAMPLES
 
         if self._backlog is None:
             self._backlog = jnp.asarray(core.backlog, jnp.float32)
@@ -737,11 +759,10 @@ class DeviceFleetEngine:
 
         M = len(core.metric_names)
         p99_k = min(T * S, int(np.ceil(0.01 * (T * S - 1))) + 2)
-        interpret = _pallas_interpret() if self.pallas else False
         prog = _window_program(
             T, S, E, core.n_nodes, M, self._spec_key, core.chips,
             self.pallas, summarise, self.node_noise, p99_k,
-            self._lat_cols, self._queue_col, interpret)
+            self._lat_cols, self._queue_col, mode)
         res = prog(self._next_key(), backlog, sfree, self._cc(), self._mc_dev,
                    self._emitc, jnp.asarray(rate_g, jnp.float32),
                    jnp.asarray(size_g, jnp.float32),
@@ -867,9 +888,10 @@ def build_step_window(core, sel_cols: tuple, T: int, E: int,
     (DESIGN.md §11) instead of falling back to the per-step host loop.
 
     ``pallas=True`` swaps the jnp tick scan for the fused
-    ``kernels.fleet_tick`` window kernel and computes the window/emission
-    statistics fully sampled over its latency-lane tiles (the §9 pallas
-    contract) — the kernel is carried through the episode ``lax.scan``
+    ``kernels.fleet_tick`` window kernel — on the tier ``pallas_mode()``
+    picks (§14) — and reads the window/emission statistics from the
+    kernel's in-place lane reductions (per-tick sums/quantiles + streaming
+    top-K head); the kernel is carried through the episode ``lax.scan``
     like any other traced op, which is what kills the old jax-only gate.
 
     ``ft`` (optional) is a packed ``DeviceFaultTable`` (dict of device
@@ -900,9 +922,11 @@ def build_step_window(core, sel_cols: tuple, T: int, E: int,
     node_noise = core._dev.node_noise
     Sp = p99_lanes(T)
     kq = min(T * Sp, int(np.ceil(0.01 * (T * Sp - 1))) + 2)
-    S_l = lane_budget(T)             # pallas lane tiles per tick
+    mode = pallas_mode() if pallas else "xla"
+    # pallas lane tiles per tick: full tiles on interpret/Mosaic, the ~1k
+    # sample statistical budget on the compiled XLA tier (§14)
+    S_l = compiled_lane_budget(T) if mode == "xla" else lane_budget(T)
     kq_p = min(T * S_l, int(np.ceil(0.01 * (T * S_l - 1))) + 2)
-    interpret = _pallas_interpret() if pallas else False
     t_ax = jnp.arange(T)[:, None]
     e_ax = jnp.arange(E)[:, None]
     M_pad = M_sel + (M_sel % 2)      # normals_16bit wants an even last dim
@@ -957,17 +981,22 @@ def build_step_window(core, sel_cols: tuple, T: int, E: int,
 
         if pallas:
             # fused fleet_tick window kernel carried through the episode
-            # scan; fully-sampled lane tiles back the window statistics
+            # scan; the kernel reduces its lane tiles in place (per-tick
+            # sums/quantiles + streaming top-K head — nothing (T, S, N)
+            # escapes it, on any tier)
             u_wait, z2a = split_lane_bits(
                 jax.random.bits(k_lane, (T, S_l, N), jnp.uint32))
-            (backlog, sfree_rel), ys, lat = window_recurrence(
+            (backlog, sfree_rel), ys, kstats, head = window_recurrence(
                 backlog, sfree_rel, consts, rg, sg, z, u_strag, u_raw,
                 u_fail, tmask.astype(jnp.float32), u_wait, z2a, f_slow,
+                wmask.astype(jnp.float32),
                 noise=spec.noise, retention_s=spec.retention_s,
                 straggler_prob=spec.straggler_prob, slo=slo, shi=shi,
-                interpret=interpret)
+                p99_k=kq_p, mode=mode)
             service, qd, batch, processed, blg_e = ys
-            lat = jnp.transpose(lat, (0, 2, 1)) * 1000.0   # (T, N, S_l) ms
+            lane_sum_ms = kstats[0] * 1000.0              # (T, N)
+            tickq_ms = kstats[1:] * 1000.0                # (4, T, N)
+            head_ms = head * 1000.0                       # (K, N) ascending
         else:
             arr = jnp.maximum(rg * T_b * (1.0 + spec.noise * z), 0.0)
             xs = (arr, rg * spec.retention_s, slow, sg * TOKENS_PER_MB,
@@ -985,16 +1014,11 @@ def build_step_window(core, sel_cols: tuple, T: int, E: int,
         a_ms = (T_b * 1000.0)[None, :]
         c_ms = 100.0 * service
         if pallas:
-            # fully-sampled window stats over the kernel's lane tiles (§9)
+            # window stats from the kernel's in-place reductions (§14)
             n_s = jnp.clip(batch.astype(jnp.int32), 1, S_l)
-            lv = (jnp.arange(S_l)[None, None, :] < n_s[:, :, None]) \
-                & wmask[:, :, None]
-            cnt = lv.sum(axis=(0, 2))
-            mean_ms = jnp.where(lv, lat, 0.0).sum(axis=(0, 2)) \
-                / jnp.maximum(cnt, 1)
-            flat = jnp.where(lv, lat, -jnp.inf)
-            flat = jnp.transpose(flat, (1, 0, 2)).reshape(N, T * S_l)
-            top = jax.lax.top_k(flat, kq_p)[0]
+            cnt = (n_s * wmask).sum(axis=0)
+            mean_ms = lane_sum_ms.sum(axis=0) / jnp.maximum(cnt, 1)
+            top = jnp.flip(head_ms.T, axis=-1)            # descending
             p99 = _lerp_quantile(top, cnt, 99.0, descending=True)
         else:
             # analytic window mean + lane-sampled p99 (§9 jax path, inlined)
@@ -1052,14 +1076,10 @@ def build_step_window(core, sel_cols: tuple, T: int, E: int,
         if lat_overwrite or queue_overwrite:
             n_s_e = g(n_s)
             if pallas:
-                # sampled per-emission stats over the kernel's lane tiles
-                lat_e = jnp.take_along_axis(lat, etick[:, :, None], axis=0)
-                lv_e = jnp.arange(S_l)[None, None, :] < n_s_e[:, :, None]
-                srt = bitonic_sort_lanes(jnp.where(lv_e, lat_e, jnp.inf))
-                st = [jnp.where(lv_e, lat_e, 0.0).sum(-1) / n_s_e]
-                st += [_lerp_quantile(srt, n_s_e, q_) for q_ in _PCTS]
-                st.append(jnp.take_along_axis(
-                    srt, (n_s_e - 1)[..., None], axis=-1)[..., 0])
+                # the kernel's per-tick quantile rows, gathered at the
+                # emission ticks (always window ticks)
+                st = [g(lane_sum_ms) / n_s_e]
+                st += [g(tickq_ms[i]) for i in range(4)]
                 stats5 = jnp.stack(st, axis=-1)                  # (E, N, 5)
             else:
                 base_e, c_e = g(base_ms), g(c_ms)
@@ -1096,10 +1116,171 @@ def build_step_window(core, sel_cols: tuple, T: int, E: int,
     return step_window
 
 
+def pallas_mode() -> str:
+    """The fused window kernel's execution tier on this backend — see
+    ``repro.kernels.fleet_tick.pallas_mode`` (imported lazily: this module
+    is imported by ``simcluster``, which the kernel module also imports)."""
+    from repro.kernels.fleet_tick import pallas_mode as _mode
+
+    return _mode()
+
+
 def _pallas_interpret() -> bool:
-    """Pallas interpret-mode gate — same contract as ``kernels/ops.py``."""
+    """Back-compat shim: True only when the interpret debug tier is forced
+    (``REPRO_PALLAS_INTERPRET``). The compiled tiers replaced the old
+    interpret-everywhere-off-TPU gate (DESIGN.md §14)."""
+    return pallas_mode() == "interpret"
+
+
+# --------------------------------------------------------------------------
+# pallas-vs-scan calibration (backend="auto", DESIGN.md §14)
+# --------------------------------------------------------------------------
+
+#: (jax backend, kernel tier, fleet-size bucket) -> "pallas" | "scan"
+_IMPL_CACHE: dict = {}
+
+
+def _probe_window_fns(T: int, N: int, mode: str):
+    """Jitted probes of the two window implementations' backend-divergent
+    halves — the fused kernel + its head/mean reductions vs the lean tick
+    scan + analytic mean + sampled-lane p99. RNG, emission and summary
+    gathers are shared between the real paths, so they cancel out of the
+    comparison and stay out of the probe."""
+    from repro.kernels.fleet_tick import fleet_tick_window
+
+    S = compiled_lane_budget(T) if mode == "xla" else lane_budget(T)
+    p99_k = min(T * S, int(np.ceil(0.01 * (T * S - 1))) + 2)
+    Sp = p99_lanes(T)
+    kq = min(T * Sp, int(np.ceil(0.01 * (T * Sp - 1))) + 2)
+    kw = dict(noise=0.05, retention_s=60.0, straggler_prob=0.05,
+              slo=1.5, shi=3.0)
+
+    def _draws(key):
+        u16, l16 = split16(jax.random.bits(key, (T, 2, N), jnp.uint32))
+        return norm16(u16[:, 0]), l16[:, 0], u16[:, 1], l16[:, 1]
+
+    @jax.jit
+    def pal(key, state, consts, rate, size):
+        k1, k2 = jax.random.split(key)
+        z, u_s, u_r, u_f = _draws(k1)
+        u_wait, z2a = split_lane_bits(
+            jax.random.bits(k2, (T, S, N), jnp.uint32))
+        active = jnp.ones((T, N), jnp.float32)
+        state_out, ys, stats, head = fleet_tick_window(
+            state, consts, rate, size, z, u_s, u_r, u_f, active, u_wait,
+            z2a, p99_k=p99_k, mode=mode, **kw)
+        cnt = jnp.clip(ys[2].astype(jnp.int32), 1, S).sum(axis=0)
+        mean = stats[0].sum(axis=0) / jnp.maximum(cnt, 1)
+        p99 = _lerp_quantile(jnp.flip(head.T, axis=-1), cnt, 99.0,
+                             descending=True)
+        return state_out, mean, p99
+
+    @jax.jit
+    def scn(key, state, consts, rate, size):
+        k1, k2 = jax.random.split(key)
+        z, u_s, u_r, u_f = _draws(k1)
+        (T_b, max_b, a_comp, c_coll, b_mem, kvp, ovh, slow_cap, backup,
+         fail_frac, inflight) = tuple(consts[i] for i in range(11))
+        smask = u_s < kw["straggler_prob"]
+        raw = kw["slo"] + (kw["shi"] - kw["slo"]) * u_r
+        slow = jnp.where(smask, jnp.minimum(raw, slow_cap), 1.0)
+        slow = jnp.where(u_f < fail_frac, slow * 2.0, slow)
+        arr = jnp.maximum(rate * T_b * (1.0 + kw["noise"] * z), 0.0)
+        active = jnp.ones((T, N), bool)
+        xs = (arr, rate * kw["retention_s"], slow, size * TOKENS_PER_MB,
+              1.0 / jnp.maximum(rate, 1.0), active)
+        body = functools.partial(
+            _tick_body, T_b=T_b, max_b=max_b, a_comp=a_comp, c_coll=c_coll,
+            b_mem=b_mem, kvp=kvp, ovh=ovh, inflight=inflight)
+        (backlog, sfree), ys = jax.lax.scan(body, (state[0], state[1]), xs)
+        service, qd, batch, processed, blg_e = ys
+        base_ms = (qd + service) * 1000.0
+        a_ms = (T_b * 1000.0)[None, :]
+        c_ms = 100.0 * service
+        n_s = jnp.clip(batch.astype(jnp.int32), 1, _MAX_LAT_SAMPLES)
+        w_t = n_s.astype(jnp.float32)
+        mean = (w_t * (base_ms + 0.5 * a_ms + _R2PI * c_ms)).sum(axis=0) \
+            / jnp.maximum(w_t.sum(axis=0), 1e-9)
+        u_p, z_p = split_lane_bits(
+            jax.random.bits(k2, (T, N, Sp), jnp.uint32))
+        lat_p = base_ms[:, :, None] + a_ms[:, :, None] * u_p \
+            + c_ms[:, :, None] * z_p
+        lv = jnp.arange(Sp)[None, None, :] < jnp.minimum(n_s, Sp)[:, :, None]
+        cnt = lv.sum(axis=(0, 2))
+        flat = jnp.transpose(jnp.where(lv, lat_p, -jnp.inf),
+                             (1, 0, 2)).reshape(N, T * Sp)
+        top = jax.lax.top_k(flat, kq)[0]
+        p99 = _lerp_quantile(top, cnt, 99.0, descending=True)
+        return jnp.stack([backlog, sfree]), mean, p99
+
+    return pal, scn
+
+
+def window_impl_timings(N: int, T: int = 32, reps: int = 5):
+    """Interleaved median wall times of the two window implementations'
+    backend-divergent halves (``_probe_window_fns``) at N's probe bucket.
+    Returns ``({"pallas": s, "scan": s}, Nb)``. The reps are interleaved so
+    clock drift / cgroup throttling hits both impls equally — back-to-back
+    blocks bias whichever runs second. Shared by the calibration below and
+    ``benchmarks/fleet_scaling.py``'s ``pallas_compiled_*`` rows."""
+    import time
+
+    mode = pallas_mode()
+    Nb = _bucket(max(int(N), 1))
+    rng = np.random.default_rng(0)
+    state = jnp.zeros((2, Nb), jnp.float32)
+    rows = np.tile(np.array([8.0, 1e4, 2e-5, 2e-6, 1e-9, 0.1, 0.05, 3.0,
+                             0.0, 0.02, 16.0], np.float32)[:, None],
+                   (1, Nb))
+    from repro.kernels.fleet_tick import CONSTS_ROWS
+    consts = jnp.asarray(np.vstack([rows, np.zeros(
+        (CONSTS_ROWS - rows.shape[0], Nb), np.float32)]))
+    rate = jnp.asarray(rng.uniform(50.0, 500.0, (T, Nb)), jnp.float32)
+    size = jnp.asarray(rng.uniform(0.5, 2.0, (T, Nb)), jnp.float32)
+    pal, scn = _probe_window_fns(T, Nb, mode)
+    fns = (("pallas", pal), ("scan", scn))
+    k = jax.random.PRNGKey(7)
+    for _, fn in fns:
+        jax.block_until_ready(fn(k, state, consts, rate, size))  # compile
+    ts: dict = {"pallas": [], "scan": []}
+    for r in range(reps):
+        for name, fn in fns:
+            t0 = time.perf_counter()
+            jax.block_until_ready(
+                fn(jax.random.fold_in(k, r), state, consts, rate, size))
+            ts[name].append(time.perf_counter() - t0)
+    return {name: float(np.median(v)) for name, v in ts.items()}, Nb
+
+
+def calibrate_window_impl(N: int, T: int = 32, reps: int = 5):
+    """Measure the window-impl probe at N's bucket, cache the verdict for
+    the process, and return ``(verdict, timings)`` — the verdict and the
+    timings it was derived from are the SAME sample, so callers recording
+    both (benchmarks/fleet_scaling.py) can never show a ratio that
+    contradicts its own verdict."""
+    mode = pallas_mode()
+    key = (jax.default_backend(), mode, _bucket(max(int(N), 1)))
+    timings, _ = window_impl_timings(N, T, reps)
+    best = "pallas" if timings["pallas"] <= timings["scan"] else "scan"
+    _IMPL_CACHE[key] = best
+    return best, timings
+
+
+def preferred_window_impl(N: int, T: int = 32, reps: int = 5) -> str:
+    """Pick the window implementation for an N-cluster fleet on the current
+    backend: ``"pallas"`` (fused kernel on its ``pallas_mode()`` tier) or
+    ``"scan"`` (lean tick scan + analytic stats). One timed probe per
+    (backend, tier, fleet-size bucket), cached for the process —
+    ``backend="auto"`` fleets resolve through this instead of the old
+    static interpret gate. ``REPRO_FLEET_IMPL=pallas|scan`` overrides."""
     import os
 
-    if os.environ.get("REPRO_PALLAS_INTERPRET", ""):
-        return True
-    return jax.default_backend() != "tpu"
+    override = os.environ.get("REPRO_FLEET_IMPL", "")
+    if override in ("pallas", "scan"):
+        return override
+    mode = pallas_mode()
+    key = (jax.default_backend(), mode, _bucket(max(int(N), 1)))
+    hit = _IMPL_CACHE.get(key)
+    if hit is not None:
+        return hit
+    return calibrate_window_impl(N, T, reps)[0]

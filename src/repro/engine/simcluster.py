@@ -334,7 +334,7 @@ class FleetCore:
                  seeds: Sequence[int], backend: str = "numpy",
                  faults=None):
         assert len(workloads) == len(models) == len(seeds)
-        assert backend in ("numpy", "jax", "pallas"), backend
+        assert backend in ("numpy", "jax", "pallas", "auto"), backend
         self.n = len(workloads)
         self.backend = backend
         self.workloads = list(workloads)
@@ -388,7 +388,11 @@ class FleetCore:
         if backend != "numpy":
             from repro.engine.fleet_jax import DeviceFleetEngine
 
-            self._dev = DeviceFleetEngine(self, pallas=backend == "pallas")
+            # "auto" resolves pallas-vs-scan from the one-time timed
+            # calibration (fleet_jax.preferred_window_impl, DESIGN.md §14)
+            self._dev = DeviceFleetEngine(
+                self, pallas="auto" if backend == "auto"
+                else backend == "pallas")
 
     # ------------------------------------------------------------- config
     def _default_config(self) -> dict:

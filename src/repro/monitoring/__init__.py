@@ -9,6 +9,7 @@ from repro.monitoring.metrics import (
     TimeSeriesStore,
     build_registry,
     flush_guard,
+    retrace_counts,
 )
 
 __all__ = [
@@ -22,4 +23,5 @@ __all__ = [
     "TimeSeriesStore",
     "build_registry",
     "flush_guard",
+    "retrace_counts",
 ]

@@ -229,6 +229,21 @@ _SERVE_COUNTER_KEYS = frozenset(
      "demotions", "holds"})
 
 
+def retrace_counts() -> int:
+    """Total jitted-program traces across the hot-loop programs: the fused
+    episode/window programs (``device_loop``/``fleet_jax`` TRACE_COUNTS)
+    plus the policy update step. A steady-state serve loop compiles its
+    program set once, so this total going up cycle-over-cycle IS the
+    retrace regression the §13 no-retrace pin guards — ``ServeCounters``
+    exposes it as the ``retraces`` gauge in the ``/metrics`` dump so a
+    silent recompile storm shows up on a dashboard, not just in tests."""
+    from repro.core import device_loop, policy
+    from repro.engine import fleet_jax
+    return (sum(fleet_jax.TRACE_COUNTS.values())
+            + sum(device_loop.TRACE_COUNTS.values())
+            + int(policy.UPDATE_TRACE_COUNT[0]))
+
+
 def _prometheus_text(prefix: str, values: dict, counter_keys) -> str:
     """Render a flat {name: number} dict in the Prometheus text-exposition
     format (one HELP/TYPE pair per series, counters get ``_total``)."""
@@ -251,9 +266,12 @@ class ServeCounters:
     Counters (monotone): cycles, per-role window counts, SLO breach counts
     on the canary and live fleets, and the gate outcome tally
     (promotions / rollbacks / demotions / holds). Gauges: the latest live
-    reward/p99 and the canary p99 high-water of the most recent
-    evaluation. ``prometheus_text`` renders the ``/metrics``-style dump
-    the launcher writes on every cycle and on shutdown (``flush_guard``)."""
+    reward/p99, the canary p99 high-water of the most recent evaluation,
+    and ``retraces`` — the process-wide ``retrace_counts()`` total the
+    controller samples each cycle (flat in steady state; climbing means
+    the device programs are being recompiled). ``prometheus_text`` renders
+    the ``/metrics``-style dump the launcher writes on every cycle and on
+    shutdown (``flush_guard``)."""
 
     cycles: int = 0
     shadow_windows: int = 0
@@ -269,6 +287,7 @@ class ServeCounters:
     live_reward: float = 0.0
     live_p99_ms: float = 0.0
     last_canary_p99_ms: float = 0.0
+    retraces: int = 0
 
     def inc(self, name: str, n: int = 1) -> None:
         setattr(self, name, getattr(self, name) + int(n))

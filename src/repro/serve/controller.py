@@ -39,7 +39,7 @@ import numpy as np
 
 from repro.core.configurator import Configurator
 from repro.engine import FleetEnv
-from repro.monitoring.metrics import ServeCounters
+from repro.monitoring.metrics import ServeCounters, retrace_counts
 from repro.serve.canary import CanaryGate
 from repro.serve.history import EpisodeStore, _jsonable, workload_features
 
@@ -199,6 +199,10 @@ class ServeController:
         live = self._live_window()
 
         c.inc("cycles")
+        # sample the process-wide trace total as a gauge: flat cycle-over-
+        # cycle in steady state, climbing = the device programs are being
+        # recompiled (the dashboard view of the §13 no-retrace pin)
+        c.retraces = retrace_counts()
         wall = time.perf_counter() - t0
         c.add_wall(wall)
         return {"cycle": self.cycle, "decision": decision,
@@ -242,8 +246,24 @@ class ServeController:
         (b) not SLO-breaching in its own shadow window — a saturating
         config can post one deceptively fast window before its queue
         explodes, and the canary shouldn't waste a cycle discovering
-        that — and (c) not on the rejection blocklist."""
+        that — and (c) not on the rejection blocklist.
+
+        A warm-start hint takes precedence over this cycle's shadow
+        records: ``EpisodeStore.best_config_for`` over PROMOTED rows for
+        the current workload features (arXiv 2504.12074's learn-from-the-
+        past query). A service restarted against an existing history file
+        re-canaries what history already proved instead of waiting for
+        shadow exploration to rediscover it; in steady state the best
+        promotion IS the incumbent, so the hint is a no-op."""
         blocked = self._blocked_configs()
+        warm = self.history.best_config_for(
+            workload_features(self.shadow_env.workloads[0],
+                              float(self.shadow_env.clock[0])),
+            roles=("promote",))
+        if (warm is not None and warm != self.incumbent
+                and self._config_key(warm) not in blocked):
+            self.gate.adopt(dict(warm), cycle=self.cycle)
+            return
         for r in sorted(recs, key=lambda x: x.reward, reverse=True):
             cfg = dict(r.config)
             if cfg == self.incumbent:

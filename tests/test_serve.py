@@ -140,6 +140,71 @@ def test_episode_store_warm_start_query():
     assert s.best_config_for({"kind": "Nope", "rate": 1.0}) is not None
 
 
+# ---------------------------------------------------------- warm-start path
+def test_warm_started_canary_converges_in_fewer_cycles_than_cold():
+    """§13 warm start: a controller restarted against a history that
+    already contains a promotion adopts that config straight into the
+    canary (``best_config_for`` over promoted rows) instead of waiting for
+    shadow exploration to rediscover it — so its first promotion lands in
+    strictly fewer cycles than the cold run that produced the history."""
+    cold = _controller(k_promote=2, margin=0.02, slo_ms=400_000.0,
+                       incumbent=DEGRADED)
+    cold_cycles = None
+    for i in range(1, 11):
+        if cold.run_cycle()["decision"] == "promote":
+            cold_cycles = i
+            break
+    assert cold_cycles is not None, cold.gate.log
+    promoted = cold.history.rows(role="promote")[0]
+
+    warm = _controller(k_promote=2, margin=0.02, slo_ms=400_000.0,
+                       incumbent=DEGRADED)
+    warm.history.append(cycle=0, role="promote",
+                        workload=promoted["workload"],
+                        config=promoted["config"],
+                        reward=promoted["reward"],
+                        p99_ms=promoted["p99_ms"], clock_s=0.0)
+    warm_cycles = None
+    for i in range(1, cold_cycles + 1):
+        if warm.run_cycle()["decision"] == "promote":
+            warm_cycles = i
+            break
+    assert warm_cycles is not None and warm_cycles < cold_cycles, (
+        warm_cycles, cold_cycles, warm.gate.log)
+    # cycle 1's adoption came from the history, not this run's shadow recs
+    # (history adoptions carry no shadow_reward)
+    first_adopt = [e for e in warm.gate.log if e["event"] == "adopt"][0]
+    assert first_adopt["cycle"] == 1
+    assert first_adopt["config"] == promoted["config"]
+    assert first_adopt["shadow_reward"] is None
+
+
+def test_warm_start_skips_incumbent_and_blocked_configs():
+    """The hint is a no-op in steady state (best promotion == incumbent)
+    and never resurrects a rolled-back config."""
+    ctl = _controller()
+    feats = workload_features(ctl.shadow_env.workloads[0], 0.0)
+    # best promotion IS the incumbent: hint skipped, shadow recs adopt
+    ctl.history.append(cycle=0, role="promote", workload=feats,
+                       config=dict(ctl.incumbent), reward=-1.0,
+                       p99_ms=100.0, clock_s=0.0)
+    other = dict(ctl.incumbent)
+    other["max_batch_events"] = 77_000.0
+    ctl.history.append(cycle=0, role="promote", workload=feats,
+                       config=other, reward=-0.5, p99_ms=100.0, clock_s=0.0)
+    # ... but `other` once rolled back: blocked for good
+    ctl.gate.log.append({"event": "rollback", "cycle": 0, "config": other})
+
+    class _Rec:
+        def __init__(self, cfg, reward):
+            self.config, self.reward, self.p99_ms = cfg, reward, 50.0
+
+    shadow_cfg = dict(ctl.incumbent)
+    shadow_cfg["max_batch_events"] = 99_000.0
+    ctl._adopt_challenger([_Rec(shadow_cfg, -2.0)])
+    assert ctl.gate.challenger == shadow_cfg
+
+
 # ------------------------------------------------- promotion / rollback loop
 def test_challenger_beats_degraded_incumbent_and_promotes():
     ctl = _controller(k_promote=2, margin=0.02, slo_ms=400_000.0,
@@ -206,6 +271,31 @@ def test_serve_counters_accounting_and_prometheus_text():
     # the registry round-trips through its dict form (checkpoint extra)
     c2 = ServeCounters.from_dict(d)
     assert c2.as_dict() == d
+
+
+def test_retrace_gauge_is_sampled_and_flat_in_steady_state():
+    """The ``retraces`` gauge: ``retrace_counts()`` sampled once per cycle
+    (fused episode/window programs + policy update traces). It must be
+    nonzero after cycle 1 (the programs compiled), render as a GAUGE in
+    the Prometheus dump (a process-total, not a monotone serve counter),
+    and stay flat across steady-state cycles — the dashboard face of the
+    §13 no-retrace pin."""
+    from repro.monitoring import retrace_counts
+
+    ctl = _controller(n=2, slo_ms=20_000.0)
+    ctl.cfgr.agent.f_warmup_updates = 0   # steady-state program set now
+    ctl.run_cycle()
+    first = ctl.counters.retraces
+    assert first > 0
+    assert first == retrace_counts()
+    text = ctl.counters.prometheus_text()
+    assert "# TYPE repro_serve_retraces gauge" in text
+    assert "repro_serve_retraces_total" not in text
+    ctl.run_cycle()
+    ctl.run_cycle()
+    assert ctl.counters.retraces == first
+    # checkpoint extra round-trip keeps the gauge
+    assert ServeCounters.from_dict(ctl.counters.as_dict()).retraces == first
 
 
 def test_flush_guard_writes_dump_even_on_interrupt(tmp_path):
