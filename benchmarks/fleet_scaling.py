@@ -498,6 +498,64 @@ def train_pipelined_rows(n: int, updates: int, seed: int, steps: int = 5,
     ]
 
 
+def train_megascan_rows(n: int, k: int, passes: int, seed: int,
+                        steps: int = 5, profile_dir: str = "") -> list[Row]:
+    """§15 epoch mega-scan (``run_epoch(K)``) vs the PR-8 sequential fused
+    schedule on identical twins: the mega-scan composes K full outer
+    iterations (episode batch → reward → update) into ONE jitted
+    ``lax.scan`` with zero host round-trips inside the epoch, summary-mode
+    records replacing the per-update StepRecord pull. Timing interleaves
+    whole K-update chunks (one ``tune(K)`` vs one ``run_epoch(K)``),
+    alternating which twin goes first per pass — same cgroup fairness
+    rationale as ``backend_matrix``. Gate: ≥1.5x at the speedup row,
+    enforced on ≥2-core hosts (a 1-core box spends the epoch's saved host
+    gaps re-queueing the same core). ``profile_dir`` wraps ONE untimed
+    epoch in ``jax.profiler.trace`` so the dispatch-gap claim is
+    inspectable from the CI artifact."""
+    seq = _train_cfgr(n, "jax", "on", seed, steps, "poisson", "off")
+    mega = _train_cfgr(n, "jax", "on", seed, steps, "poisson", "off")
+    # warm both twins at the exact chunk shape: the epoch program compiles
+    # on the first run_epoch(K) and that one-time cost must land in
+    # warmup, not in the first timed chunk
+    seq.tune(k)
+    mega.run_epoch(k, records="summary")
+    if profile_dir:
+        import jax
+
+        with jax.profiler.trace(profile_dir):
+            mega.run_epoch(k, records="summary")
+    times: dict = {"seq": [], "mega": []}
+    for p in range(passes):
+        order = ("seq", "mega") if p % 2 == 0 else ("mega", "seq")
+        for name in order:
+            t0 = time.perf_counter()
+            if name == "seq":
+                seq.tune(k)
+            else:
+                mega.run_epoch(k, records="summary")
+            times[name].append(time.perf_counter() - t0)
+    ep_passes = max(1, -(-seq.episodes_per_update // n))
+    per_chunk = n * steps * ep_passes * k
+    wps = {m: per_chunk * passes / sum(v) for m, v in times.items()}
+    med = {m: per_chunk / float(np.median(v)) for m, v in times.items()}
+    return [
+        Row(f"train_megascan_seq_jax{n}_windows_per_s", wps["seq"], "win/s",
+            "PR-8 sequential fused schedule (one program pair per update)"),
+        Row(f"train_megascan_seq_jax{n}_windows_per_s_chunk_med",
+            med["seq"], "win/s", "per-chunk median (throttle-robust twin)"),
+        Row(f"train_megascan_k{k}_jax{n}_windows_per_s", wps["mega"],
+            "win/s", f"epoch mega-scan, K={k} updates per device program"),
+        Row(f"train_megascan_k{k}_jax{n}_windows_per_s_chunk_med",
+            med["mega"], "win/s", "per-chunk median (throttle-robust twin)"),
+        Row(f"train_megascan_speedup_jax{n}", wps["mega"] / wps["seq"], "x",
+            "acceptance gate: >=1.5x vs sequential fused schedule at K>=8, "
+            "enforced on >=2-core hosts"),
+        Row(f"train_megascan_speedup_jax{n}_chunk_med",
+            med["mega"] / med["seq"], "x",
+            "median per-chunk speedup (throttle-robust twin)"),
+    ]
+
+
 def train_chaos_rows(n: int, updates: int, seed: int,
                      steps: int = 6) -> list[Row]:
     """§12 chaos rows (``train_chaos_*``): fault tables live in the fused
@@ -743,6 +801,10 @@ def main(argv=None) -> int:
     ap.add_argument("--skip-train", action="store_true",
                     help="skip the Algorithm-1 training-loop matrix")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--profile", default="", metavar="DIR",
+                    help="wrap one §15 mega-scan epoch in "
+                         "jax.profiler.trace(DIR); the dir is recorded in "
+                         "the json meta so CI can upload the artifact")
     ap.add_argument("--json", default="BENCH_fleet_scaling.json",
                     help="perf-trajectory artifact path ('' to skip)")
     ap.add_argument("--skip-legacy", action="store_true",
@@ -769,6 +831,13 @@ def main(argv=None) -> int:
         rows += pallas_compiled_rows((8,), seed=args.seed, reps=2)
         rows += train_pipelined_rows(8, updates=2, seed=args.seed, steps=3,
                                      passes=1)
+        # §15 smoke: the epoch mega-scan end to end at K∈{1,4} (K=1 rides
+        # the bitwise-pin shape, K=4 a real multi-update epoch); the
+        # profiler trace lands on the K=4 epoch when --profile is set
+        rows += train_megascan_rows(8, k=1, passes=1, seed=args.seed,
+                                    steps=3)
+        rows += train_megascan_rows(8, k=4, passes=1, seed=args.seed,
+                                    steps=3, profile_dir=args.profile)
         import jax
 
         if jax.device_count() > 1:   # multi-device CI job: sharded smoke
@@ -809,6 +878,12 @@ def main(argv=None) -> int:
             rows += train_pipelined_rows(gate_n,
                                          updates=args.train_updates,
                                          seed=args.seed)
+            # §15 epoch mega-scan vs the same sequential fused schedule:
+            # K=8 fused updates per device program at the gate fleet size
+            rows += train_megascan_rows(gate_n, k=8,
+                                        passes=max(args.train_updates, 3),
+                                        seed=args.seed,
+                                        profile_dir=args.profile)
             # §12 chaos matrix: slo-reward fused training through fault
             # tables + the frozen-config recovery-windows measurement
             rows += train_chaos_rows(min(gate_n, 256),
@@ -833,6 +908,9 @@ def main(argv=None) -> int:
             "cpus": os.cpu_count(),
             "jax_backend": jax.default_backend(),
             "xla_flags": os.environ.get("XLA_FLAGS", ""),
+            # where the §15 mega-scan epoch's jax.profiler.trace landed
+            # ('' = profiling off) — CI uploads this dir as an artifact
+            "profile_dir": args.profile,
         })
 
     failed = 0
@@ -868,6 +946,11 @@ def main(argv=None) -> int:
             # is still recorded, cores are in the json meta)
             gates.append(("train_pipelined_speedup",
                           "pipelined actor/learner speedup", 1.3))
+            # same host-gap argument: the mega-scan's win is the removed
+            # per-update host boundary, invisible when one core serialises
+            # host and device work anyway
+            gates.append(("train_megascan_speedup",
+                          "epoch mega-scan speedup", 1.5))
         for name, label, thresh in gates:
             gate = next((r for r in rows if r.name.startswith(name)
                          and "chunk_med" not in r.name), None)

@@ -498,3 +498,48 @@ class Configurator:
             if callback:
                 callback(k, stats, self.history)
         return self.history
+
+    def run_epoch(self, k: int = 8, *, records: str = "full") -> list[dict]:
+        """``k`` outer Algorithm-1 iterations as ONE jitted device program
+        — the epoch mega-scan (DESIGN.md §15): episode batch → reward →
+        policy update composed K times inside a single ``lax.scan``, zero
+        host round-trips between updates. §2.4.1 bin adaptation defers to
+        the epoch boundary (binning is frozen inside); ``records="full"``
+        materialises the sequential path's exact ``StepRecord`` stream
+        into ``history``, ``"summary"``/``"off"`` skip the record stream
+        and return per-update convergence stats only. Requires the fused
+        device loop. Returns the per-update stats dicts."""
+        reason = self.device_loop_reason()
+        if reason is not None:
+            raise RuntimeError(
+                f"epoch mega-scan needs the fused device loop: {reason}")
+        runner = self._device_runner()
+        passes = max(1, -(-self.episodes_per_update // self.env.n_clusters))
+        stats_list, recs = runner.run_epoch(k, passes=passes,
+                                            records=records)
+        if recs:
+            # same history bookkeeping as the sequential schedule; the
+            # update dispatch is fused into the epoch program, so there is
+            # no separable update_s to attribute (generation_s carries the
+            # whole epoch wall through the per-step amortisation)
+            per = len(recs) // max(len(stats_list), 1)
+            for i, stats in enumerate(stats_list):
+                self._finish_update(stats, recs[i * per:(i + 1) * per], 0.0)
+        return stats_list
+
+    def tune_megascan(self, n_updates: int, *, k: int = 8,
+                      records: str = "full",
+                      callback=None) -> list[StepRecord]:
+        """``tune`` over epoch mega-scans (DESIGN.md §15): ``n_updates``
+        outer iterations dispatched as ⌈n/k⌉ fused K-update epochs instead
+        of n separate program pairs. The callback fires per update, after
+        the epoch containing it lands (epoch-granular collect: inside an
+        epoch there is nothing host-visible to call back on)."""
+        done = 0
+        while done < n_updates:
+            kk = min(k, n_updates - done)
+            for j, stats in enumerate(self.run_epoch(kk, records=records)):
+                if callback:
+                    callback(done + j, stats, self.history)
+            done += kk
+        return self.history

@@ -71,6 +71,18 @@ ago* — a device-carried config-index history ring indexed per cluster —
 while the encoder state still shows the requested knobs (the policy knows
 what it asked for; the engine lags, paper §4.4).
 
+**Epoch mega-scan (§15).** ``run_epoch(K)`` composes K whole outer
+iterations — episode batch → reward → policy update — into ONE jitted
+``lax.scan`` over updates: policy params, optimizer state, RNG offsets,
+the fleet loop state, the deploy-history ring and a compact (lever, bin)
+count tensor carry device-to-device with donated buffers, so an epoch
+costs O(1) program dispatches instead of O(K). Inside an epoch the
+``DeviceLeverTable`` is frozen and §2.4.1 adaptation defers to the epoch
+boundary (the contract chained passes already established); StepRecords
+become optional per epoch (``records="full"|"summary"|"off"``), with a
+device-side (K, N) reward/p99 summary replacing the bulk pull when only
+convergence curves are needed.
+
 Remaining gates (``DeviceEpisodeRunner.supported``): a device backend
 (jax or pallas — the pallas window kernel is scan-composable since §11),
 device-packable workloads (closed-form rate laws; IoT's precomputed burst
@@ -99,6 +111,11 @@ from repro.engine.simcluster import (_LEVER_TO_PACKED, _PACKERS,
 #: static-bundle -> times the episode program was traced; the §10 no-retrace
 #: test pins that re-running outer iterations never grows these.
 TRACE_COUNTS: dict = {}
+
+#: epoch mega-scan program invocations (DESIGN.md §15): ``run_epoch(K)``
+#: bumps this once per warm-up segment — the dispatch-count regression test
+#: pins O(1) (not O(K)) dispatches per epoch.
+EPOCH_DISPATCHES = [0]
 
 #: padded tick budget when ``batch_interval_s`` is in the action set (the
 #: episode can walk it low, shrinking the tick length mid-batch); clusters
@@ -166,6 +183,7 @@ class DeviceEpisodeRunner:
         self._config_idx = None        # device (N, n_levers) int carry
         self._table: Optional[DeviceLeverTable] = None
         self._bins_sig = None
+        self._disc_sig = None          # oracle edge hash: re-pack skip
         self._hw_T = 0
         self._hw_B = 0
         self._wl_dev: Optional[dict] = None
@@ -234,9 +252,11 @@ class DeviceEpisodeRunner:
         return T, E
 
     # -------------------------------------------------------------- programs
-    def _program(self, skey: tuple, consts: dict):
-        if skey in self._programs:
-            return self._programs[skey]
+    def _episode_fn(self, skey: tuple, consts: dict):
+        """The raw traceable episode closure for one static bundle — shared
+        by the per-update program (``_program`` jit/shard_map-wraps it) and
+        the epoch mega-scan (``_epoch_program``, which composes the same
+        body, one episode group per update, inside its K-update scan)."""
         (S, T, E, sel_cols, exploit, greedy, reward_mode, win_s,
          pallas, ndev, slo_sig, R_max, has_ft) = skey
         from repro.engine.fleet_jax import (build_step_window,
@@ -387,26 +407,112 @@ class DeviceEpisodeRunner:
             outs = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), outs)
             return carry, outs
 
+        return program
+
+    def _shard_wrap(self, fn, r_max: int):
+        """Wrap an episode closure in the fleet ``shard_map`` — specs come
+        from ``fleet_episode_specs``, the ONE definition shared with the
+        epoch mega-scan (whose shard_map sits inside its scan body)."""
+        from jax.experimental.shard_map import shard_map
+
+        from repro.distribution.sharding import fleet_episode_specs
+
+        in_specs, out_specs = fleet_episode_specs(self.mesh, r_max)
+        return shard_map(fn, mesh=self.mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+
+    def _program(self, skey: tuple, consts: dict):
+        if skey in self._programs:
+            return self._programs[skey]
+        program = self._episode_fn(skey, consts)
+        ndev, R_max = skey[9], skey[11]
         # config_idx .. per_node (loop state) + the config-index history
         donate = tuple(range(2, 11)) + (22,)
-        if mesh is not None:
-            from jax.experimental.shard_map import shard_map
-
-            pf, pr = P(mesh.axis_names[0]), P()
-            ph = P(None, mesh.axis_names[0])   # (R+1, N, L) history ring
-            # (params, key) replicated; per-cluster loop state, workload
-            # table, model constants + emission factors + fault table +
-            # deploy lags sharded; lo/hi + lever tables + scalars replicated
-            in_specs = (pr, pr) + (pf,) * 6 + (pr, pr) + (pf, pf) \
-                + (pr,) * 6 + (pf, pf) + (pf, pf, ph)
-            out_specs = ((pf,) * 6 + (pr, pr, pf)
-                         + ((ph,) if R_max else ()), pf)
-            prog = jax.jit(shard_map(program, mesh=mesh, in_specs=in_specs,
-                                     out_specs=out_specs, check_rep=False),
-                           donate_argnums=donate)
-        else:
-            prog = jax.jit(program, donate_argnums=donate)
+        if ndev:
+            program = self._shard_wrap(program, R_max)
+        prog = jax.jit(program, donate_argnums=donate)
         self._programs[skey] = prog
+        return prog
+
+    def _epoch_program(self, ekey: tuple, consts: dict):
+        """ONE jitted program for a whole epoch (DESIGN.md §15): a
+        ``lax.scan`` over K outer Algorithm-1 iterations whose body runs
+        ``passes`` chained episode groups through the SAME traced episode
+        closure the per-update program compiles, then composes the agent's
+        un-jitted ``_update_step`` — policy params, optimizer state, RNG
+        offset, fleet loop state, the deploy-history ring and the
+        (lever, bin) count tensor all carry device-to-device; nothing
+        touches the host inside the epoch. Per-(update, pass) RNG keys fold
+        ``draws0 + k·passes + p``, bitwise the sequential schedule's
+        ``_next_key`` stream."""
+        if ekey in self._programs:
+            return self._programs[ekey]
+        _, skey, K, passes, rec_mode = ekey
+        ndev, slo_sig, R_max = skey[9], skey[10], skey[11]
+        episode = self._episode_fn(skey, consts)
+        if ndev:
+            # shard_map wraps the episode body INSIDE the scan; the update
+            # math stays plain (GSPMD), exactly like the sequential split
+            episode = self._shard_wrap(episode, R_max)
+        upd = self.cfgr.agent._update_step
+        slo_ms = float(self.cfgr.slo_ms)
+
+        def epoch(params, opt_state, key, draws0, loop, hist, counts,
+                  wl, f, tabs, kind_code, n_valid, reboot_f, rejit_f,
+                  mc, emitF, ft, delays):
+            TRACE_COUNTS[ekey] = TRACE_COUNTS.get(ekey, 0) + 1
+
+            def body(carry, k):
+                params, opt_state, loop, hist, counts = carry
+                groups = []
+                for p in range(passes):
+                    kk = jax.random.fold_in(
+                        key, draws0 + jnp.uint32(k * passes + p))
+                    ep_carry, outs = episode(
+                        params, kk, *loop, wl, f, tabs, kind_code,
+                        n_valid, reboot_f, rejit_f, mc, emitF, ft,
+                        delays, hist)
+                    loop = tuple(ep_carry[:9])
+                    hist = ep_carry[9] if R_max else None
+                    groups.append(outs)
+                if len(groups) == 1:
+                    b = groups[0]
+                else:
+                    b = {k2: jnp.concatenate([g[k2] for g in groups],
+                                             axis=0)
+                         for k2 in groups[0]}
+                if counts is not None:
+                    counts = counts.at[b["lever"].ravel(),
+                                       b["bin"].ravel()].add(1)
+                mask = jnp.ones(b["actions"].shape, jnp.float32)
+                params, opt_state, loss, first = upd(
+                    params, opt_state, b["states"],
+                    b["actions"].astype(jnp.int32), b["rewards"], mask)
+                y = {"pg_loss": loss, "mean_return": first}
+                if rec_mode == "full":
+                    y.update({k2: v for k2, v in b.items()
+                              if k2 != "states"})
+                else:
+                    y["reward_sum"] = b["rewards"].sum()
+                    y["p99_max"] = b["p99_ms"].max()
+                    if slo_sig:
+                        y["breach_windows"] = \
+                            (b["breach_frac"] > 0.0).sum()
+                        y["breach_frac_sum"] = b["breach_frac"].sum()
+                    elif slo_ms > 0.0:
+                        y["breach_windows"] = (b["p99_ms"] > slo_ms).sum()
+                    if rec_mode == "summary":
+                        y["reward_mean"] = b["rewards"].mean(axis=1)
+                        y["p99_mean"] = b["p99_ms"].mean(axis=1)
+                        y["p99_last"] = b["p99_ms"][:, -1]
+                return (params, opt_state, loop, hist, counts), y
+
+            carry = (params, opt_state, loop, hist, counts)
+            carry, ys = jax.lax.scan(body, carry, jnp.arange(K))
+            return carry, ys
+
+        prog = jax.jit(epoch, donate_argnums=(0, 1, 4, 5, 6))
+        self._programs[ekey] = prog
         return prog
 
     # ------------------------------------------------------------------- run
@@ -504,6 +610,209 @@ class DeviceEpisodeRunner:
         upds[-1] += time.perf_counter() - t1
         return stats_list, records, upds
 
+    # ---------------------------------------------------------- epoch (§15)
+    def run_epoch(self, k: int, *, passes: int = 1,
+                  records: str = "full", explore: bool = True):
+        """``k`` full outer Algorithm-1 iterations — episode batch → reward
+        → policy update — as ONE jitted device program per warm-up segment
+        (DESIGN.md §15): zero host round-trips inside an epoch.
+
+        Inside the epoch the ``DeviceLeverTable`` is FROZEN; §2.4.1 bin
+        adaptation defers to the epoch boundary, where it replays in one
+        host pass (and the next epoch re-packs the table only if the replay
+        changed a bin edge — see ``_fresh_inputs``). ``records`` controls
+        the host materialisation: ``"full"`` pulls the per-step tensors and
+        emits the sequential path's exact ``StepRecord`` stream;
+        ``"summary"`` pulls a (K, N·passes) reward/p99 summary (convergence
+        curves, no records); ``"off"`` pulls per-update loss scalars only.
+
+        An epoch crossing the agent's exploit warm-up boundary splits into
+        two program calls (the exploit gate is a static of the episode
+        trace) — still O(1) dispatches, never O(K). Returns
+        ``(stats_list, records)``; ``records`` is ``[]`` unless
+        ``records="full"``."""
+        if k <= 0:
+            return [], []
+        if records not in ("full", "summary", "off"):
+            raise ValueError(f"records={records!r} (full|summary|off)")
+        if self._inflight or self._carry is not None:
+            raise RuntimeError("run_epoch with episode batches in flight")
+        cfgr, env = self.cfgr, self.env
+        agent, dev = cfgr.agent, env._dev
+        N, S = env.n_clusters, cfgr.steps_per_episode
+        if explore:
+            w = min(max(agent.f_warmup_updates - agent.n_updates, 0), k)
+            segments = [(kk, ex) for kk, ex in ((w, False), (k - w, True))
+                        if kk > 0]
+        else:
+            segments = [(k, False)]
+        greedy = not explore
+
+        loop = self._fresh_inputs()
+        idx0 = None if records == "full" else np.asarray(loop[0])
+        hist = self._hist
+        if self._R_max and hist is None:
+            # materialise the deploy-history ring host-side: the scan carry
+            # needs a concrete leaf (the sequential program builds the same
+            # broadcast in-trace from its donated config_idx)
+            hist = jnp.broadcast_to(
+                loop[0][None], (self._R_max + 1,) + loop[0].shape) + 0
+        counts = None
+        if records != "full":
+            counts = jnp.zeros((len(self._table.specs), self._hw_B),
+                               jnp.int32)
+        T, E = self._tick_budget()
+        pallas = bool(getattr(dev, "pallas", False))
+        slo_sig = ((float(cfgr.slo_ms), float(cfgr.slo_hinge_w),
+                    float(cfgr.slo_breach_w))
+                   if cfgr.reward_mode == "slo" else None)
+        consts = {"cc_pairs": self._cc_pairs, "ranked_g": self._ranked_g}
+
+        params, opt_state = agent.params, agent.opt_state
+        key, draws0 = dev._key, dev._draws
+        ys_segs: list = []
+        self._epoch_t0 = time.perf_counter()
+        for k_seg, exploit in segments:
+            skey = (S, T, E, self._sel_cols, exploit, greedy,
+                    cfgr.reward_mode, float(cfgr.window_s), pallas,
+                    self.mesh.size if self.mesh is not None else 0,
+                    slo_sig, self._R_max, self._ft_dev is not None)
+            prog = self._epoch_program(
+                ("epoch", skey, k_seg, passes, records), consts)
+            EPOCH_DISPATCHES[0] += 1
+            with warnings.catch_warnings():
+                warnings.filterwarnings(
+                    "ignore", message="Some donated buffers")
+                (params, opt_state, loop, hist, counts), ys = prog(
+                    params, opt_state, key, jnp.uint32(draws0), loop,
+                    hist, counts, self._wl_dev, jnp.float32(agent.f),
+                    self._tabs, self._kind_code, self._n_valid,
+                    self._reboot_f, self._rejit_f, self._mc_arg,
+                    self._emitF, self._ft_dev, self._delays)
+            draws0 += k_seg * passes
+            ys_segs.append((k_seg, ys))
+        jax.block_until_ready((params, loop))
+        self.last_wall_s = time.perf_counter() - self._epoch_t0
+        dev._draws = draws0
+        agent.adopt_update(params, opt_state, k)
+        total_steps = k * passes * N * S
+        self.chaos.add_wall(self.last_wall_s)
+
+        # ---- adopt the final loop state (the finalize() contract) ----
+        (config_idx_f, backlog_f, sfree_f, clock_f, last_service_f,
+         reconfigs_f, lo_f, hi_f, per_node_f) = loop
+        self._hist = hist
+        env._dev.adopt_loop_state(backlog_f, sfree_f, clock_f)
+        env.reconfigs[:] = np.asarray(reconfigs_f, np.int64)
+        env.last_service[:] = np.asarray(last_service_f, np.float64)
+        rng_range = cfgr.encoder._range
+        rng_range.lo = np.asarray(lo_f, np.float64)
+        rng_range.hi = np.asarray(hi_f, np.float64)
+        self._per_node = per_node_f
+        self._config_idx = config_idx_f
+        self._clock_mark = env.clock.copy()
+
+        gen_s = self.last_wall_s / max(total_steps, 1)
+        if records == "full":
+            stats_list, recs = self._epoch_full(ys_segs, N, S, passes,
+                                                gen_s)
+        else:
+            stats_list = self._epoch_summary(ys_segs, counts, idx0,
+                                             config_idx_f, N, S, passes)
+            recs = []
+        cfgr._last_fleet_windows = None   # host-loop cache is stale now
+        return stats_list, recs
+
+    def _epoch_full(self, ys_segs, N, S, passes, gen_s):
+        """Materialise a ``records="full"`` epoch by replaying
+        ``_materialise`` per (update, pass) chunk — record order, §2.4.1
+        replay order and chaos accounting match the sequential schedule
+        exactly."""
+        env = self.env
+        configs = self._epoch_configs
+        stats_list: list = []
+        recs: list = []
+        for k_seg, ys in ys_segs:
+            ys = {k2: np.asarray(v) for k2, v in ys.items()}
+            for i in range(k_seg):
+                for p in range(passes):
+                    sl = slice(p * N, (p + 1) * N)
+                    outs = {k2: v[i, sl] for k2, v in ys.items()
+                            if k2 not in ("pg_loss", "mean_return")}
+                    configs = self._materialise(
+                        {"outs": outs, "S": S}, configs, recs, gen_s)
+                stats_list.append(
+                    {"pg_loss": float(ys["pg_loss"][i]),
+                     "mean_return": float(ys["mean_return"][i]),
+                     "episodes": N * passes, "steps": N * passes * S})
+        env.configs = configs
+        env.invalidate()
+        return stats_list, recs
+
+    def _epoch_summary(self, ys_segs, counts, idx0, config_idx_f,
+                       N, S, passes):
+        """Host pass for ``records="summary"|"off"``: fold the per-update
+        scalars into ``ChaosCounters``, replay the device-side (lever, bin)
+        count tensor into the adaptive oracle in ONE pass, and rebuild
+        ``env.configs`` from the final integerised indices (levers still at
+        their initial index keep their original dict value).
+
+        The count tensor compresses away the assignment ORDER the §2.4.1
+        streak rules watch, so the replay reconstructs the maximum-entropy
+        order consistent with the counts: each bin's occurrences spread
+        evenly across the epoch. A same-bin streak then survives only when
+        one bin truly dominated the epoch's choices — a sorted
+        ``np.repeat`` replay would instead fabricate a run per bin and
+        fire spurious splits (halving ``_hits`` each time)."""
+        cfgr, env, table = self.cfgr, self.env, self._table
+        stats_list: list = []
+        for k_seg, ys in ys_segs:
+            ys = {k2: np.asarray(v) for k2, v in ys.items()}
+            self.chaos.windows += k_seg * passes * N * S
+            self.chaos.reward_sum += float(ys["reward_sum"].sum())
+            self.chaos.p99_max_ms = max(self.chaos.p99_max_ms,
+                                        float(ys["p99_max"].max()))
+            if "breach_windows" in ys:
+                self.chaos.breached_windows += int(
+                    ys["breach_windows"].sum())
+            if "breach_frac_sum" in ys:
+                self.chaos.breach_frac_sum += float(
+                    ys["breach_frac_sum"].sum())
+            for i in range(k_seg):
+                st = {"pg_loss": float(ys["pg_loss"][i]),
+                      "mean_return": float(ys["mean_return"][i]),
+                      "episodes": N * passes, "steps": N * passes * S}
+                if "reward_mean" in ys:
+                    st["reward_mean"] = float(ys["reward_mean"][i].mean())
+                    st["p99_mean_ms"] = float(ys["p99_mean"][i].mean())
+                    st["p99_ms"] = float(ys["p99_last"][i][-1])
+                stats_list.append(st)
+        # ---- one-pass §2.4.1 replay from the device count tensor ----
+        bins = cfgr.disc.bins
+        counts_np = np.asarray(counts)
+        names = table.names
+        for li in np.nonzero(counts_np.any(axis=1))[0]:
+            dyn = bins.get(names[li])
+            if dyn is not None:
+                c = counts_np[li]
+                reps = np.repeat(np.arange(c.size), c)
+                pos = np.concatenate([(np.arange(ci) + 0.5) / ci
+                                      for ci in c if ci])
+                dyn.record_many(reps[np.argsort(pos, kind="stable")])
+        # ---- final configs from the integerised indices ----
+        idx_f = np.asarray(config_idx_f)
+        configs = [dict(c) for c in self._epoch_configs]
+        val_cache: dict = {}
+        for ci, li in zip(*np.nonzero(idx_f != idx0)):
+            kv = (int(li), int(idx_f[ci, li]))
+            val = val_cache.get(kv)
+            if val is None:
+                val = val_cache[kv] = table.value_of(*kv)
+            configs[ci][names[li]] = val
+        env.configs = configs
+        env.invalidate()
+        return stats_list
+
     def run_async(self, *, explore: bool = True, greedy: bool = False):
         """Dispatch one fused episode batch WITHOUT blocking on it and
         return the device-resident (N, S) batch. Consecutive calls before
@@ -564,23 +873,31 @@ class DeviceEpisodeRunner:
 
         # re-pack the integerised table from the (possibly adapted) oracle,
         # padded up the bin ladder so between-batch splits keep the shapes
-        # (and the compiled program) stable
-        table = DeviceLeverTable.from_discretiser(cfgr.disc)
-        self._table = table
-        from repro.engine.fleet_jax import _bucket
-        B_pad = max(_bucket(table.max_bins, _BIN_BUCKETS), self._hw_B)
-        self._hw_B = B_pad
-        packed_tabs = build_packed_tables(table, pad_to=B_pad)
-        self._cc_pairs = tuple((k, li) for k, li, _ in packed_tabs)
-        self._tabs = {k: jnp.asarray(tab) for k, li, tab in packed_tabs}
-        self._kind_code = jnp.asarray(table.kind_code)
-        self._n_valid = jnp.asarray(table.n_valid)
-        self._reboot_f = jnp.asarray([1.0 if s.reboot else 0.0
-                                      for s in table.specs], jnp.float32)
-        self._rejit_f = jnp.asarray(
-            [1.0 if s.group in ("kernel", "memory", "parallel") else 0.0
-             for s in table.specs], jnp.float32)
-        self._ranked_g = tuple(table.index_of[n] for n in cfgr.levers)
+        # (and the compiled program) stable — UNLESS the last §2.4.1 replay
+        # changed no bin edge (exact edge-array hash): steady-state batches
+        # then skip the whole O(N·109) rebuild and reuse the device tables
+        disc_sig = tuple(d._edges.tobytes()
+                         for d in cfgr.disc.bins.values())
+        repack = self._table is None or disc_sig != self._disc_sig
+        self._disc_sig = disc_sig
+        if repack:
+            table = DeviceLeverTable.from_discretiser(cfgr.disc)
+            self._table = table
+            from repro.engine.fleet_jax import _bucket
+            B_pad = max(_bucket(table.max_bins, _BIN_BUCKETS), self._hw_B)
+            self._hw_B = B_pad
+            packed_tabs = build_packed_tables(table, pad_to=B_pad)
+            self._cc_pairs = tuple((k, li) for k, li, _ in packed_tabs)
+            self._tabs = {k: jnp.asarray(tab) for k, li, tab in packed_tabs}
+            self._kind_code = jnp.asarray(table.kind_code)
+            self._n_valid = jnp.asarray(table.n_valid)
+            self._reboot_f = jnp.asarray([1.0 if s.reboot else 0.0
+                                          for s in table.specs], jnp.float32)
+            self._rejit_f = jnp.asarray(
+                [1.0 if s.group in ("kernel", "memory", "parallel") else 0.0
+                 for s in table.specs], jnp.float32)
+            self._ranked_g = tuple(table.index_of[n] for n in cfgr.levers)
+        table = self._table
         if self._wl_dev is None:
             tbl = pack_device_workloads(env.workloads)
             self._wl_dev = {k: jnp.asarray(v)
@@ -632,11 +949,12 @@ class DeviceEpisodeRunner:
 
             rep = NamedSharding(self.mesh, P())
             shd = fleet_sharding(self.mesh)
-            self._tabs = jax.device_put(self._tabs, rep)
-            self._kind_code = jax.device_put(self._kind_code, rep)
-            self._n_valid = jax.device_put(self._n_valid, rep)
-            self._reboot_f = jax.device_put(self._reboot_f, rep)
-            self._rejit_f = jax.device_put(self._rejit_f, rep)
+            if repack:
+                self._tabs = jax.device_put(self._tabs, rep)
+                self._kind_code = jax.device_put(self._kind_code, rep)
+                self._n_valid = jax.device_put(self._n_valid, rep)
+                self._reboot_f = jax.device_put(self._reboot_f, rep)
+                self._rejit_f = jax.device_put(self._rejit_f, rep)
             self._wl_dev = jax.device_put(self._wl_dev, shd)
             self._emitF = jax.device_put(self._emitF, shd)
             if self._ft_dev is not None:

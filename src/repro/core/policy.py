@@ -209,11 +209,16 @@ class ReinforceAgent:
         self.opt = rmsprop(lr=lr)
         self.opt_state = self.opt.init(self.params)
         self._grad = jax.jit(jax.grad(_batch_pg_loss))
+        #: the whole-update step with the optimiser and hyper-parameters
+        #: bound but NOT jitted: the epoch mega-scan (device_loop.run_epoch)
+        #: composes it as one stage of its scan body, so K policy updates
+        #: trace into a single device program
+        self._update_step = partial(
+            _update_step, opt=self.opt, gamma=gamma,
+            entropy_beta=entropy_beta)
         #: the whole-update device program; one jit cache per agent (the
         #: optimiser and hyper-parameters close over the trace)
-        self._update_jit = jax.jit(partial(
-            _update_step, opt=self.opt, gamma=gamma,
-            entropy_beta=entropy_beta))
+        self._update_jit = jax.jit(self._update_step)
 
     # -- acting --------------------------------------------------------------
     def action_decode(self, a: int) -> tuple[str, int]:
@@ -312,6 +317,15 @@ class ReinforceAgent:
                     "steps": int(np.asarray(mask).sum())}
 
         return stats
+
+    def adopt_update(self, params, opt_state, k: int = 1) -> None:
+        """Adopt post-update params/optimizer leaves computed OUTSIDE
+        ``update_batch`` — the epoch mega-scan runs ``k`` composed
+        ``_update_step``s device-side and hands back only the final leaves;
+        the exploit-warm-up bookkeeping still advances by ``k``."""
+        self.params = params
+        self.opt_state = opt_state
+        self.n_updates += int(k)
 
     def update_batch(self, states, actions, rewards, mask=None) -> dict:
         """One REINFORCE batch update from device-resident (N, T) episode

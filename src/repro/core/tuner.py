@@ -321,14 +321,24 @@ class AutoTuner:
                                levers=self.ranked_levers, **kw)
 
     def run(self, n_updates: int, *, collect_windows: int = 120,
-            configurator_kw: Optional[dict] = None, callback=None):
-        """collect -> analyse -> tune, in one call (examples/launchers)."""
+            configurator_kw: Optional[dict] = None, callback=None,
+            epoch_k: int = 1, records: str = "full"):
+        """collect -> analyse -> tune, in one call (examples/launchers).
+
+        ``epoch_k > 1`` switches the online loop to the epoch mega-scan
+        (DESIGN.md §15): updates are dispatched in fused K-iteration
+        device programs via ``Configurator.tune_megascan`` — the callback
+        still fires per update, but only at epoch boundaries (the
+        epoch-granular collect). Requires the fused device loop."""
         if not self.matrix.metric_rows:
             self.collect(collect_windows)
         if not self.ranked_levers:
             self.analyse()
         if self.configurator is None:
             self.build_configurator(**(configurator_kw or {}))
+        if epoch_k > 1:
+            return self.configurator.tune_megascan(
+                n_updates, k=epoch_k, records=records, callback=callback)
         return self.configurator.tune(n_updates, callback=callback)
 
     # -- persistence -------------------------------------------------------------

@@ -76,6 +76,27 @@ def fleet_sharding(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P(FLEET_AXIS))
 
 
+def fleet_episode_specs(mesh: Mesh, r_max: int) -> tuple[tuple, tuple]:
+    """``shard_map`` in/out specs for the fused episode program
+    (``repro.core.device_loop``) — ONE definition shared by the per-update
+    program and the epoch mega-scan, which wraps the same episode body
+    inside its update scan. Argument order is the episode program's:
+    ``(params, key)`` replicated; per-cluster loop state
+    ``config_idx..reconfigs``, the workload table, model constants,
+    emission factors, fault table and deploy lags sharded on the cluster
+    axis; the heat-map range ``lo/hi``, lever tables and scalars
+    replicated; the deploy-history ring sharded on its cluster dim.
+    ``r_max`` > 0 appends the history ring to the carry outputs."""
+    ax = mesh.axis_names[0]
+    pf, pr = P(ax), P()
+    ph = P(None, ax)                    # (R+1, N, L) history ring
+    in_specs = (pr, pr) + (pf,) * 6 + (pr, pr) + (pf, pf) \
+        + (pr,) * 6 + (pf, pf) + (pf, pf, ph)
+    out_specs = ((pf,) * 6 + (pr, pr, pf)
+                 + ((ph,) if r_max else ()), pf)
+    return in_specs, out_specs
+
+
 def tp_size(mesh: Mesh, ms: MeshSpec) -> int:
     return mesh.shape[ms.model]
 

@@ -83,6 +83,7 @@ class ServeController:
         incumbent: Optional[dict] = None,
         device_loop: str = "auto",
         mesh="auto",
+        epoch_k: int = 1,
         bin_kw: Optional[dict] = None,
         checkpoint_dir=None,
         checkpoint_keep: int = 3,
@@ -99,6 +100,11 @@ class ServeController:
         self.eval_windows = int(eval_windows)
         self.demote_cooldown = int(demote_cooldown)
         self.canary_pairs = M = int(canary_pairs)
+        # epoch_k > 1: the shadow phase trains via the epoch mega-scan
+        # (DESIGN.md §15) — K fused updates per cycle in one device
+        # program instead of one ≤2-program update. The default 1 keeps
+        # the PR-7/8 sequential cycle (and its bitwise crash-resume pin).
+        self.epoch_k = int(epoch_k)
 
         # the three fleets: seeds are part of the service identity (the
         # device RNG key derives from them), so a resumed controller must be
@@ -157,8 +163,14 @@ class ServeController:
 
         # ---- shadow: train + surface this cycle's candidate ---------------
         self._reset_queues(self.shadow_env)
-        stats = self.cfgr.run_cycle()
-        recs = stats.pop("records")
+        if self.epoch_k > 1:
+            n0 = len(self.cfgr.history)
+            stats_list = self.cfgr.run_epoch(self.epoch_k, records="full")
+            stats = dict(stats_list[-1]) if stats_list else {}
+            recs = self.cfgr.history[n0:]
+        else:
+            stats = self.cfgr.run_cycle()
+            recs = stats.pop("records")
         c.inc("shadow_windows", len(recs))
         best = max(recs, key=lambda r: r.reward) if recs else None
         if best is not None:

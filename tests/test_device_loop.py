@@ -400,3 +400,177 @@ def test_double_buffered_dispatch_matches_sync_runs():
         assert a.lever == b.lever and a.reward == b.reward
         assert a.clock_s == b.clock_s and a.config == b.config
     assert cfgs_s == cfgs_a
+
+
+# --------------------------------------------------------------------------
+# §15 epoch mega-scan: K outer iterations in ONE device program
+# --------------------------------------------------------------------------
+
+def test_epoch_compiles_once_and_dispatches_o1():
+    """The dispatch-count regression pin: ``run_epoch(K)`` past the exploit
+    warm-up compiles ONE epoch program per (K, records) shape, dispatches
+    exactly ONE executable per epoch (never O(K)), and steady-state epochs
+    of the same shape add zero traces and zero update-program traces (the
+    update math is scan-composed, not separately dispatched)."""
+    from repro.core import device_loop as dl
+    from repro.core import policy as pol
+
+    cfgr = _cfgr(_fleet("jax", 6), device_loop="on")
+    for _ in range(cfgr.agent.f_warmup_updates):   # past the exploit flip
+        cfgr.run_update()
+    base = dict(dl.TRACE_COUNTS)
+    d0 = dl.EPOCH_DISPATCHES[0]
+    cfgr.run_epoch(4, records="full")
+    keys_new = [k for k, v in dl.TRACE_COUNTS.items()
+                if v > base.get(k, 0)]
+    epochs = [k for k in keys_new if k[0] == "epoch"]
+    assert len(epochs) == 1
+    # the only other trace bump is the episode CLOSURE, traced INSIDE the
+    # epoch jit — not a separately dispatched executable
+    assert all(k == epochs[0][1] for k in keys_new if k[0] != "epoch")
+    assert dl.EPOCH_DISPATCHES[0] - d0 == 1
+    traces = dict(dl.TRACE_COUNTS)
+    # the update math traces ONCE, inside the epoch program (the counter
+    # bumps at trace time whether jitted standalone or scan-composed)...
+    upd_traces = pol.UPDATE_TRACE_COUNT[0]
+    cfgr.run_epoch(4, records="full")   # steady state: no retrace
+    assert dl.TRACE_COUNTS == traces
+    assert dl.EPOCH_DISPATCHES[0] - d0 == 2
+    # ...and steady-state epochs re-trace neither it nor the episode body
+    assert pol.UPDATE_TRACE_COUNT[0] == upd_traces
+    assert cfgr.agent.n_updates == cfgr.agent.f_warmup_updates + 8
+
+
+def test_epoch_crossing_warmup_is_at_most_two_programs():
+    """An epoch that crosses the exploit warm-up boundary splits into two
+    segments (the exploit gate is a trace static) — ≤2 compiled programs,
+    2 dispatches, and the update count still lands exactly."""
+    from repro.core import device_loop as dl
+
+    cfgr = _cfgr(_fleet("jax", 6), device_loop="on")
+    assert cfgr.agent.n_updates == 0
+    base = dict(dl.TRACE_COUNTS)
+    d0 = dl.EPOCH_DISPATCHES[0]
+    k = cfgr.agent.f_warmup_updates + 2
+    stats = cfgr.run_epoch(k, records="full")
+    keys_new = [kk for kk, v in dl.TRACE_COUNTS.items()
+                if v > base.get(kk, 0)]
+    epochs = [kk for kk in keys_new if kk[0] == "epoch"]
+    skeys = {kk[1] for kk in epochs}
+    assert len(epochs) == 2
+    assert all(kk in skeys for kk in keys_new if kk[0] != "epoch")
+    assert dl.EPOCH_DISPATCHES[0] - d0 == 2
+    assert len(stats) == k and cfgr.agent.n_updates == k
+
+
+def test_epoch_summary_and_off_modes_skip_records():
+    """``records="summary"|"off"`` must not grow the history, yet still
+    advance the fleet state, the update count, the chaos window accounting
+    and the §2.4.1 bin hits (replayed from the device count tensor); the
+    summary stats carry per-update convergence curves."""
+    env = _fleet("jax", 5)
+    cfgr = _cfgr(env, device_loop="on")
+    clock0 = env.clocks().copy()
+    stats = cfgr.run_epoch(3, records="summary")
+    assert cfgr.history == []
+    assert len(stats) == 3 and cfgr.agent.n_updates == 3
+    assert (env.clocks() > clock0).all()
+    for st in stats:
+        assert np.isfinite(st["pg_loss"]) and np.isfinite(st["reward_mean"])
+        assert st["p99_mean_ms"] > 0 and st["episodes"] == 5
+    runner = cfgr._runner
+    assert runner.chaos.windows == 3 * 5 * 3      # K * N * S
+    off = cfgr.run_epoch(2, records="off")
+    assert cfgr.history == [] and len(off) == 2
+    assert "reward_mean" not in off[0]
+    assert cfgr.agent.n_updates == 5
+    with pytest.raises(ValueError):
+        cfgr.run_epoch(1, records="nope")
+
+
+def test_epoch_summary_bin_replay_matches_full_mode():
+    """The device-side (lever, bin) count tensor replayed at the epoch
+    boundary must land the same §2.4.1 hit totals as full-mode
+    materialisation (identical twins, same episode stream)."""
+    a = _cfgr(_fleet("jax", 4), device_loop="on")
+    b = _cfgr(_fleet("jax", 4), device_loop="on")
+    a.run_epoch(3, records="full")
+    b.run_epoch(3, records="summary")
+    for name, dyn in a.disc.bins.items():
+        assert dyn._hits.sum() == b.disc.bins[name]._hits.sum(), name
+
+
+def test_epoch_skips_repack_when_bins_unchanged():
+    """Satellite: with no edge change from the boundary replay (frozen
+    bins here), the next epoch must reuse the packed ``DeviceLeverTable``
+    wholesale — and a mutated edge array must force a re-pack."""
+    cfgr = _cfgr(_fleet("jax", 4), device_loop="on")
+    cfgr.run_epoch(2, records="summary")
+    runner = cfgr._runner
+    table, tabs = runner._table, runner._tabs
+    cfgr.run_epoch(2, records="summary")
+    assert runner._table is table and runner._tabs is tabs
+    # sequential batches ride the same skip
+    cfgr.run_update()
+    assert runner._table is table and runner._tabs is tabs
+    # an adapted bin (edge change) invalidates the signature
+    dyn = cfgr.disc.bins["max_batch_events"]
+    dyn._extend(top=True)
+    cfgr.run_epoch(1, records="summary")
+    assert runner._table is not table
+
+
+def test_epoch_rejects_inflight_batches():
+    cfgr = _cfgr(_fleet("jax", 4), device_loop="on")
+    runner = cfgr._device_runner()
+    runner.run_async()
+    with pytest.raises(RuntimeError, match="in flight"):
+        runner.run_epoch(2)
+    runner.finalize()
+    stats, recs = runner.run_epoch(1)
+    assert len(stats) == 1 and len(recs) == 4 * 3
+
+
+@needs_devices
+def test_mesh_epoch_matches_unsharded_on_one_device():
+    """§11 × §15: the epoch scan with the shard_map'd episode body on a
+    1-device mesh must replay the unsharded epoch bitwise (same plumbing
+    pin as test_mesh_one_device_replays_unsharded_exactly)."""
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.distribution.sharding import FLEET_AXIS
+
+    mesh1 = Mesh(np.asarray(jax.devices()[:1]), (FLEET_AXIS,))
+
+    def run(mesh):
+        env = _fleet("jax", 8, kind="switching")
+        cfgr = _cfgr(env, device_loop="on", mesh=mesh)
+        cfgr.run_epoch(3, records="full")
+        return np.array([rec.reward for rec in cfgr.history])
+
+    assert np.array_equal(run("off"), run(mesh1))
+
+
+@needs_devices
+def test_mesh_epoch_sharded_stays_in_distribution():
+    """Full-device-count epoch scan: per-shard RNG streams differ from the
+    single-device epoch by design — distributional pin plus state handoff,
+    like the per-update sharded test."""
+    import jax
+
+    ndev = jax.device_count()
+    n = 4 * ndev
+
+    def run(mesh):
+        env = _fleet("jax", n, kind="switching")
+        cfgr = _cfgr(env, device_loop="on", mesh=mesh)
+        cfgr.run_epoch(2, records="full")
+        return np.array([rec.reward for rec in cfgr.history]), env
+
+    r1, _ = run("off")
+    r8, env = run("auto")
+    assert rel(np.median(r8), np.median(r1)) < 0.15
+    assert env.reconfigs.tolist() == [2 * 3] * n
+    stats = env.observe_stats(240.0)
+    assert np.isfinite(np.asarray(stats["mean_ms"])).all()

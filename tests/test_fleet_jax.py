@@ -307,3 +307,82 @@ def test_workload_rate_traces_under_jit(wl):
     sj = np.asarray(jax.jit(wl.mean_size)(jnp.asarray(ts, jnp.float32)))
     assert np.allclose(rj, [wl.rate(float(t)) for t in ts], rtol=2e-4)
     assert np.allclose(sj, [wl.mean_size(float(t)) for t in ts], rtol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# §14 calibration cache: one timed probe per (backend, tier, bucket)
+# --------------------------------------------------------------------------
+
+def test_calibration_verdict_computed_once_per_bucket(monkeypatch):
+    """``preferred_window_impl`` must measure at most ONCE per (backend,
+    tier, fleet-size bucket) process-wide: the first call lands the verdict
+    in ``_IMPL_CACHE``, every later call — any N in the same bucket — is a
+    pure dict hit (no re-timing)."""
+    from repro.engine import fleet_jax as fj
+
+    monkeypatch.delenv("REPRO_FLEET_IMPL", raising=False)
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    calls = []
+    real = fj.window_impl_timings
+    monkeypatch.setattr(fj, "window_impl_timings",
+                        lambda N, T=32, reps=5: calls.append(N)
+                        or real(N, T, reps=1))
+    monkeypatch.setattr(fj, "_IMPL_CACHE", {})
+    v1 = fj.preferred_window_impl(6)
+    assert v1 in ("pallas", "scan") and len(calls) == 1
+    # same bucket, different N, repeated calls: all cache hits
+    for n in (6, 7, 5):
+        assert fj.preferred_window_impl(n) == v1
+    assert len(calls) == 1
+    key = (__import__("jax").default_backend(), fj.pallas_mode(),
+           fj._bucket(6))
+    assert fj._IMPL_CACHE == {key: v1}
+
+
+def test_calibration_override_wins_without_measuring(monkeypatch):
+    """``REPRO_FLEET_IMPL`` must short-circuit BEFORE the cache and the
+    probe: the verdict is the override verbatim, nothing is timed, nothing
+    is cached — and a bogus override value falls through to calibration."""
+    from repro.engine import fleet_jax as fj
+
+    class ProbeRan(RuntimeError):
+        pass
+
+    def _probe(*a, **k):
+        raise ProbeRan
+
+    monkeypatch.setattr(fj, "window_impl_timings", _probe)
+    monkeypatch.setattr(fj, "_IMPL_CACHE", {"poisoned": "scan"})
+    for forced in ("pallas", "scan"):
+        monkeypatch.setenv("REPRO_FLEET_IMPL", forced)
+        assert fj.preferred_window_impl(6) == forced
+    assert fj._IMPL_CACHE == {"poisoned": "scan"}   # untouched
+    monkeypatch.setenv("REPRO_FLEET_IMPL", "bogus")
+    with pytest.raises(ProbeRan):
+        fj.preferred_window_impl(6)   # fell through to the probe
+
+
+def test_calibration_cleared_cache_remeasures(monkeypatch):
+    """A cleared ``_IMPL_CACHE`` must re-measure (the cache is process
+    state, not persisted), and ``calibrate_window_impl`` always re-measures
+    — its verdict and returned timings are the same sample."""
+    from repro.engine import fleet_jax as fj
+
+    monkeypatch.delenv("REPRO_FLEET_IMPL", raising=False)
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    calls = []
+    real = fj.window_impl_timings
+    monkeypatch.setattr(fj, "window_impl_timings",
+                        lambda N, T=32, reps=5: calls.append(N)
+                        or real(N, T, reps=1))
+    monkeypatch.setattr(fj, "_IMPL_CACHE", {})
+    fj.preferred_window_impl(4)
+    fj._IMPL_CACHE.clear()
+    fj.preferred_window_impl(4)
+    assert len(calls) == 2
+    verdict, timings = fj.calibrate_window_impl(4)   # explicit: re-measures
+    assert len(calls) == 3
+    assert set(timings) == {"pallas", "scan"}
+    assert all(t > 0 for t in timings.values())
+    assert verdict == ("pallas" if timings["pallas"] <= timings["scan"]
+                       else "scan")

@@ -224,3 +224,66 @@ def test_pipeline_requires_device_loop():
     assert cfgr.device_loop_reason() is not None
     with pytest.raises(RuntimeError):
         cfgr.tune_pipelined(2, depth=2)
+
+
+# --------------------------------------------------- epoch mega-scan (§15)
+def test_megascan_k1_bitwise_equals_sequential():
+    """``run_epoch(1)`` IS one sequential outer iteration: same episode
+    trace, same RNG fold sequence, same update inputs, and the §2.4.1
+    replay runs after every update exactly like the sequential schedule —
+    params, optimizer state, the record stream and the final configs must
+    match bit for bit across a run that crosses the exploit warm-up
+    boundary."""
+    a, b = _twin(), _twin()
+    a.tune(3)
+    for _ in range(3):
+        b.run_epoch(1, records="full")
+    for x, y in zip(jax.tree_util.tree_leaves(a.agent.params),
+                    jax.tree_util.tree_leaves(b.agent.params)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+    for x, y in zip(jax.tree_util.tree_leaves(a.agent.opt_state),
+                    jax.tree_util.tree_leaves(b.agent.opt_state)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+    assert [r.reward for r in a.history] == [r.reward for r in b.history]
+    assert [r.p99_ms for r in a.history] == [r.p99_ms for r in b.history]
+    assert a.env.configs == b.env.configs
+    assert a.env._dev._draws == b.env._dev._draws
+
+
+def test_megascan_full_records_bitwise_equals_sequential():
+    """One K=3 epoch in ``records="full"`` mode vs 3 sequential updates:
+    frozen bins make the sequential path's between-update replay a no-op,
+    so the epoch's deferred materialisation must reproduce the exact same
+    params, record stream and final fleet state (the scan-composed update
+    is the SAME ``_update_step`` math the per-update program jits)."""
+    a, b = _twin(), _twin()
+    a.tune(3)
+    stats, _ = b._device_runner().run_epoch(3, records="full")
+    assert len(stats) == 3
+    for x, y in zip(jax.tree_util.tree_leaves(a.agent.params),
+                    jax.tree_util.tree_leaves(b.agent.params)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+    assert b.agent.n_updates == a.agent.n_updates == 3
+
+
+def test_megascan_k4_stays_pinned_to_sequential():
+    """A K=4 epoch vs 4 sequential updates at N=16: the mega-scan defers
+    the §2.4.1 replay and the record pull to the epoch boundary, so the
+    streams are statistically — not bitwise — pinned (same contract as
+    the depth≥2 pipeline)."""
+    a, b = _twin(n=16), _twin(n=16)
+    a.tune(4)
+    b.tune_megascan(4, k=4, records="full")
+    assert len(b.history) == len(a.history) == 4 * 16 * 3
+    assert b.agent.n_updates == a.agent.n_updates == 4
+    assert_loop_equivalent(
+        np.array([r.reward for r in a.history]),
+        np.array([r.p99_ms for r in a.history]),
+        np.array([r.reward for r in b.history]),
+        np.array([r.p99_ms for r in b.history]))
+
+
+def test_megascan_requires_device_loop():
+    cfgr = _cfgr(_fleet("numpy", 4), device_loop="auto")
+    with pytest.raises(RuntimeError, match="device loop"):
+        cfgr.run_epoch(2)

@@ -370,3 +370,26 @@ def test_twenty_cycle_switching_acceptance():
     # the serving fleet ends on the last promoted config
     assert ctl.incumbent == promoted[-1]["config"]
     assert all(cfg == ctl.incumbent for cfg in ctl.live_env.current_configs())
+
+
+def test_epoch_k_cycle_trains_k_updates_in_one_program():
+    """§15 ride-along: ``epoch_k > 1`` swaps the shadow phase's per-update
+    program pair for ONE mega-scan epoch per cycle — K fused updates, the
+    full record stream still lands in history for challenger picking, and
+    steady-state cycles dispatch O(1) epoch programs without retracing."""
+    from repro.core import device_loop as dl
+
+    ctl = _controller(epoch_k=2)
+    s1 = ctl.run_cycle()
+    assert ctl.cfgr.agent.n_updates == 2
+    # shadow record stream intact: 2 updates × n clusters × steps windows
+    assert ctl.counters.as_dict()["shadow_windows"] == 2 * 3 * 2
+    assert np.isfinite(s1["mean_return"])
+    ctl.run_cycle()     # warm through the one-time exploit flip compile
+    traces = dict(dl.TRACE_COUNTS)
+    d0 = dl.EPOCH_DISPATCHES[0]
+    s3 = ctl.run_cycle()
+    assert dl.TRACE_COUNTS == traces          # §13 no-retrace pin holds
+    assert dl.EPOCH_DISPATCHES[0] - d0 == 1   # one epoch program per cycle
+    assert ctl.cfgr.agent.n_updates == 6
+    assert s3["cycle"] == 3 and ctl.counters.as_dict()["cycles"] == 3
