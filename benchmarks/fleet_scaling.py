@@ -649,6 +649,105 @@ def train_chaos_rows(n: int, updates: int, seed: int,
     return rows
 
 
+def train_safe_rows(n: int, updates: int, seed: int, steps: int = 6,
+                    slo_ms: float = 12_000.0) -> list[Row]:
+    """§16 safety-shield rows (``train_safe_*``): shielded vs unshielded
+    SLO-reward training on matched ``chaos_scenario`` fleets. The shield
+    (trust-region mask + risk fallback + breach budget, all inside the
+    episode scan) exists to make exploration safe, so the rows measure
+    exactly that trade: how much breach exposure it removes (window breach
+    rate AND the in-trace breach-duration fraction) against what it costs
+    in training throughput.
+
+    ``slo_ms`` sits where the fleet's breach signal actually separates
+    configs: these Poisson fleets idle around p99 ≈ 10 s, so a 12 s SLO is
+    met by well-tuned windows and broken by saturating ones — the 2 s SLO
+    the chaos rows use for reward shaping is breached by EVERY window and
+    would show both arms at breach rate 1.0.
+
+    Timed updates are interleaved one at a time across the two arms (same
+    cgroup fairness rationale as ``backend_matrix``); both arms keep their
+    full trajectory in the breach accounting — the unshielded loop's early
+    exploration is precisely where it saturates, and warming it away would
+    understate the shield's value. Gates (full runs): breach-rate ratio
+    ≤ 0.25 (the shield removes ≥4x the breached windows) at throughput
+    ratio ≥ 0.8 (it costs ≤20% windows/s)."""
+    from repro.core.configurator import Configurator
+    from repro.core.faults import chaos_scenario
+    from repro.engine import FleetEnv
+
+    frozen = dict(split_after=10**9, extend_after=10**9, merge_after=10**9)
+    cfgrs = {}
+    for tag, safe in (("unshielded", False), ("shielded", True)):
+        env = FleetEnv([_train_workload("poisson", i) for i in range(n)],
+                       seeds=[seed + i for i in range(n)], backend="jax",
+                       faults=chaos_scenario(n, seed=seed))
+        cfgrs[tag] = Configurator(
+            env, TRAIN_METRICS, TRAIN_LEVERS, seed=seed,
+            steps_per_episode=steps, window_s=WINDOW_S, device_loop="on",
+            bin_kw=frozen, mesh="off", reward_mode="slo", slo_ms=slo_ms,
+            safe=safe)
+        cfgrs[tag].run_update()     # compile both program pairs untimed
+    times: dict = {tag: [] for tag in cfgrs}
+    for _ in range(updates):
+        for tag, cfgr in cfgrs.items():
+            t0 = time.perf_counter()
+            cfgr.run_update()
+            times[tag].append(time.perf_counter() - t0)
+    per_update = n * steps
+    rows: list[Row] = []
+    wps: dict = {}
+    breach: dict = {}
+    inten: dict = {}
+    for tag, cfgr in cfgrs.items():
+        ts = times[tag]
+        wps[tag] = per_update * len(ts) / sum(ts)
+        chaos = cfgr._device_runner().chaos
+        breach[tag] = chaos.breach_rate
+        inten[tag] = chaos.breach_frac_sum / max(chaos.windows, 1)
+        rows += [
+            Row(f"train_safe_jax{n}_{tag}_windows_per_s", wps[tag], "win/s",
+                "slo-reward fused loop on the chaos_scenario roster"),
+            Row(f"train_safe_jax{n}_{tag}_windows_per_s_chunk_med",
+                per_update / float(np.median(ts)), "win/s",
+                "per-update median (throttle-robust twin)"),
+            Row(f"train_safe_jax{n}_{tag}_breach_rate", breach[tag], "",
+                "fraction of windows with in-trace SLO-breach ticks"),
+            Row(f"train_safe_jax{n}_{tag}_breach_intensity", inten[tag], "",
+                "mean in-trace breach-duration fraction per window"),
+            Row(f"train_safe_jax{n}_{tag}_mean_reward",
+                chaos.mean_reward, "", "mean SLO-shaped window reward"),
+        ]
+    sc = cfgrs["shielded"].shield_counters
+    rows += [
+        Row(f"train_safe_jax{n}_clamped_actions", float(sc.clamped_actions),
+            "", "sampled moves diverted/clamped into the trust region"),
+        Row(f"train_safe_jax{n}_fallbacks", float(sc.fallbacks), "",
+            "risk/budget-triggered whole-config reverts to last-known-good"),
+        Row(f"train_safe_jax{n}_budget_exhaustions",
+            float(sc.budget_exhaustions), "",
+            "(cluster, episode) pairs whose breach budget ran dry"),
+        Row(f"train_safe_jax{n}_trust_radius", sc.trust_radius, "bins",
+            "fleet-mean trust radius after the run"),
+    ]
+    if breach["unshielded"] > 0:
+        rows.append(Row("train_safe_breach_ratio",
+                        breach["shielded"] / breach["unshielded"], "x",
+                        "acceptance gate: <=0.25 (shield removes >=4x the "
+                        "breached windows)"))
+        rows.append(Row("train_safe_intensity_ratio",
+                        inten["shielded"] / max(inten["unshielded"], 1e-12),
+                        "x", "breach-duration ratio (reference twin)"))
+    else:
+        rows.append(Row("train_safe_breach_ratio", -1.0, "x",
+                        "vacuous: the unshielded run never breached at "
+                        "this SLO — nothing for the shield to remove"))
+    rows.append(Row("train_safe_throughput_ratio",
+                    wps["shielded"] / wps["unshielded"], "x",
+                    "acceptance gate: >=0.8 (shield costs <=20% windows/s)"))
+    return rows
+
+
 # --------------------------------------------------------------------------
 # legacy PR 1 rows: AutoTuner.collect vs the seed serial baseline
 # --------------------------------------------------------------------------
@@ -826,6 +925,10 @@ def main(argv=None) -> int:
                              seed=args.seed, workload="switching")
         # §12 chaos smoke: slo reward + fault tables + recovery row
         rows += train_chaos_rows(8, updates=1, seed=args.seed, steps=3)
+        # §16 safe-mode smoke: shielded vs unshielded arms end to end
+        # (tiny budget — the ratio gates only run on the full benchmark,
+        # where the unshielded arm has enough updates to saturate)
+        rows += train_safe_rows(8, updates=2, seed=args.seed, steps=3)
         # §14 smoke: tiered-dispatch calibration + pipelined schedule run
         # end to end (tiny shapes, gates only enforced on the full run)
         rows += pallas_compiled_rows((8,), seed=args.seed, reps=2)
@@ -889,6 +992,14 @@ def main(argv=None) -> int:
             rows += train_chaos_rows(min(gate_n, 256),
                                      updates=args.train_updates,
                                      seed=args.seed)
+            # §16 safety-shield matrix: shielded vs unshielded breach
+            # exposure + throughput on the same chaos roster (14 updates:
+            # the unshielded arm needs room to walk into saturation for
+            # the breach-ratio gate to measure anything real — at short
+            # budgets both arms are still near their common init and the
+            # ratio sits ~0.6)
+            rows += train_safe_rows(min(gate_n, 256), updates=14,
+                                    seed=args.seed)
         if args.backend in ("all", "numpy"):
             rows += adaptation(16, 2, args.seed)
     emit(rows)
@@ -963,6 +1074,20 @@ def main(argv=None) -> int:
         if rec is not None and not (1.0 <= rec.value <= 4.0):
             print(f"FAIL: chaos recovery {rec.value:.0f} windows outside "
                   "the bounded 1..4 band", file=sys.stderr)
+            failed = 1
+        # §16 upper-bound gates: the shield must REMOVE breaches (ratio
+        # ≤ 0.25, skipped when vacuous at -1) at ≤20% throughput cost
+        br = next((r for r in rows
+                   if r.name == "train_safe_breach_ratio"), None)
+        if br is not None and br.value >= 0 and br.value > 0.25:
+            print(f"FAIL: shielded breach rate {br.value:.2f}x unshielded "
+                  "> 0.25x bound", file=sys.stderr)
+            failed = 1
+        tp = next((r for r in rows
+                   if r.name == "train_safe_throughput_ratio"), None)
+        if tp is not None and tp.value < 0.8:
+            print(f"FAIL: shielded throughput {tp.value:.2f}x unshielded "
+                  "< 0.8x bound", file=sys.stderr)
             failed = 1
     return failed
 

@@ -127,6 +127,17 @@ class CheckpointStore:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def leaf_keys(self, step: Optional[int] = None) -> set[str]:
+        """Flat key set of a saved checkpoint (no leaf data loaded) — lets a
+        caller trim optional template keys (e.g. §16 shield carry) before
+        ``restore`` when resuming from a checkpoint that predates them."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        return set(manifest["leaves"])
+
     def restore(self, skeleton: PyTree, *, step: Optional[int] = None,
                 shardings: Optional[PyTree] = None,
                 host: bool = False) -> tuple[PyTree, int, dict]:

@@ -20,7 +20,8 @@ from typing import Optional, Protocol, Sequence
 import jax
 import numpy as np
 
-from repro.core.discretize import LeverDiscretiser, LeverSpec
+from repro.core.discretize import (DeviceLeverTable, LeverDiscretiser,
+                                   LeverSpec, ShieldSpec, shield_update)
 from repro.core.heatmap import HeatmapEncoder, HeatmapSpec
 from repro.core.policy import ReinforceAgent, Trajectory
 
@@ -183,6 +184,8 @@ class Configurator:
         bin_kw: Optional[dict] = None,
         device_loop: str = "auto",
         mesh="auto",
+        safe: bool = False,
+        shield_kw: Optional[dict] = None,
     ):
         assert device_loop in ("auto", "on", "off"), device_loop
         self.env = env
@@ -207,6 +210,18 @@ class Configurator:
         self.slo_ms = float(slo_ms)
         self.slo_hinge_w = float(slo_hinge_w)
         self.slo_breach_w = float(slo_breach_w)
+        #: §16 safety shield (DESIGN.md §16): None = unshielded exploration,
+        #: a ShieldSpec = trust-region masked sampling + fallback-to-LKG +
+        #: per-episode breach budget, on BOTH the fused device loop and the
+        #: per-step host loop (its numpy twin below)
+        self.shield = ShieldSpec(**(shield_kw or {})) if safe else None
+        if self.shield is not None and reward_mode != "slo":
+            raise ValueError(
+                "safe exploration needs reward_mode='slo': the shield's "
+                "breach-risk carry reads the window breach fraction")
+        from repro.monitoring.metrics import ShieldCounters
+        self.shield_counters = ShieldCounters()
+        self._host_shield = None   # numpy twin carry (sig, lkg, radius, ...)
         self.history: list[StepRecord] = []
         self._last_window: Optional[MetricsWindow] = None
         self._last_fleet_windows: Optional[list] = None
@@ -306,25 +321,90 @@ class Configurator:
         records: list[list[StepRecord]] = [[] for _ in range(N)]
         configs = env.current_configs()
         windows = self._last_fleet_windows or env.observe(self.window_s)
+        spec = self.shield
+        if spec is not None:
+            # §16 numpy twin of the fused loop's shield: walk the SAME
+            # integerised table (frozen for the episode; §2.4.1 replay at
+            # the end, like the device materialise), carry LKG/radius/
+            # streak/risk across episodes keyed on the bin-edge signature
+            table = DeviceLeverTable.from_discretiser(self.disc)
+            names = table.names
+            ranked = np.asarray([table.index_of[n] for n in self.levers])
+            idx = table.index_configs(configs)
+            rows = np.arange(N)
+            sig = tuple(e.tobytes() if e is not None else b""
+                        for e in table._edges)
+            if self._host_shield is not None and self._host_shield[0] == sig:
+                _, lkg, radius, streak, risk = self._host_shield
+            else:
+                lkg = idx.copy()
+                radius = np.full(N, spec.trust_radius, np.int32)
+                streak = np.zeros(N, np.int32)
+                risk = np.zeros(N, np.float32)
+            budget = np.full(N, spec.breach_budget, np.int32)
+            ex_any = np.zeros(N, bool)
+            replay_l: list = []
+            replay_b: list = []
         for _ in range(self.steps_per_episode):
             states = self._encode_fleet(windows, configs)
+            mask = (table.shield_mask(idx, lkg, radius, ranked)
+                    if spec is not None else None)
             t0 = time.perf_counter()
             if device:
                 # block before reading the clock: jax dispatch is async, so
                 # an unsynchronised stop would under-report generation time
                 # in the Fig-6 phase breakdown
                 acts = jax.block_until_ready(self.agent.act_batch_device(
-                    states, explore=explore))
+                    states, explore=explore, mask=mask))
                 gen_s = (time.perf_counter() - t0) / N
                 actions = np.asarray(acts)
             else:
-                actions = self.agent.act_batch(states, explore=explore)
+                actions = self.agent.act_batch(states, explore=explore,
+                                               mask=mask)
                 gen_s = (time.perf_counter() - t0) / N
+            if spec is not None:
+                # the device twin's diversion signal: a step counts as
+                # clamped when the mask removed the action the policy's
+                # own argmax would have taken (the deterministic
+                # counterfactual — no extra RNG draws, mirroring the
+                # device loop's same-key counterfactual pick); folded into
+                # clamped_actions together with hard-clamp landings below
+                a_free = self.agent.act_batch(states, greedy=True)
+                diverted = ~mask[rows, a_free]
             decoded = [self.agent.action_decode(int(a)) for a in actions]
-            new_configs = [self.disc.apply(c, lever, direction)
-                           for c, (lever, direction) in zip(configs, decoded)]
-            reports = env.apply_configs(new_configs,
-                                        changed_levers=[(l,) for l, _ in decoded])
+            if spec is None:
+                new_configs = [self.disc.apply(c, lever, direction)
+                               for c, (lever, direction)
+                               in zip(configs, decoded)]
+                changed = [(l,) for l, _ in decoded]
+            else:
+                # integerised apply + hard trust-region clamp + risk/budget
+                # fallback-to-LKG — index-for-index the device loop's §16
+                # shield arithmetic
+                l_idx = ranked[actions // 2]
+                direction = np.where(actions % 2 == 0, 1, -1)
+                prev_idx = idx.copy()
+                raw = table.step_index(idx[rows, l_idx], l_idx, direction)
+                nb = table.shield_clamp(raw, lkg[rows, l_idx], radius, l_idx)
+                fallback = (risk > spec.risk_threshold) | (budget <= 0)
+                idx[rows, l_idx] = nb
+                idx = np.where(fallback[:, None], lkg, idx)
+                self.shield_counters.clamped_actions += int(
+                    (diverted | (nb != raw)).sum())
+                self.shield_counters.fallbacks += int(fallback.sum())
+                replay_l.append(l_idx.copy())
+                replay_b.append(idx[rows, l_idx].copy())
+                new_configs = []
+                changed = []
+                for i in range(N):
+                    cfg = dict(configs[i])
+                    moved = np.nonzero(idx[i] != prev_idx[i])[0]
+                    for li in moved:
+                        cfg[names[li]] = table.value_of(int(li),
+                                                        int(idx[i, li]))
+                    new_configs.append(cfg)
+                    changed.append(tuple(names[int(li)] for li in moved))
+            reports = env.apply_configs(new_configs, changed_levers=changed)
             stabs = env.stabilisation_times()
             # paper §4.2: reward measured on the window after stabilisation
             windows = env.observe(self.window_s, preroll_s=stabs)
@@ -342,6 +422,19 @@ class Configurator:
                                                hinge_w=self.slo_hinge_w,
                                                breach_w=self.slo_breach_w)
                            for w in windows]
+            if spec is not None:
+                # host breach-fraction proxy (the slo reward's): fraction
+                # of the window's latency samples above the SLO
+                bf = np.empty(N, np.float32)
+                for i, w in enumerate(windows):
+                    lat = np.asarray(w.latencies_ms, float)
+                    lat = lat[np.isfinite(lat) & (lat > 0)]
+                    bf[i] = float((lat > self.slo_ms).mean()) \
+                        if lat.size else 1.0
+                lkg, radius, streak, risk, budget, b_out = shield_update(
+                    bf, lkg, idx, radius, streak, risk, budget, spec,
+                    xp=np)
+                ex_any |= np.asarray(b_out)
             for i in range(N):
                 reward = rewards[i]
                 trajs[i].add(states[i], int(actions[i]), reward)
@@ -356,8 +449,44 @@ class Configurator:
                             "update_s": 0.0},
                 ))
             configs = new_configs
+        if spec is not None:
+            self._host_shield = (sig, lkg, radius, streak, risk)
+            self.shield_counters.budget_exhaustions += int(ex_any.sum())
+            self.shield_counters.trust_radius = float(radius.mean())
+            # §2.4.1 replay, step-major like the device materialise (the
+            # table stayed frozen for the whole episode)
+            lever_sm = np.concatenate(replay_l)
+            bin_sm = np.concatenate(replay_b)
+            for li in np.unique(lever_sm):
+                dyn = self.disc.bins.get(names[li])
+                if dyn is not None:
+                    dyn.record_many(bin_sm[lever_sm == li])
         self._last_fleet_windows = windows
         return trajs, [r for cluster in records for r in cluster]
+
+    def contract_shield(self) -> None:
+        """Collapse the shield's trust region to its floor and reset the
+        clean-window streaks, on whichever path (fused runner / numpy twin)
+        holds shield state. The serve loop's breach-budget trip (DESIGN.md
+        §16): exploration continues, but confined to ±radius_min bins
+        around the last-known-good configs until clean windows re-earn the
+        radius through the normal expand schedule."""
+        spec = self.shield
+        if spec is None:
+            return
+        runner = self._runner
+        if runner is not None and runner._shield is not None:
+            import jax.numpy as jnp
+
+            lkg, radius, streak, risk = runner._shield
+            runner._shield = (lkg, jnp.full_like(radius, spec.radius_min),
+                              jnp.zeros_like(streak), risk)
+        if self._host_shield is not None:
+            sig, lkg, radius, streak, risk = self._host_shield
+            self._host_shield = (sig, lkg,
+                                 np.full_like(radius, spec.radius_min),
+                                 np.zeros_like(streak), risk)
+        self.shield_counters.trust_radius = float(spec.radius_min)
 
     # -- the fused device loop (DESIGN.md §10) ----------------------------------
     def _device_runner(self):

@@ -101,7 +101,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core.discretize import DeviceLeverTable
+from repro.core.discretize import DeviceLeverTable, shield_update
 from repro.core.heatmap import node_grid_shape
 from repro.core.policy import _sample_actions
 from repro.data.workloads import pack_device_workloads, device_workload_reason
@@ -192,6 +192,11 @@ class DeviceEpisodeRunner:
         self._delays = None                   # (N,) per-cluster deploy lag
         self._R_max = 0                       # static history depth
         self._hist = None                     # carried config-index history
+        #: §16 safety-shield carry across batches: (lkg_idx (N, L) i32,
+        #: radius (N,) i32, streak (N,) i32, risk (N,) f32); None until the
+        #: first safe-mode batch packs it (or after a table re-index)
+        self._shield = None
+        self._idx0 = None                     # pre-batch indices (shield sync)
         #: double-buffer state: the not-yet-adopted device carry and the
         #: dispatched-but-not-materialised episode batches of this epoch
         self._carry = None
@@ -199,8 +204,11 @@ class DeviceEpisodeRunner:
         self._epoch_configs: Optional[list] = None
         self._epoch_t0 = 0.0
         self.last_wall_s = 0.0
-        from repro.monitoring.metrics import ChaosCounters
+        from repro.monitoring.metrics import ChaosCounters, ShieldCounters
         self.chaos = ChaosCounters()
+        #: one counter object per configurator — the host-loop twin feeds
+        #: the same instance, so serve/benchmark readers see one ledger
+        self.shield = getattr(cfgr, "shield_counters", None) or ShieldCounters()
         self.mesh = self._resolve_mesh()
 
     def _resolve_mesh(self):
@@ -258,7 +266,7 @@ class DeviceEpisodeRunner:
         the epoch mega-scan (``_epoch_program``, which composes the same
         body, one episode group per update, inside its K-update scan)."""
         (S, T, E, sel_cols, exploit, greedy, reward_mode, win_s,
-         pallas, ndev, slo_sig, R_max, has_ft) = skey
+         pallas, ndev, slo_sig, R_max, has_ft, shield) = skey
         from repro.engine.fleet_jax import (build_step_window,
                                             workload_rate_grid)
 
@@ -279,7 +287,7 @@ class DeviceEpisodeRunner:
         def program(params, key, config_idx, backlog, sfree, clock,
                     last_service, reconfigs, lo, hi, per_node, wl, f,
                     tabs, kind_code, n_valid, reboot_f, rejit_f, mc, emitF,
-                    ft, delays, hist):
+                    ft, delays, hist, *sh):
             TRACE_COUNTS[skey] = TRACE_COUNTS.get(skey, 0) + 1
             # decorrelate the per-shard RNG streams; the unsharded program
             # folds shard ordinal 0 so a 1-device mesh replays it exactly
@@ -295,7 +303,11 @@ class DeviceEpisodeRunner:
             def step(carry, t):
                 (config_idx, backlog, sfree, clock, last_service, reconfigs,
                  lo, hi, per_node) = carry[:9]
+                pos = 10 if R_max else 9
                 hist = carry[9] if R_max else None
+                if shield:
+                    lkg_idx, radius, streak, risk, budget_left = \
+                        carry[pos:pos + 5]
                 k = jax.random.fold_in(key, t)
                 k_act, k_load, k_win = jax.random.split(k, 3)
 
@@ -318,7 +330,27 @@ class DeviceEpisodeRunner:
                     axis=1).astype(jnp.float32)
 
                 # ---- act (policy forward + f-gated sampling / argmax) ----
-                a = _sample_actions(params, states, k_act, f, exploit, greedy)
+                if shield:
+                    # §16 trust-region mask: reallocate probability mass to
+                    # in-region moves BEFORE sampling (adds no RNG draws —
+                    # the shield-off trace stays bitwise the pre-shield
+                    # program); the hard clamp below is the guarantee. The
+                    # counterfactual UNMASKED pick (same key, so no extra
+                    # draws either) feeds the clamped_actions counter: a
+                    # diversion is a step where the unshielded policy would
+                    # have left the trust region
+                    mask = self._table.shield_mask(
+                        config_idx, lkg_idx, radius, ranked, xp=jnp,
+                        n_valid=n_valid, kind_code=kind_code)
+                    a_free = _sample_actions(params, states, k_act, f,
+                                             exploit, greedy)
+                    a = _sample_actions(params, states, k_act, f, exploit,
+                                        greedy, mask=mask)
+                    sh_diverted = ~jnp.take_along_axis(
+                        mask, a_free[:, None], axis=1)[:, 0]
+                else:
+                    a = _sample_actions(params, states, k_act, f, exploit,
+                                        greedy)
                 direction = 1 - 2 * (a % 2).astype(jnp.int32)
                 l_idx = ranked[a // 2]
 
@@ -329,7 +361,23 @@ class DeviceEpisodeRunner:
                 new_bin = self._table.step_index(
                     cur, l_idx, direction, xp=jnp, n_valid=n_valid,
                     kind_code=kind_code)
-                config_idx = config_idx.at[rows, l_idx].set(new_bin)
+                if shield:
+                    # hard trust-region clamp, then the risk/budget
+                    # fallback: a cluster whose carried breach risk crossed
+                    # the threshold (or whose episode budget is spent)
+                    # deploys its whole LKG row instead of the sampled move
+                    clamped = self._table.shield_clamp(
+                        new_bin, lkg_idx[rows, l_idx], radius, l_idx,
+                        xp=jnp, n_valid=n_valid, kind_code=kind_code)
+                    sh_clamped = sh_diverted | (clamped != new_bin)
+                    fallback = ((risk > jnp.float32(shield.risk_threshold))
+                                | (budget_left <= 0))
+                    stepped = config_idx.at[rows, l_idx].set(clamped)
+                    config_idx = jnp.where(fallback[:, None], lkg_idx,
+                                           stepped)
+                    new_bin = config_idx[rows, l_idx]
+                else:
+                    config_idx = config_idx.at[rows, l_idx].set(new_bin)
                 if R_max:
                     # §12 deploy latency: the engine runs the config each
                     # cluster requested `delays[i]` steps ago; the encoder
@@ -388,10 +436,21 @@ class DeviceEpisodeRunner:
                        "lever": l_idx, "bin": new_bin}
                 if slo_sig:
                     out["breach_frac"] = stats["breach_frac"]
+                if shield:
+                    (lkg_idx, radius, streak, risk, budget_left,
+                     budget_out) = shield_update(
+                        stats["breach_frac"], lkg_idx, config_idx, radius,
+                        streak, risk, budget_left, shield, xp=jnp)
+                    out["shield_clamped"] = sh_clamped
+                    out["shield_fallback"] = fallback
+                    out["budget_out"] = budget_out
                 carry = (config_idx, backlog, sfree, clock, last_service,
                          reconfigs, lo, hi, per_node)
                 if R_max:
                     carry = carry + (hist,)
+                if shield:
+                    carry = carry + (lkg_idx, radius, streak, risk,
+                                     budget_left)
                 return carry, out
 
             carry0 = (config_idx, backlog, sfree, clock, last_service,
@@ -402,14 +461,22 @@ class DeviceEpisodeRunner:
                 h0 = hist if hist is not None else jnp.broadcast_to(
                     config_idx[None], (R_max + 1,) + config_idx.shape)
                 carry0 = carry0 + (h0,)
+            if shield:
+                # per-episode breach budget: fresh at every episode start
+                # (chained passes and epoch updates alike), so the budget
+                # leaf is scan-ephemeral and dropped from the carry below
+                carry0 = carry0 + tuple(sh) + (
+                    jnp.full((N,), shield.breach_budget, jnp.int32),)
             carry, outs = jax.lax.scan(step, carry0, jnp.arange(S))
+            if shield:
+                carry = carry[:-1]
             # (S, N) -> (N, S): the episode axis leads, ready for the update
             outs = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), outs)
             return carry, outs
 
         return program
 
-    def _shard_wrap(self, fn, r_max: int):
+    def _shard_wrap(self, fn, r_max: int, shield: bool = False):
         """Wrap an episode closure in the fleet ``shard_map`` — specs come
         from ``fleet_episode_specs``, the ONE definition shared with the
         epoch mega-scan (whose shard_map sits inside its scan body)."""
@@ -417,7 +484,7 @@ class DeviceEpisodeRunner:
 
         from repro.distribution.sharding import fleet_episode_specs
 
-        in_specs, out_specs = fleet_episode_specs(self.mesh, r_max)
+        in_specs, out_specs = fleet_episode_specs(self.mesh, r_max, shield)
         return shard_map(fn, mesh=self.mesh, in_specs=in_specs,
                          out_specs=out_specs, check_rep=False)
 
@@ -425,11 +492,15 @@ class DeviceEpisodeRunner:
         if skey in self._programs:
             return self._programs[skey]
         program = self._episode_fn(skey, consts)
-        ndev, R_max = skey[9], skey[11]
+        ndev, R_max, shield = skey[9], skey[11], skey[13]
         # config_idx .. per_node (loop state) + the config-index history
+        # (+ the shield state leaves, which chain batch-to-batch just like
+        # the loop state and are re-fed from the returned carry)
         donate = tuple(range(2, 11)) + (22,)
+        if shield:
+            donate = donate + (23, 24, 25, 26)
         if ndev:
-            program = self._shard_wrap(program, R_max)
+            program = self._shard_wrap(program, R_max, bool(shield))
         prog = jax.jit(program, donate_argnums=donate)
         self._programs[skey] = prog
         return prog
@@ -449,21 +520,22 @@ class DeviceEpisodeRunner:
             return self._programs[ekey]
         _, skey, K, passes, rec_mode = ekey
         ndev, slo_sig, R_max = skey[9], skey[10], skey[11]
+        shield = skey[13]
         episode = self._episode_fn(skey, consts)
         if ndev:
             # shard_map wraps the episode body INSIDE the scan; the update
             # math stays plain (GSPMD), exactly like the sequential split
-            episode = self._shard_wrap(episode, R_max)
+            episode = self._shard_wrap(episode, R_max, bool(shield))
         upd = self.cfgr.agent._update_step
         slo_ms = float(self.cfgr.slo_ms)
 
         def epoch(params, opt_state, key, draws0, loop, hist, counts,
                   wl, f, tabs, kind_code, n_valid, reboot_f, rejit_f,
-                  mc, emitF, ft, delays):
+                  mc, emitF, ft, delays, sh):
             TRACE_COUNTS[ekey] = TRACE_COUNTS.get(ekey, 0) + 1
 
             def body(carry, k):
-                params, opt_state, loop, hist, counts = carry
+                params, opt_state, loop, hist, counts, sh = carry
                 groups = []
                 for p in range(passes):
                     kk = jax.random.fold_in(
@@ -471,9 +543,10 @@ class DeviceEpisodeRunner:
                     ep_carry, outs = episode(
                         params, kk, *loop, wl, f, tabs, kind_code,
                         n_valid, reboot_f, rejit_f, mc, emitF, ft,
-                        delays, hist)
+                        delays, hist, *(sh if shield else ()))
                     loop = tuple(ep_carry[:9])
                     hist = ep_carry[9] if R_max else None
+                    sh = tuple(ep_carry[-4:]) if shield else None
                     groups.append(outs)
                 if len(groups) == 1:
                     b = groups[0]
@@ -501,17 +574,23 @@ class DeviceEpisodeRunner:
                         y["breach_frac_sum"] = b["breach_frac"].sum()
                     elif slo_ms > 0.0:
                         y["breach_windows"] = (b["p99_ms"] > slo_ms).sum()
+                    if shield:
+                        y["shield_clamped"] = b["shield_clamped"].sum()
+                        y["shield_fallbacks"] = b["shield_fallback"].sum()
+                        y["budget_exhaustions"] = \
+                            b["budget_out"].any(axis=1).sum()
                     if rec_mode == "summary":
                         y["reward_mean"] = b["rewards"].mean(axis=1)
                         y["p99_mean"] = b["p99_ms"].mean(axis=1)
                         y["p99_last"] = b["p99_ms"][:, -1]
-                return (params, opt_state, loop, hist, counts), y
+                return (params, opt_state, loop, hist, counts, sh), y
 
-            carry = (params, opt_state, loop, hist, counts)
+            carry = (params, opt_state, loop, hist, counts, sh)
             carry, ys = jax.lax.scan(body, carry, jnp.arange(K))
             return carry, ys
 
-        prog = jax.jit(epoch, donate_argnums=(0, 1, 4, 5, 6))
+        donate = (0, 1, 4, 5, 6) + ((18,) if shield else ())
+        prog = jax.jit(epoch, donate_argnums=donate)
         self._programs[ekey] = prog
         return prog
 
@@ -649,7 +728,13 @@ class DeviceEpisodeRunner:
         greedy = not explore
 
         loop = self._fresh_inputs()
-        idx0 = None if records == "full" else np.asarray(loop[0])
+        sh_spec = getattr(cfgr, "shield", None)
+        sh = self._shield if sh_spec is not None else None
+        # shield runs ALSO need the pre-epoch indices in "full" mode: a
+        # fallback step reverts a whole row to LKG, which the per-lever
+        # record stream can't express — final configs re-sync from indices
+        idx0 = (None if records == "full" and sh_spec is None
+                else np.asarray(loop[0]))
         hist = self._hist
         if self._R_max and hist is None:
             # materialise the deploy-history ring host-side: the scan carry
@@ -676,19 +761,20 @@ class DeviceEpisodeRunner:
             skey = (S, T, E, self._sel_cols, exploit, greedy,
                     cfgr.reward_mode, float(cfgr.window_s), pallas,
                     self.mesh.size if self.mesh is not None else 0,
-                    slo_sig, self._R_max, self._ft_dev is not None)
+                    slo_sig, self._R_max, self._ft_dev is not None,
+                    sh_spec)
             prog = self._epoch_program(
                 ("epoch", skey, k_seg, passes, records), consts)
             EPOCH_DISPATCHES[0] += 1
             with warnings.catch_warnings():
                 warnings.filterwarnings(
                     "ignore", message="Some donated buffers")
-                (params, opt_state, loop, hist, counts), ys = prog(
+                (params, opt_state, loop, hist, counts, sh), ys = prog(
                     params, opt_state, key, jnp.uint32(draws0), loop,
                     hist, counts, self._wl_dev, jnp.float32(agent.f),
                     self._tabs, self._kind_code, self._n_valid,
                     self._reboot_f, self._rejit_f, self._mc_arg,
-                    self._emitF, self._ft_dev, self._delays)
+                    self._emitF, self._ft_dev, self._delays, sh)
             draws0 += k_seg * passes
             ys_segs.append((k_seg, ys))
         jax.block_until_ready((params, loop))
@@ -702,6 +788,9 @@ class DeviceEpisodeRunner:
         (config_idx_f, backlog_f, sfree_f, clock_f, last_service_f,
          reconfigs_f, lo_f, hi_f, per_node_f) = loop
         self._hist = hist
+        if sh_spec is not None:
+            self._shield = tuple(sh)
+            self.shield.trust_radius = float(np.asarray(sh[1]).mean())
         env._dev.adopt_loop_state(backlog_f, sfree_f, clock_f)
         env.reconfigs[:] = np.asarray(reconfigs_f, np.int64)
         env.last_service[:] = np.asarray(last_service_f, np.float64)
@@ -716,6 +805,14 @@ class DeviceEpisodeRunner:
         if records == "full":
             stats_list, recs = self._epoch_full(ys_segs, N, S, passes,
                                                 gen_s)
+            if sh_spec is not None:
+                touched = np.zeros((N, self._table.n_levers), bool)
+                rows = np.arange(N)[:, None]
+                for k_seg, ys in ys_segs:
+                    lv = np.asarray(ys["lever"]).reshape(k_seg * passes, N, S)
+                    for chunk in lv:
+                        touched[rows, chunk] = True
+                self._sync_configs(idx0, np.asarray(config_idx_f), touched)
         else:
             stats_list = self._epoch_summary(ys_segs, counts, idx0,
                                              config_idx_f, N, S, passes)
@@ -778,6 +875,12 @@ class DeviceEpisodeRunner:
             if "breach_frac_sum" in ys:
                 self.chaos.breach_frac_sum += float(
                     ys["breach_frac_sum"].sum())
+            if "shield_clamped" in ys:
+                self.shield.clamped_actions += int(
+                    ys["shield_clamped"].sum())
+                self.shield.fallbacks += int(ys["shield_fallbacks"].sum())
+                self.shield.budget_exhaustions += int(
+                    ys["budget_exhaustions"].sum())
             for i in range(k_seg):
                 st = {"pg_loss": float(ys["pg_loss"][i]),
                       "mean_return": float(ys["mean_return"][i]),
@@ -824,16 +927,28 @@ class DeviceEpisodeRunner:
         N = env.n_clusters
         S = cfgr.steps_per_episode
 
+        sh_spec = getattr(cfgr, "shield", None)
         if self._carry is None:
             args = self._fresh_inputs()
             hist = self._hist          # survives epochs while configs do
+            sh = tuple(self._shield) if sh_spec is not None else ()
+            if sh_spec is not None:
+                # pre-batch indices: a shield fallback reverts whole rows
+                # to LKG, so finalize re-syncs configs from index diffs
+                self._idx0 = np.asarray(args[0])
             self._epoch_t0 = time.perf_counter()
         else:
             # chained pass: everything per-cluster continues from the carry;
             # tables/workloads are the epoch's (binning frozen until the
             # finalize replay — the §11 double-buffer contract)
             args = tuple(self._carry[:9])
-            hist = self._carry[9] if len(self._carry) > 9 else None
+            pos = 9
+            hist = None
+            if self._R_max:
+                hist = self._carry[9]
+                pos = 10
+            sh = (tuple(self._carry[pos:pos + 4])
+                  if sh_spec is not None else ())
 
         T, E = self._tick_budget()
         exploit = cfgr.agent.exploit_ready(explore=explore)
@@ -845,7 +960,7 @@ class DeviceEpisodeRunner:
         skey = (S, T, E, self._sel_cols, exploit, greedy, cfgr.reward_mode,
                 float(cfgr.window_s), pallas,
                 self.mesh.size if self.mesh is not None else 0,
-                slo_sig, self._R_max, self._ft_dev is not None)
+                slo_sig, self._R_max, self._ft_dev is not None, sh_spec)
         prog = self._program(skey, {"cc_pairs": self._cc_pairs,
                                     "ranked_g": self._ranked_g})
 
@@ -858,7 +973,7 @@ class DeviceEpisodeRunner:
                 self._wl_dev, jnp.float32(cfgr.agent.f), self._tabs,
                 self._kind_code, self._n_valid, self._reboot_f,
                 self._rejit_f, self._mc_arg, self._emitF,
-                self._ft_dev, self._delays, hist)
+                self._ft_dev, self._delays, hist, *sh)
         self._carry = carry
         self._inflight.append({"outs": outs, "S": S})
         return {"states": outs["states"], "actions": outs["actions"],
@@ -931,7 +1046,19 @@ class DeviceEpisodeRunner:
         else:
             config_idx = jnp.asarray(table.index_configs(configs))
             self._hist = None   # stale config history can't be replayed
+            self._shield = None  # LKG indices refer to the old ladder
         self._bins_sig = sig
+        sh_spec = getattr(cfgr, "shield", None)
+        if sh_spec is not None and self._shield is None:
+            # fresh shield state: LKG = the current (pre-exploration)
+            # config, full initial trust radius, clean streak/risk. The
+            # `+ 0` copy keeps the LKG buffer distinct from the donated
+            # config_idx argument.
+            n = config_idx.shape[0]
+            self._shield = (config_idx + 0,
+                            jnp.full((n,), sh_spec.trust_radius, jnp.int32),
+                            jnp.zeros((n,), jnp.int32),
+                            jnp.zeros((n,), jnp.float32))
 
         self._sel_cols = tuple(env.metric_names.index(m)
                                for m in cfgr.hspec.metric_names)
@@ -961,6 +1088,9 @@ class DeviceEpisodeRunner:
                 self._ft_dev = jax.device_put(self._ft_dev, shd)
             if self._delays is not None:
                 self._delays = jax.device_put(self._delays, shd)
+            if self._shield is not None:
+                self._shield = tuple(jax.device_put(x, shd)
+                                     for x in self._shield)
             if self._mc_arg is None:
                 self._mc_arg = jax.device_put(dev._mc_dev, shd)
         else:
@@ -1003,7 +1133,16 @@ class DeviceEpisodeRunner:
         # ---- hand the queueing state back to the engine -------------------
         (config_idx_f, backlog_f, sfree_f, clock_f, last_service_f,
          reconfigs_f, lo_f, hi_f, per_node_f) = carry[:9]
-        self._hist = carry[9] if len(carry) > 9 else None
+        pos = 9
+        self._hist = None
+        if self._R_max:
+            self._hist = carry[9]
+            pos = 10
+        sh_spec = getattr(cfgr, "shield", None)
+        if sh_spec is not None:
+            self._shield = tuple(carry[pos:pos + 4])
+            self.shield.trust_radius = float(
+                np.asarray(self._shield[1]).mean())
         env._dev.adopt_loop_state(backlog_f, sfree_f, clock_f)
         env.reconfigs[:] = np.asarray(reconfigs_f, np.int64)
         env.last_service[:] = np.asarray(last_service_f, np.float64)
@@ -1021,8 +1160,47 @@ class DeviceEpisodeRunner:
             configs = self._materialise(entry, configs, records, gen_s)
         env.configs = configs
         env.invalidate()
+        if sh_spec is not None:
+            N = env.n_clusters
+            touched = np.zeros((N, self._table.n_levers), bool)
+            rows = np.arange(N)[:, None]
+            for entry in inflight:
+                touched[rows, np.asarray(entry["outs"]["lever"])] = True
+            self._sync_configs(self._idx0, np.asarray(config_idx_f),
+                               touched)
         cfgr._last_fleet_windows = None   # host-loop cache is stale now
         return records
+
+    def _sync_configs(self, idx0: np.ndarray, idx_f: np.ndarray,
+                      touched: np.ndarray | None = None) -> None:
+        """Exact final config dicts under the shield: a fallback step
+        reverts a cluster's WHOLE row to LKG, which the per-lever
+        ``StepRecord`` stream cannot express (a record's config dict shows
+        the recorded lever only on such steps). The authoritative final
+        state is the device index array — rebuild ``env.configs`` from its
+        diff against the pre-batch indices, the ``_epoch_summary`` decode.
+
+        ``touched`` (N, L bool) marks levers the batch's action stream
+        visited: those are re-decoded even when they returned to their
+        initial bin (idx_f == idx0), because the record path decodes every
+        visited bin and a neutral shield must replay shield-off configs
+        bit for bit — the stored default value of an untouched lever need
+        not be a bin-decoded value."""
+        table = self._table
+        names = table.names
+        configs = [dict(c) for c in self._epoch_configs]
+        stale = idx_f != idx0
+        if touched is not None:
+            stale = stale | touched
+        val_cache: dict = {}
+        for ci, li in zip(*np.nonzero(stale)):
+            kv = (int(li), int(idx_f[ci, li]))
+            val = val_cache.get(kv)
+            if val is None:
+                val = val_cache[kv] = table.value_of(*kv)
+            configs[ci][names[li]] = val
+        self.env.configs = configs
+        self.env.invalidate()
 
     def _materialise(self, entry: dict, configs: list, records: list,
                      gen_s: float) -> list:
@@ -1043,6 +1221,14 @@ class DeviceEpisodeRunner:
             rewards_a, p99_a,
             np.asarray(outs["breach_frac"]) if "breach_frac" in outs else None,
             slo_ms=self.cfgr.slo_ms)
+        if "shield_fallback" in outs:
+            self.shield.clamped_actions += int(
+                np.asarray(outs["shield_clamped"]).sum())
+            self.shield.fallbacks += int(
+                np.asarray(outs["shield_fallback"]).sum())
+            # one exhaustion per (cluster, episode) whose budget ran dry
+            self.shield.budget_exhaustions += int(
+                np.asarray(outs["budget_out"]).any(axis=1).sum())
         rewards = rewards_a.tolist()
         p99 = p99_a.tolist()
         clock_s = np.asarray(outs["clock_s"]).tolist()

@@ -486,3 +486,110 @@ class DeviceLeverTable:
                                                np.asarray(lever_idx),
                                                np.asarray(direction))
         return new
+
+    # ------------------------------------------------------------------ shield
+    def shield_clamp(self, new_bin, lkg_bin, radius, lever_idx, *, xp=np,
+                     n_valid=None, kind_code=None):
+        """Trust-region clamp over the bin lattice (DESIGN.md §16): confine
+        ``new_bin`` to ±``radius`` bins around the last-known-good index
+        ``lkg_bin``, intersected with the lever's valid ladder
+        ``[0, n_valid - 1]``. The result is ALWAYS a valid ladder index —
+        the region bounds are themselves clipped to the ladder before the
+        clamp, so even an out-of-ladder ``new_bin`` (or an LKG stranded
+        outside a freshly contracted region) lands inside.
+
+        All three kind codes go through the same interval clamp: TOGGLE
+        levers (2 bins) are free at any ``radius >= 1`` and pinned to LKG at
+        ``radius == 0``; WRAP levers are clamped in plain index space — a
+        wrap-around move at the region edge is blocked, which is the
+        conservative choice for a safety shield. Shapes broadcast; ``xp``
+        selects the namespace exactly like ``step_index`` (the fused episode
+        program traces this with ``xp=jnp``, the host-loop oracle twin calls
+        it with numpy — one implementation, repack-safe because it reads the
+        ladder widths through ``n_valid`` like every other table op)."""
+        nv = (self.n_valid if n_valid is None else n_valid)[lever_idx]
+        lo = xp.clip(lkg_bin - radius, 0, nv - 1)
+        hi = xp.clip(lkg_bin + radius, 0, nv - 1)
+        return xp.clip(new_bin, lo, hi)
+
+    def shield_mask(self, config_idx, lkg_idx, radius, ranked, *, xp=np,
+                    n_valid=None, kind_code=None):
+        """(N, 2·len(ranked)) bool action mask for the §16 safety shield:
+        entry ``2j`` allows ranked lever j's +1 move, ``2j+1`` its -1 move —
+        the action encoding ``ReinforceAgent.action_decode`` uses. A move is
+        allowed when its ``step_index`` result already lies inside the
+        trust region ``[lkg - radius, lkg + radius]`` (ladder-clipped), so
+        the policy's probability mass reallocates to moves the hard
+        ``shield_clamp`` would leave untouched. A no-op move (a WRAP lever
+        blocked at the region edge still *steps*, a CLIP lever at the ladder
+        end doesn't) can be masked or not — the clamp downstream is the
+        guarantee, the mask is the distribution shaper."""
+        ranked = xp.asarray(ranked)
+        nv = (self.n_valid if n_valid is None else n_valid)[ranked]
+        cur = config_idx[:, ranked]
+        lkg = lkg_idx[:, ranked]
+        r = radius[:, None]
+        lo = xp.clip(lkg - r, 0, nv - 1)
+        hi = xp.clip(lkg + r, 0, nv - 1)
+        cand_p = self.step_index(cur, ranked, 1, xp=xp, n_valid=n_valid,
+                                 kind_code=kind_code)
+        cand_m = self.step_index(cur, ranked, -1, xp=xp, n_valid=n_valid,
+                                 kind_code=kind_code)
+        ok_p = (cand_p >= lo) & (cand_p <= hi)
+        ok_m = (cand_m >= lo) & (cand_m <= hi)
+        return xp.stack([ok_p, ok_m], axis=-1).reshape(cur.shape[0], -1)
+
+
+# --------------------------------------------------------------------- shield
+@dataclass(frozen=True)
+class ShieldSpec:
+    """Static hyper-parameters of the §16 SLO safety shield. Frozen (and so
+    hashable): the fused device loop bakes the whole spec into its static
+    program key — changing any field recompiles, which is the right cost
+    model for knobs that alter the traced arithmetic.
+
+    The shield state itself is four per-cluster arrays carried through the
+    episode scan (and across batches): the last-known-good config indices
+    ``lkg`` (N, L), the trust radius ``radius`` (N,), the breach-free streak
+    ``streak`` (N,) and the breach-risk EWMA ``risk`` (N,). The per-episode
+    breach budget is ephemeral — reset to ``breach_budget`` at every episode
+    start inside the program."""
+
+    trust_radius: int = 2      # initial ±bins around LKG
+    radius_min: int = 1        # contraction floor (0 pins to LKG outright)
+    radius_max: int = 8        # conservative-expansion ceiling
+    expand_every: int = 2      # breach-free windows per +1 radius
+    risk_alpha: float = 0.5    # breach-risk EWMA weight on the new window
+    risk_threshold: float = 0.5  # risk above this forces fallback-to-LKG
+    breach_budget: int = 4     # breached windows tolerated per episode
+
+
+def shield_update(breach_frac, lkg_idx, config_idx, radius, streak, risk,
+                  budget_left, spec: ShieldSpec, *, xp=np):
+    """The post-window shield carry update (DESIGN.md §16) — ONE
+    implementation traced into the fused episode scan (``xp=jnp``) and run
+    by the host-loop numpy twin. Per cluster:
+
+    * ``risk`` <- EWMA of the window's in-trace breach fraction;
+    * ``budget_left`` decrements on a breached window; exhaustion
+      (``budget_out``) freezes radius expansion and (via the caller's
+      fallback test) pins the cluster to LKG for the episode's remainder;
+    * breached windows HALVE the trust radius (floored at ``radius_min``)
+      and zero the breach-free streak; ``expand_every`` consecutive clean
+      windows widen it by one bin (capped at ``radius_max``);
+    * a clean window promotes the CURRENT config to last-known-good.
+
+    Returns ``(lkg_idx, radius, streak, risk, budget_left, budget_out)``."""
+    alpha = xp.asarray(spec.risk_alpha, xp.float32)
+    breached = breach_frac > 0.0
+    risk = (1.0 - alpha) * risk + alpha * breach_frac
+    budget_left = budget_left - xp.where(breached, 1, 0)
+    budget_out = budget_left <= 0
+    streak2 = streak + 1
+    expand = (~breached) & (streak2 >= spec.expand_every) & (~budget_out)
+    radius = xp.where(breached, xp.maximum(radius // 2, spec.radius_min),
+                      xp.where(expand, xp.minimum(radius + 1,
+                                                  spec.radius_max), radius))
+    streak = xp.where(breached | expand, 0, streak2)
+    lkg_idx = xp.where(breached[:, None], lkg_idx, config_idx)
+    return lkg_idx, radius, streak, risk, budget_left, budget_out

@@ -55,14 +55,27 @@ policy_probs_batch = jax.jit(jax.vmap(policy_probs, in_axes=(None, 0)))
 
 def _sample_actions(params: PyTree, states: jnp.ndarray, key: jax.Array,
                     f: jnp.ndarray, exploit: bool,
-                    greedy: bool = False) -> jnp.ndarray:
+                    greedy: bool = False, mask=None) -> jnp.ndarray:
     """Traceable core of ``sample_actions_device`` — also composed un-jitted
     into the fused episode program (repro.core.device_loop), where it is one
     stage of the per-step scan body rather than its own dispatch.
     ``greedy`` short-circuits to the argmax action (explore=False contract of
     the device training loop: deterministic, RNG-free, exactly replayable
-    against the host oracle)."""
+    against the host oracle).
+
+    ``mask`` (optional, bool (N, n_actions), True = allowed) is the §16
+    safety-shield trust-region action mask: disallowed actions' logits drop
+    to -1e9 before sampling (and before the greedy argmax), so probability
+    mass reallocates to in-region moves instead of being wasted on moves the
+    shield would clamp anyway. ``mask=None`` (the default) traces the exact
+    pre-shield program — the shield-off bitwise pins depend on that. An
+    all-masked row degenerates to a uniform draw over equal -1e9 logits;
+    the shield's hard clamp downstream still confines the result. The
+    update program deliberately stays unmasked: the shield is part of the
+    environment as far as REINFORCE is concerned (DESIGN.md §16)."""
     logits = jax.vmap(lambda s: policy_logits(params, s))(states)
+    if mask is not None:
+        logits = jnp.where(mask, logits, jnp.float32(-1e9))
     if greedy:
         return jnp.argmax(logits, axis=-1)
     k_full, k_sub, k_gate = jax.random.split(key, 3)
@@ -242,16 +255,27 @@ class ReinforceAgent:
         return int(self._rng.choice(self.n_actions, p=probs))
 
     def act_batch(self, states: np.ndarray, *, explore: bool = True,
-                  greedy: bool = False) -> np.ndarray:
+                  greedy: bool = False, mask=None) -> np.ndarray:
         """Sample one action per fleet cluster from (N, state_dim) states.
 
         The policy forward pass is a single vmapped dispatch
         (``policy_probs_batch``); the f-exploitation gate and the categorical
         draw are vectorised inverse-CDF sampling, so a fleet step costs one
         network evaluation instead of N (Algorithm 1's episode batch runs as
-        N parallel episodes — see Configurator.run_fleet_episodes)."""
+        N parallel episodes — see Configurator.run_fleet_episodes).
+
+        ``mask`` (bool (N, n_actions), True = allowed) is the §16 shield's
+        trust-region action mask — the host twin of ``_sample_actions``'s
+        masked logits: disallowed actions get zero probability and the rest
+        renormalise; an all-masked row degenerates to uniform (the hard
+        clamp downstream confines it regardless)."""
         states = np.asarray(states, np.float32)
         probs = np.asarray(policy_probs_batch(self.params, jnp.asarray(states)))
+        if mask is not None:
+            probs = np.where(mask, probs, 0.0)
+            s = probs.sum(axis=1, keepdims=True)
+            probs = np.where(s > 0.0, probs / np.maximum(s, 1e-12),
+                             1.0 / probs.shape[1])
         probs = probs / probs.sum(axis=1, keepdims=True)
         if greedy:  # deterministic argmax (device-loop replay contract)
             return np.argmax(probs, axis=1).astype(np.int64)
@@ -272,18 +296,19 @@ class ReinforceAgent:
         return np.where(gate, sub_a, full_a).astype(np.int64)
 
     def act_batch_device(self, states, *, explore: bool = True,
-                         greedy: bool = False) -> jnp.ndarray:
+                         greedy: bool = False, mask=None) -> jnp.ndarray:
         """``act_batch`` as one fused device program (threefry counter key):
         forward pass, f-exploitation gate and categorical draws never leave
         the device — the acting half of the device-resident episode step
-        (Configurator.run_fleet_episodes over a jax/pallas FleetEnv)."""
+        (Configurator.run_fleet_episodes over a jax/pallas FleetEnv).
+        ``mask`` rides into the traced masked sampling (§16 shield)."""
         key = jax.random.fold_in(self._act_key, self._act_draws)
         self._act_draws += 1
         exploit = self.exploit_ready(explore=explore)
-        return sample_actions_device(self.params,
-                                     jnp.asarray(states, jnp.float32), key,
-                                     jnp.float32(self.f), exploit,
-                                     greedy=greedy)
+        return sample_actions_device(
+            self.params, jnp.asarray(states, jnp.float32), key,
+            jnp.float32(self.f), exploit, greedy=greedy,
+            mask=None if mask is None else jnp.asarray(mask))
 
     def exploit_ready(self, *, explore: bool = True) -> bool:
         """The f-gate warm-up state the fused episode program bakes in as a

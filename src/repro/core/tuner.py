@@ -69,6 +69,11 @@ class AutoTuner:
         self.selection: Optional[msel.SelectionResult] = None
         self.configurator: Optional[Configurator] = None
         self._rng = np.random.default_rng(seed)
+        #: §2.1 guard bookkeeping: windows where 8 straight proposals were
+        #: guard-rejected and the sweep fell back to the cluster's
+        #: last-known-good config (was a silent retry loop before §16 —
+        #: a sweep that stalls at a lattice corner now shows up here)
+        self.guard_exhausted = 0
 
     # -- §2.1 training-data generation ---------------------------------------
     def collect(self, n_windows: int, *, perturb_every: int = 1,
@@ -108,6 +113,12 @@ class AutoTuner:
                     if not guard or self._runnable(proposal):
                         config = proposal
                         break
+                else:
+                    # 8 straight rejections: fall back to the last-known-
+                    # good config for this window (config is already the
+                    # last accepted one) and COUNT it — the silent retry
+                    # loop used to hide a sweep stalled at a lattice corner
+                    self.guard_exhausted += 1
                 self.env.apply_config(config)
                 stab = self.env.stabilisation_time()
                 if stab > 0:  # paper §2.2: the 4-min sample average is taken
@@ -204,6 +215,9 @@ class AutoTuner:
                             cand[i] = configs[i]
                             still.append(i)
                     pending = still
+                # clusters still pending after 8 tries observe this window
+                # under their last-known-good config — counted, not silent
+                self.guard_exhausted += len(pending)
                 env.apply_configs(configs, changed_levers=changed)
                 new_sig = bins_sig()
                 if new_sig != sig:  # split/extend/merge happened: re-pack
@@ -349,6 +363,7 @@ class AutoTuner:
             "n_factors": self.selection.n_factors if self.selection else None,
             "k": self.selection.k if self.selection else None,
             "reduction": self.selection.reduction if self.selection else None,
+            "guard_exhausted": self.guard_exhausted,
         }
         Path(path).write_text(json.dumps(out, indent=2))
 

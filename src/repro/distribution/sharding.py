@@ -76,7 +76,8 @@ def fleet_sharding(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P(FLEET_AXIS))
 
 
-def fleet_episode_specs(mesh: Mesh, r_max: int) -> tuple[tuple, tuple]:
+def fleet_episode_specs(mesh: Mesh, r_max: int,
+                        shield: bool = False) -> tuple[tuple, tuple]:
     """``shard_map`` in/out specs for the fused episode program
     (``repro.core.device_loop``) — ONE definition shared by the per-update
     program and the epoch mega-scan, which wraps the same episode body
@@ -86,14 +87,18 @@ def fleet_episode_specs(mesh: Mesh, r_max: int) -> tuple[tuple, tuple]:
     emission factors, fault table and deploy lags sharded on the cluster
     axis; the heat-map range ``lo/hi``, lever tables and scalars
     replicated; the deploy-history ring sharded on its cluster dim.
-    ``r_max`` > 0 appends the history ring to the carry outputs."""
+    ``r_max`` > 0 appends the history ring to the carry outputs;
+    ``shield`` appends the §16 safety-shield state (LKG indices, trust
+    radius, streak, risk — all leading-axis per-cluster) to both the inputs
+    and the carry outputs."""
     ax = mesh.axis_names[0]
     pf, pr = P(ax), P()
     ph = P(None, ax)                    # (R+1, N, L) history ring
+    psh = (pf,) * 4 if shield else ()   # lkg (N, L), radius/streak/risk (N,)
     in_specs = (pr, pr) + (pf,) * 6 + (pr, pr) + (pf, pf) \
-        + (pr,) * 6 + (pf, pf) + (pf, pf, ph)
+        + (pr,) * 6 + (pf, pf) + (pf, pf, ph) + psh
     out_specs = ((pf,) * 6 + (pr, pr, pf)
-                 + ((ph,) if r_max else ()), pf)
+                 + ((ph,) if r_max else ()) + psh, pf)
     return in_specs, out_specs
 
 

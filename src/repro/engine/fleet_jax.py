@@ -901,7 +901,11 @@ def build_step_window(core, sel_cols: tuple, T: int, E: int,
     slow factor (jax path) or ride the kernel's ``fmult`` operand (pallas).
     ``slo_ms > 0`` adds ``stats["breach_frac"]``: the wmask-weighted
     fraction of window ticks whose analytic per-tick mean latency exceeds
-    the SLO — the breach-duration term of the ``reward="slo"`` mode.
+    the SLO — the breach-duration term of the ``reward="slo"`` mode, and
+    since §16 also the safety shield's in-scan breach signal: the fused
+    episode loop feeds each window's ``breach_frac`` row straight into
+    ``shield_update`` (risk EWMA, trust-radius schedule, breach-budget
+    decrement) without ever leaving the device.
     """
     from repro.kernels.fleet_tick import pack_tick_consts, window_recurrence
 

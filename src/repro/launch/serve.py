@@ -71,6 +71,17 @@ def main(argv=None):
     ap.add_argument("--canary-pairs", type=int, default=2,
                     help="matched challenger/incumbent replica pairs")
     ap.add_argument("--live", type=int, default=2, help="live fleet size")
+    ap.add_argument("--safe", action="store_true",
+                    help="safe exploration (DESIGN.md §16): the shadow "
+                         "fleet trains under the trust-region shield; a "
+                         "breach-budget exhaustion demotes the queued "
+                         "challenger immediately")
+    ap.add_argument("--trust-radius", type=int, default=2,
+                    help="--safe: initial ±bin trust radius around the "
+                         "last-known-good config")
+    ap.add_argument("--breach-budget", type=int, default=4,
+                    help="--safe: per-episode SLO-breach budget per shadow "
+                         "cluster")
     ap.add_argument("--collect", type=int, default=400,
                     help="offline collect windows (ignored with --quick)")
     ap.add_argument("--seed", type=int, default=0)
@@ -93,6 +104,8 @@ def main(argv=None):
               k_promote=args.k_promote, margin=args.margin,
               canary_pairs=args.canary_pairs, n_live=args.live,
               device_loop=args.device_loop, checkpoint_dir=out / "ck",
+              safe=args.safe, trust_radius=args.trust_radius,
+              breach_budget=args.breach_budget,
               history_path=out / "history.jsonl")
     if args.quick:
         ctl = ServeController(workloads, metrics=QUICK_METRICS,
@@ -117,6 +130,16 @@ def main(argv=None):
     reason = ctl.cfgr.device_loop_reason()
     print("[serve] fused device loop (§10): "
           + ("ACTIVE" if reason is None else f"off — {reason}"))
+    if args.safe:
+        print(f"[serve] safe exploration (§16): shield ACTIVE — trust "
+              f"radius ±{args.trust_radius} bins, breach budget "
+              f"{args.breach_budget}/episode")
+
+    def metrics_text():
+        text = ctl.counters.prometheus_text()
+        if args.safe:
+            text += ctl.cfgr.shield_counters.prometheus_text()
+        return text
 
     def cb(s):
         print(f"[cycle {s['cycle']:>3}] {s['decision']:<8} "
@@ -128,7 +151,7 @@ def main(argv=None):
     # SIGTERM/Ctrl-C unwind through the guard: the final metrics dump is
     # always written (the same guard launch/tune.py uses)
     try:
-        with flush_guard(out / "metrics.prom", ctl.counters.prometheus_text):
+        with flush_guard(out / "metrics.prom", metrics_text):
             ctl.run(args.cycles, callback=cb)
     except KeyboardInterrupt:
         print(f"[interrupted] final metrics dump at {out}/metrics.prom")

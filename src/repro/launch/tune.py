@@ -51,6 +51,18 @@ def main(argv=None):
                          "breach-duration term")
     ap.add_argument("--slo-ms", type=float, default=1000.0,
                     help="latency SLO for --reward slo (ms)")
+    ap.add_argument("--safe", action="store_true",
+                    help="safe exploration (DESIGN.md §16): trust-region "
+                         "shield over the lever lattice + breach-risk "
+                         "fallback to last-known-good configs (needs "
+                         "--reward slo)")
+    ap.add_argument("--trust-radius", type=int, default=2,
+                    help="--safe: initial ±bin trust radius around the "
+                         "last-known-good config")
+    ap.add_argument("--breach-budget", type=int, default=4,
+                    help="--safe: per-episode SLO-breach budget per cluster; "
+                         "exhaustion pins the cluster to last-known-good "
+                         "for the rest of the episode")
     ap.add_argument("--collect", type=int, default=1200)
     ap.add_argument("--updates", type=int, default=8)
     ap.add_argument("--steps-per-episode", type=int, default=5)
@@ -116,11 +128,21 @@ def main(argv=None):
         base_p99 = env.observe(window).p99_ms
         steps_per_update = args.steps_per_episode * args.episodes
     print(f"[tune] default p99 = {base_p99:.0f} ms")
+    if args.safe and args.reward != "slo":
+        raise SystemExit("--safe needs --reward slo (the shield's breach "
+                         "signal is the in-trace window breach fraction)")
     cfgr = tuner.build_configurator(
         steps_per_episode=args.steps_per_episode,
         episodes_per_update=args.episodes, window_s=window, f_exploit=args.f,
         device_loop=args.device_loop, reward_mode=args.reward,
-        slo_ms=args.slo_ms)
+        slo_ms=args.slo_ms, safe=args.safe,
+        shield_kw=(dict(trust_radius=args.trust_radius,
+                        breach_budget=args.breach_budget)
+                   if args.safe else None))
+    if args.safe:
+        print(f"[tune] safe exploration (§16): shield ACTIVE — trust radius "
+              f"±{args.trust_radius} bins, breach budget "
+              f"{args.breach_budget}/episode")
     reason = cfgr.device_loop_reason()
     if args.device_loop == "on" and reason is not None:
         # fail BEFORE the tuning loop starts, with the supported() reason —
@@ -153,7 +175,10 @@ def main(argv=None):
     def metrics_text():
         runner = cfgr._runner
         chaos = runner.chaos if runner is not None else ChaosCounters()
-        return chaos.prometheus_text()
+        text = chaos.prometheus_text()
+        if args.safe:
+            text += cfgr.shield_counters.prometheus_text()
+        return text
 
     # the guard (shared with launch/serve.py) remaps SIGTERM to
     # KeyboardInterrupt and writes the dump in its finally — a Ctrl-C'd or

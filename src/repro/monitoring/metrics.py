@@ -218,10 +218,46 @@ class ChaosCounters:
         return _prometheus_text(prefix, self.as_dict(), _CHAOS_COUNTER_KEYS)
 
 
+@dataclass
+class ShieldCounters:
+    """Safe-exploration shield bookkeeping (DESIGN.md §16).
+
+    Counters (monotone): ``clamped_actions`` — sampled bin moves that the
+    trust-region clamp pulled back inside the ±R window around the
+    last-known-good config; ``fallbacks`` — steps where a cluster's whole
+    config row was reverted to LKG (risk over threshold or breach budget
+    exhausted); ``budget_exhaustions`` — episodes in which a cluster ran
+    its per-episode breach budget to zero. Gauge: ``trust_radius`` — the
+    fleet-mean trust radius R after the most recent episode batch, the
+    live width of the exploration corridor."""
+
+    clamped_actions: int = 0
+    fallbacks: int = 0
+    budget_exhaustions: int = 0
+    trust_radius: float = 0.0
+
+    def as_dict(self) -> dict:
+        return {f: getattr(self, f) for f in self.__dataclass_fields__}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ShieldCounters":
+        c = cls()
+        for f in cls.__dataclass_fields__:
+            if f in d:
+                setattr(c, f, type(getattr(c, f))(d[f]))
+        return c
+
+    def prometheus_text(self, prefix: str = "repro_shield") -> str:
+        return _prometheus_text(prefix, self.as_dict(), _SHIELD_COUNTER_KEYS)
+
+
 #: which ChaosCounters fields render as monotonically-increasing counters
 #: (``_total`` suffix) vs gauges in the text exposition
 _CHAOS_COUNTER_KEYS = frozenset(
     {"windows", "breached_windows", "fault_events"})
+
+_SHIELD_COUNTER_KEYS = frozenset(
+    {"clamped_actions", "fallbacks", "budget_exhaustions"})
 
 _SERVE_COUNTER_KEYS = frozenset(
     {"cycles", "shadow_windows", "canary_windows", "canary_breached",

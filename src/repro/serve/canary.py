@@ -83,6 +83,21 @@ class CanaryGate:
         self.log.append({**entry, "event": "hold", "streak": self.streak})
         return "hold"
 
+    def force_demote(self, *, cycle: int, reason: str = "") -> None:
+        """Clear the challenger WITHOUT a canary evaluation — the §16
+        breach-budget trip: the shadow fleet ran its per-episode breach
+        budget to zero while this challenger was queued, so the controller
+        demotes it on the spot rather than spend a canary cycle on a
+        candidate surfaced by an exploration phase that was breaching.
+        Logged as a ``demote`` so the ``demote_cooldown`` blocklist
+        applies to the config as usual."""
+        assert self.challenger is not None, "no challenger under canary"
+        self.log.append({"cycle": cycle, "event": "demote",
+                         "config": dict(self.challenger),
+                         "cand_reward": None, "inc_reward": None,
+                         "reason": reason or "breach_budget"})
+        self._clear()
+
     def _clear(self) -> None:
         self.challenger = None
         self.streak = 0

@@ -85,6 +85,10 @@ class ServeController:
         mesh="auto",
         epoch_k: int = 1,
         bin_kw: Optional[dict] = None,
+        safe: bool = False,
+        trust_radius: int = 2,
+        breach_budget: int = 4,
+        shield_kw: Optional[dict] = None,
         checkpoint_dir=None,
         checkpoint_keep: int = 3,
         history_path=None,
@@ -120,6 +124,18 @@ class ServeController:
             seeds=[seed + 211 + i for i in range(int(n_live))],
             backend=backend)
 
+        # safe exploration (DESIGN.md §16): the shadow Configurator runs
+        # its fused loop under the trust-region shield; the controller
+        # additionally watches the per-episode breach budget — an
+        # exhaustion demotes whatever is queued for canary on the spot
+        # and contracts the trust region to its floor
+        skw = dict(shield_kw or {})
+        if safe:
+            skw.setdefault("trust_radius", int(trust_radius))
+            skw.setdefault("breach_budget", int(breach_budget))
+        self.safe = bool(safe)
+        self._budget_seen = 0
+
         self.cfgr = Configurator(
             self.shadow_env, list(metrics), list(levers),
             f_exploit=f_exploit, steps_per_episode=steps_per_episode,
@@ -127,7 +143,8 @@ class ServeController:
                                  if episodes_per_update is not None else n),
             window_s=self.window_s, reward_mode=reward_mode, slo_ms=slo_ms,
             slo_hinge_w=slo_hinge_w, slo_breach_w=slo_breach_w, seed=seed,
-            bin_kw=bin_kw, device_loop=device_loop, mesh=mesh)
+            bin_kw=bin_kw, device_loop=device_loop, mesh=mesh,
+            safe=safe, shield_kw=skw if safe else None)
 
         base = self.live_env.current_configs()[0]
         if incumbent:
@@ -183,8 +200,24 @@ class ServeController:
         if self.gate.challenger is None and recs:
             self._adopt_challenger(recs)
 
+        # ---- §16 breach-budget trip: shadow exhausted its per-episode
+        # breach budget this cycle → demote the queued challenger without
+        # spending a canary cycle on it, and contract the shield's trust
+        # region to its floor (expansion re-earned by clean windows)
+        budget_tripped = False
+        if self.safe:
+            bx = self.cfgr.shield_counters.budget_exhaustions
+            budget_tripped = bx > self._budget_seen
+            self._budget_seen = bx
+            if budget_tripped:
+                self.cfgr.contract_shield()
+                if self.gate.challenger is not None:
+                    self.gate.force_demote(cycle=self.cycle,
+                                           reason="breach_budget")
+                    c.inc("demotions")
+
         # ---- canary: paired challenger-vs-incumbent evaluation ------------
-        decision = "shadow"
+        decision = "budget_demote" if budget_tripped else "shadow"
         cand_r = inc_r = None
         if self.gate.challenger is not None:
             challenger = dict(self.gate.challenger)
@@ -482,6 +515,18 @@ class ServeController:
                 "config_idx": (np.asarray(runner._config_idx) if has_runner
                                else np.zeros((), np.int32))},
         }
+        if self.cfgr.shield is not None:
+            # shield carry rides the same placeholder pattern; the keys are
+            # only present under safe=True, so safe-off checkpoints stay
+            # byte-identical to pre-§16 ones
+            sh = runner._shield if runner is not None else None
+            z32 = np.zeros((), np.int32)
+            tree["runner"].update(
+                shield_lkg=np.asarray(sh[0]) if sh is not None else z32,
+                shield_radius=np.asarray(sh[1]) if sh is not None else z32,
+                shield_streak=np.asarray(sh[2]) if sh is not None else z32,
+                shield_risk=(np.asarray(sh[3]) if sh is not None
+                             else np.zeros((), np.float32)))
         return tree
 
     def _dev_extra(self, env) -> Optional[dict]:
@@ -522,8 +567,14 @@ class ServeController:
             "bins_meta": bins_meta,
             "runner": {"has": bool(has_runner),
                        "hw_T": int(runner._hw_T) if runner else 0,
-                       "hw_B": int(runner._hw_B) if runner else 0},
+                       "hw_B": int(runner._hw_B) if runner else 0,
+                       "shield": bool(runner is not None
+                                      and runner._shield is not None)},
         }
+        if self.cfgr.shield is not None:
+            extra["shield"] = {
+                "budget_seen": int(self._budget_seen),
+                "counters": _jsonable(self.cfgr.shield_counters.as_dict())}
         if runner is not None:
             ch = runner.chaos
             extra["chaos"] = {
@@ -550,8 +601,16 @@ class ServeController:
         streams derive from them). Returns the restored cycle number."""
         store = store if store is not None else self.store
         assert store is not None, "no checkpoint store"
-        tree, step, x = store.restore(self._state_tree(), step=step,
-                                      host=True)
+        skel = self._state_tree()
+        if (self.cfgr.shield is not None
+                and "runner/shield_lkg" not in store.leaf_keys(step)):
+            # the checkpoint predates §16 or was taken with safe=False:
+            # restore everything else and leave the shield at its fresh
+            # init (LKG seeds from the restored config on the next batch)
+            for k in ("shield_lkg", "shield_radius",
+                      "shield_streak", "shield_risk"):
+                skel["runner"].pop(k, None)
+        tree, step, x = store.restore(skel, step=step, host=True)
 
         ag = self.cfgr.agent
         ag.params = jax.tree.map(jnp.asarray, tree["agent"]["params"])
@@ -613,4 +672,22 @@ class ServeController:
             if ch:
                 for k, v in ch.items():
                     setattr(runner.chaos, k, v)
+            if x["runner"].get("shield"):
+                runner._shield = (
+                    jnp.asarray(np.asarray(tree["runner"]["shield_lkg"],
+                                           np.int32)),
+                    jnp.asarray(np.asarray(tree["runner"]["shield_radius"],
+                                           np.int32)),
+                    jnp.asarray(np.asarray(tree["runner"]["shield_streak"],
+                                           np.int32)),
+                    jnp.asarray(tree["runner"]["shield_risk"], jnp.float32))
+        sh = x.get("shield")
+        if sh is not None and self.cfgr.shield is not None:
+            from repro.monitoring.metrics import ShieldCounters
+            self._budget_seen = int(sh["budget_seen"])
+            self.cfgr.shield_counters = ShieldCounters.from_dict(
+                sh["counters"])
+            runner = self.cfgr._runner
+            if runner is not None:
+                runner.shield = self.cfgr.shield_counters
         return step

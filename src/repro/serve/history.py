@@ -100,8 +100,13 @@ class EpisodeStore:
     def best_config_for(self, features: dict, *,
                         roles: tuple = ("promote", "canary")) -> Optional[dict]:
         """Highest-reward stored config among the rows whose workload is
-        nearest to ``features`` (same kind, closest log-rate)."""
-        cand = [r for r in self._rows if r["role"] in roles]
+        nearest to ``features`` (same kind, closest log-rate). Rows that
+        breached SLO are never candidates — a breached canary/live row can
+        carry a deceptively high reward (one fast window before the queue
+        explodes), and warm-starting from it would re-canary a config the
+        gate already rejected."""
+        cand = [r for r in self._rows
+                if r["role"] in roles and not r.get("breached")]
         same_kind = [r for r in cand
                      if r["workload"].get("kind") == features.get("kind")]
         if same_kind:

@@ -574,3 +574,51 @@ def test_mesh_epoch_sharded_stays_in_distribution():
     assert env.reconfigs.tolist() == [2 * 3] * n
     stats = env.observe_stats(240.0)
     assert np.isfinite(np.asarray(stats["mean_ms"])).all()
+
+# --------------------------------------------------------------------------
+# §16 shield bitwise pins: off ≡ neutral, radius 0 confines
+# --------------------------------------------------------------------------
+
+def _slo_rewards_and_configs(safe, shield_kw=None, updates=2, n=6):
+    env = _fleet("jax", n)
+    cfgr = _cfgr(env, device_loop="on", reward_mode="slo", slo_ms=5_000.0,
+                 safe=safe, shield_kw=shield_kw)
+    for _ in range(updates):
+        cfgr.run_update()
+    return (np.array([rec.reward for rec in cfgr.history]),
+            [dict(c) for c in env.configs])
+
+
+def test_neutral_shield_replays_shield_off_bitwise():
+    """§16 acceptance: the shield is a pure refinement of the pre-§16
+    program. A shield whose trust region covers the whole ladder and whose
+    risk/budget thresholds can never fire leaves an all-True mask — and
+    masked categorical sampling with the SAME fold-in key under an all-True
+    mask draws the identical action stream, so rewards AND final decoded
+    configs replay the shield-off run bit for bit. (Shield *off* trivially
+    traces the exact pre-§16 program: the mask branch is static python.)"""
+    neutral = dict(trust_radius=64, radius_min=64, radius_max=64,
+                   risk_threshold=2.0, breach_budget=10**6)
+    r_off, c_off = _slo_rewards_and_configs(False)
+    r_neu, c_neu = _slo_rewards_and_configs(True, neutral)
+    assert np.array_equal(r_off, r_neu)
+    assert c_off == c_neu
+
+
+def test_zero_radius_shield_confines_to_lkg():
+    """The opposite extreme: radius 0 pins every lever to its last-known-
+    good bin, and with no clean window able to move LKG past the sampled
+    configs (they never leave it), the fleet's integerised lattice state
+    must finish exactly where it started. (Config DICT values may still be
+    re-decoded onto the bin ladder for touched levers — same bins, decoded
+    representation — so the pin is on the index array, not the dicts.)"""
+    env = _fleet("jax", 4)
+    cfgr = _cfgr(env, device_loop="on", reward_mode="slo", slo_ms=5_000.0,
+                 safe=True, shield_kw=dict(trust_radius=0, radius_min=0,
+                                           radius_max=0))
+    cfgr.run_update()
+    runner = cfgr._runner
+    assert np.array_equal(np.asarray(runner._config_idx),
+                          np.asarray(runner._idx0))
+    # every sampled move was diverted or clamped back onto LKG
+    assert cfgr.shield_counters.clamped_actions > 0

@@ -75,6 +75,88 @@ def test_no_fault_table_is_identity_on_the_grids(n, e, seed):
     assert (np.asarray(s_j) == 1.0).all() and (np.asarray(r_j) == 1.0).all()
 
 
+def _shield_table():
+    from repro.core.discretize import DeviceLeverTable, LeverDiscretiser, LeverSpec
+
+    specs = [LeverSpec("a", "float", 0.0, 10.0),
+             LeverSpec("b", "int", 1.0, 64.0),
+             LeverSpec("c", "log", 1.0, 256.0),
+             LeverSpec("d", "choice", choices=(1, 2, 4, 8)),
+             LeverSpec("e", "bool")]
+    return DeviceLeverTable.from_discretiser(
+        LeverDiscretiser(specs, seed=0))
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 6),
+       radius=st.integers(0, 16))
+@settings(max_examples=60, deadline=None)
+def test_shield_clamp_and_mask_stay_on_the_ladder(seed, n, radius):
+    """§16 safety property: whatever bin the policy samples — even one
+    driven OUTSIDE the ladder — ``shield_clamp`` lands inside both the
+    ladder ([0, n_valid-1]) and the ±radius trust window around LKG, and
+    every action ``shield_mask`` leaves enabled steps to a bin inside
+    that same window. Covers all lever kinds (clip / wrap / toggle)."""
+    table = _shield_table()
+    rng = np.random.default_rng(seed)
+    L = table.n_levers
+    nv = np.asarray(table.n_valid)
+    config_idx = rng.integers(0, nv, size=(n, L))
+    lkg_idx = rng.integers(0, nv, size=(n, L))
+    r = np.full(n, radius)
+    l_idx = rng.integers(0, L, size=n)
+    raw = rng.integers(-3, nv[l_idx] + 3)        # deliberately off-ladder
+    got = table.shield_clamp(raw, lkg_idx[np.arange(n), l_idx], r, l_idx)
+    nv_l = nv[l_idx]
+    lo = np.clip(lkg_idx[np.arange(n), l_idx] - r, 0, nv_l - 1)
+    hi = np.clip(lkg_idx[np.arange(n), l_idx] + r, 0, nv_l - 1)
+    assert ((got >= 0) & (got < nv_l)).all()
+    assert ((got >= lo) & (got <= hi)).all()
+
+    ranked = np.arange(L)
+    mask = table.shield_mask(config_idx, lkg_idx, r, ranked)
+    assert mask.shape == (n, 2 * L)
+    for j in range(L):
+        for d, col in ((1, 2 * j), (-1, 2 * j + 1)):
+            cand = table.step_index(config_idx[:, j], j, d)
+            lo = np.clip(lkg_idx[:, j] - r, 0, nv[j] - 1)
+            hi = np.clip(lkg_idx[:, j] + r, 0, nv[j] - 1)
+            ok = mask[:, col]
+            assert ((cand[ok] >= lo[ok]) & (cand[ok] <= hi[ok])).all()
+            assert ((cand >= 0) & (cand < nv[j])).all()
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 6),
+       steps=st.integers(1, 12))
+@settings(max_examples=40, deadline=None)
+def test_shield_update_respects_the_radius_schedule(seed, n, steps):
+    """The trust-radius recurrence never leaves [radius_min, radius_max],
+    risk stays in [0, 1] for in-range breach fractions, and the budget
+    only ever decrements on breached windows."""
+    from repro.core.discretize import ShieldSpec, shield_update
+
+    spec = ShieldSpec(trust_radius=2, radius_min=1, radius_max=8,
+                      expand_every=2, risk_alpha=0.5, risk_threshold=0.5,
+                      breach_budget=4)
+    rng = np.random.default_rng(seed)
+    lkg = rng.integers(0, 5, size=(n, 3))
+    radius = np.full(n, spec.trust_radius)
+    streak = np.zeros(n, np.int64)
+    risk = np.zeros(n, np.float32)
+    budget = np.full(n, spec.breach_budget)
+    for _ in range(steps):
+        bf = rng.uniform(0.0, 1.0, n).astype(np.float32)
+        bf[rng.uniform(size=n) < 0.5] = 0.0       # mix clean/breached
+        idx = rng.integers(0, 5, size=(n, 3))
+        prev_budget = budget.copy()
+        lkg, radius, streak, risk, budget, b_out = shield_update(
+            bf, lkg, idx, radius, streak, risk, budget, spec)
+        assert ((radius >= spec.radius_min)
+                & (radius <= spec.radius_max)).all()
+        assert ((risk >= 0.0) & (risk <= 1.0)).all()
+        assert (budget == prev_budget - (bf > 0.0)).all()
+        assert (b_out == (budget <= 0)).all()
+
+
 @given(st.lists(st.tuples(st.sampled_from(["straggler", "failure", "shock"]),
                           st.floats(0.0, 1e4, **_pos),
                           st.floats(1.0, 1e3, **_pos)),
